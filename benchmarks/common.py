@@ -1,0 +1,20 @@
+"""Shared benchmark utilities: timing + CSV row emission."""
+
+import time
+
+import numpy as np
+
+
+def time_fn(fn, *args, warmup=1, iters=5, **kw):
+    for _ in range(warmup):
+        fn(*args, **kw)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn(*args, **kw)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)) * 1e6      # µs
+
+
+def row(name: str, us: float, derived: str):
+    print(f"{name},{us:.1f},{derived}")

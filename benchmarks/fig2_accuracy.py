@@ -1,0 +1,26 @@
+"""Paper Fig. 2-left: mean accuracy metric vs compression scaling factor for
+the Tab. II applications (semantic curves with paper-calibrated anchors)."""
+
+import numpy as np
+
+from repro.core import semantics as S
+from .common import row, time_fn
+
+
+def main():
+    z_grid = np.geomspace(0.02, 1.0, 25)
+    us = time_fn(lambda: S.accuracy_table(np.arange(len(S.APPS)), z_grid))
+    for i, app in enumerate(S.APPS):
+        a = S.accuracy(i, z_grid)
+        pts = ";".join(f"{z:.2f}:{v:.3f}"
+                       for z, v in zip(z_grid[::6], a[::6]))
+        row(f"fig2_left/{app.name}", us, f"curve {pts} a(1)={a[-1]:.3f}")
+    # headline anchors
+    row("fig2_left/anchor_coco_all_z1", us,
+        f"mAP={S.accuracy(S.APP_INDEX['coco_all'], 1.0):.3f} (paper 0.50)")
+    row("fig2_left/anchor_coco_all_z0.1", us,
+        f"mAP={S.accuracy(S.APP_INDEX['coco_all'], 0.1):.3f} (paper ~0.25)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Paper Fig. 2-right: end-to-end latency vs (RBG, GPU) allocation at
+10 jobs/s, z=1 — including the two flexibility anchors (6,3) and (10,2)."""
+
+import numpy as np
+
+from repro.core.latency import LatencyParams, latency
+from .common import row, time_fn
+
+
+def main():
+    P = LatencyParams()
+    grid_r = np.arange(1, 16)
+    grid_g = np.arange(1, 21)
+    alloc = np.stack(np.meshgrid(grid_r, grid_g, indexing="ij"),
+                     axis=-1).reshape(-1, 2).astype(float)
+    us = time_fn(lambda: latency(P, 0.8, 10.0, 0.125, 1.0, alloc))
+    lat = latency(P, 0.8, 10.0, 0.125, 1.0, alloc).reshape(15, 20)
+    for rbg in (2, 4, 6, 8, 10, 12):
+        vals = ";".join(f"g{g}:{lat[rbg-1, g-1]:.3f}" for g in (1, 2, 3, 4, 8))
+        row(f"fig2_right/rbg{rbg}", us, vals)
+    a1 = latency(P, 0.8, 10.0, 0.125, 1.0, np.array([6.0, 3.0]))
+    a2 = latency(P, 0.8, 10.0, 0.125, 1.0, np.array([10.0, 2.0]))
+    row("fig2_right/anchor_6rbg_3gpu", us, f"{a1:.3f}s (paper ~0.4)")
+    row("fig2_right/anchor_10rbg_2gpu", us, f"{a2:.3f}s (paper ~0.4)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Paper Fig. 7: Colosseum-style time series — three slices (Bags, Animals,
+Flat), per-UE fps updated every 25 s period, re-slicing at each update, with
+end-to-end latency vs threshold and the chosen RBG/GPU/compression outputs.
+
+Compares SEM-O-RAN vs MinRes-SEM vs FlexRes-N-SEM exactly as Figs. 7(a)-(i):
+  * MinRes-SEM fails to admit "Animals" in the first (high-fps) period —
+    minimum-resource picks exhaust the RBGs (paper: 8+8 RBG > 15).
+  * FlexRes-N-SEM never admits "Animals" (All curve can't reach 0.50 mAP) and
+    over-compresses "Bags" (allocated but mAP-violating).
+"""
+
+import numpy as np
+
+from repro.core import build_instance, scenarios, semantics, solve_greedy
+from repro.core.latency import LatencyParams, latency
+from .common import row, time_fn
+
+PERIODS_FPS = (10.0, 7.0, 5.0, 3.0)       # per-UE fps per 25 s period
+APPS = ("coco_bags", "coco_animals", "cityscapes_flat")
+ALGOS = {"sem-o-ran": dict(semantic=True, flexible=True),
+         "minres-sem": dict(semantic=True, flexible=False),
+         "flexres-n-sem": dict(semantic=False, flexible=True)}
+
+
+def simulate(algo_flags):
+    out = []
+    for fps in PERIODS_FPS:
+        inst = build_instance(scenarios.colosseum_pool(),
+                              scenarios.colosseum_tasks(fps))
+        sol = solve_greedy(inst, **algo_flags)
+        lat_p = LatencyParams()
+        period = []
+        for i, app in enumerate(APPS):
+            if sol.admitted[i]:
+                l = float(latency(lat_p, inst.tasks.bits_per_job[i],
+                                  inst.tasks.jobs_per_sec[i],
+                                  inst.tasks.gpu_time_per_job[i],
+                                  sol.z[i], sol.alloc[i]))
+                a_true = float(semantics.accuracy(inst.tasks.app_idx[i],
+                                                  sol.z[i]))
+                ok = (a_true + 1e-9 >= inst.tasks.min_accuracy[i]
+                      and l <= inst.tasks.max_latency[i] + 1e-9)
+            else:
+                l, a_true, ok = float("nan"), float("nan"), False
+            period.append(dict(app=app, admitted=bool(sol.admitted[i]),
+                               rbg=sol.alloc[i, 0], gpu=sol.alloc[i, 1],
+                               z=sol.z[i], latency=l, acc=a_true, ok=ok))
+        out.append(period)
+    return out
+
+
+def main():
+    us = time_fn(lambda: simulate(ALGOS["sem-o-ran"]), iters=3)
+    for name, flags in ALGOS.items():
+        sim = simulate(flags)
+        for p, (fps, period) in enumerate(zip(PERIODS_FPS, sim)):
+            for t in period:
+                row(f"fig7/{name}/p{p}_fps{fps:g}/{t['app']}", us,
+                    f"admitted={t['admitted']};rbg={t['rbg']:.0f};"
+                    f"gpu={t['gpu']:.0f};z={t['z']:.2f};"
+                    f"lat={t['latency']:.3f};meets={t['ok']}")
+    # headline behaviours from the paper's discussion
+    sem = simulate(ALGOS["sem-o-ran"])
+    minres = simulate(ALGOS["minres-sem"])
+    flex = simulate(ALGOS["flexres-n-sem"])
+    row("fig7/check/minres_drops_animals_p0", us,
+        f"minres={minres[0][1]['admitted']} sem={sem[0][1]['admitted']}")
+    row("fig7/check/flexres_never_admits_animals", us,
+        f"{all(not p[1]['admitted'] for p in flex)}")
+    bags_sem = sem[0][0]; bags_flex = flex[0][0]
+    row("fig7/check/bags_compression", us,
+        f"sem_z={bags_sem['z']:.2f} flex_z={bags_flex['z']:.2f} "
+        f"flex_meets={bags_flex['ok']} sem_meets={bags_sem['ok']}")
+
+
+if __name__ == "__main__":
+    main()

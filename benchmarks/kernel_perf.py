@@ -1,0 +1,44 @@
+"""Pallas kernel micro-benchmarks (interpret mode on CPU — correctness-scale
+timings; structural VMEM/grid accounting is what transfers to TPU)."""
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.kernels.pg import pg as pg_kernel
+from repro.kernels.pg.ref import masked_argmax_ref
+from repro.kernels.resize import ops as resize_ops
+from .common import row, time_fn
+
+
+def main():
+    rng = np.random.default_rng(0)
+    for (t, a) in ((256, 1024), (1024, 4096)):
+        sel = jnp.asarray(rng.standard_normal(a), jnp.float32)
+        lat = jnp.asarray(rng.random((t, a)) < 0.4)
+        cap = jnp.asarray(rng.random(a) < 0.7)
+        alive = jnp.asarray(rng.random(t) < 0.9)
+        us_ref = time_fn(lambda: masked_argmax_ref(sel, lat, cap, alive)[0]
+                         .block_until_ready(), iters=3)
+        row(f"kernel/pg_ref_T{t}_A{a}", us_ref, "jnp oracle")
+        us_k = time_fn(lambda: pg_kernel.masked_argmax(sel, lat, cap, alive)[0]
+                       .block_until_ready(), iters=3)
+        row(f"kernel/pg_pallas_T{t}_A{a}", us_k,
+            f"interpret-mode; hbm_score_matrix_avoided="
+            f"{t*a*4/2**20:.1f}MiB/round")
+    img = jnp.asarray(rng.standard_normal((4, 128, 128, 3)), jnp.float32)
+    us_r = time_fn(lambda: resize_ops.compress_frames(img, 0.25)
+                   .block_until_ready(), iters=3)
+    row("kernel/resize_128_z0.25", us_r, "two MXU matmuls per (b,c) slab")
+
+    from repro.kernels.attn.attn import flash_attention_fwd
+    q = jnp.asarray(rng.standard_normal((1, 256, 4, 64)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 256, 2, 64)), jnp.float32)
+    us_a = time_fn(lambda: flash_attention_fwd(q, k, jnp.copy(k), block_q=128,
+                                               block_k=128)
+                   .block_until_ready(), iters=2)
+    row("kernel/flash_attn_256", us_a,
+        "causal GQA prefill; no (Tq,Tk) score tile in HBM")
+
+
+if __name__ == "__main__":
+    main()

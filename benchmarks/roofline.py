@@ -1,0 +1,38 @@
+"""§Roofline collector: reads the dry-run JSONs and prints the per-(arch ×
+shape × mesh) three-term roofline table (see EXPERIMENTS.md §Roofline)."""
+
+import glob
+import json
+import os
+
+from .common import row
+
+OUT = os.environ.get("DRYRUN_OUT", "experiments/dryrun")
+
+
+def main():
+    files = sorted(glob.glob(os.path.join(OUT, "*.json")))
+    if not files:
+        row("roofline/missing", 0.0, "run scripts/run_dryrun_all.sh first")
+        return
+    for f in files:
+        r = json.load(open(f))
+        name = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
+        if "skipped" in r:
+            row(name, 0.0, f"SKIP {r['skipped'][:60]}")
+            continue
+        if "error" in r:
+            row(name, 0.0, f"ERROR {r['error'][:80]}")
+            continue
+        t = r["roofline"]
+        mem = r["memory"]
+        row(name, r["compile_s"] * 1e6,
+            f"compute={t['compute_s']*1e3:.2f}ms;memory={t['memory_s']*1e3:.2f}ms;"
+            f"collective={t['collective_s']*1e3:.2f}ms;dominant={t['dominant']};"
+            f"useful={t['useful_ratio']:.2f};"
+            f"hbm_gb={(mem['argument_bytes']+mem['temp_bytes'])/2**30:.1f};"
+            f"fits={mem['fits_hbm']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Benchmark harness entry: one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmark contract).
+Run: PYTHONPATH=src python -m benchmarks.run [section ...]
+"""
+
+import sys
+
+from . import (fig2_accuracy, fig2_latency, fig6_numerical, fig7_colosseum,
+               kernel_perf, roofline, solver_perf)
+
+SECTIONS = {
+    "fig2_accuracy": fig2_accuracy.main,     # paper Fig. 2-left
+    "fig2_latency": fig2_latency.main,       # paper Fig. 2-right
+    "fig6": fig6_numerical.main,             # paper Fig. 6(a)(b)
+    "fig7": fig7_colosseum.main,             # paper Fig. 7
+    "solver": solver_perf.main,              # beyond-paper solver scaling
+    "kernels": kernel_perf.main,             # Pallas kernel micro-bench
+    "roofline": roofline.main,               # §Roofline table from dry-run
+}
+
+
+def main() -> None:
+    picks = sys.argv[1:] or list(SECTIONS)
+    print("name,us_per_call,derived")
+    for name in picks:
+        SECTIONS[name]()
+
+
+if __name__ == "__main__":
+    main()

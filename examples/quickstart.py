@@ -1,0 +1,39 @@
+"""Quickstart: solve one SF-ESP instance and inspect the slicing decisions.
+
+Run: PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core import (build_instance, check_solution, run_algorithm,
+                        scenarios)
+
+
+def main():
+    # The paper's numerical setup: 2 resource types (RBG, GPU), tasks spread
+    # over the Tab. II applications, "med" accuracy / "high" latency bounds.
+    pool = scenarios.numerical_pool(2)
+    tasks = scenarios.numerical_tasks(20, acc="med", lat="high", seed=0)
+    inst = build_instance(pool, tasks)
+
+    print(f"{'algorithm':15s} {'allocated':>9s} {'satisfied':>9s} "
+          f"{'objective':>10s}")
+    for name in ("sem-o-ran", "si-edge", "minres-sem", "flexres-n-sem",
+                 "highcomp", "highres"):
+        sol = run_algorithm(name, inst)
+        rep = check_solution(inst, sol)
+        assert rep["capacity_ok"]
+        print(f"{name:15s} {sol.num_allocated:9d} {sol.num_satisfied:9d} "
+              f"{sol.objective:10.2f}")
+
+    sol = run_algorithm("sem-o-ran", inst)
+    print("\nSEM-O-RAN decisions (admitted tasks):")
+    for i in np.nonzero(sol.admitted)[0][:8]:
+        from repro.core import semantics
+        app = semantics.APPS[tasks.app_idx[i]].name
+        print(f"  task {i:2d} {app:20s} z={sol.z[i]:.2f} "
+              f"alloc={dict(zip(pool.names, sol.alloc[i]))}")
+
+
+if __name__ == "__main__":
+    main()

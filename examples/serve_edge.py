@@ -1,0 +1,10 @@
+"""Serve a small model with batched requests behind SEM-O-RAN admission
+(deliverable (b), serving flavor). Wraps launch/serve.py.
+
+Run: PYTHONPATH=src python examples/serve_edge.py
+"""
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main()

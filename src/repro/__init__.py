@@ -1,0 +1,4 @@
+"""repro: SEM-O-RAN — semantic and flexible O-RAN slicing for edge-assisted
+DL, as a production JAX framework (see DESIGN.md)."""
+
+__version__ = "1.0.0"

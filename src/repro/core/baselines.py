@@ -1,0 +1,126 @@
+"""The five comparison baselines of paper Section V-A.
+
+1. **SI-EDGE**      — state of the art [11]: semantics-agnostic ("All" curve),
+                      minimum-resource allocation per task.
+2. **MinRes-SEM**   — semantic z*, but minimum-resource allocation (no Eq. 3).
+3. **FlexRes-N-SEM**— flexible allocation per Eq. (3), agnostic z*.
+4. **HighComp**     — compress every task to 10 % of original size (mAP ≈ 0.25
+                      on COCO), minimum resources; requirement-agnostic.
+5. **HighRes**      — statically allocate 20 % of every resource per task, no
+                      compression; requirement-agnostic.
+
+SEM-O-RAN itself is (semantic=True, flexible=True). The requirement-aware
+baselines 1-3 reuse the greedy skeleton with flags; 4-5 are separate because
+they ignore the accuracy/latency requirements when allocating (their tasks can
+be *allocated but unsatisfied* — exactly the failure mode Fig. 6/7 discusses).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from . import latency as lat_mod
+from . import semantics
+from .greedy import solve_greedy, solve_greedy_jax
+from .sfesp import objective_value
+from .types import ProblemInstance, Solution
+
+__all__ = ["ALGORITHMS", "run_algorithm"]
+
+
+def _sem_o_ran(inst, backend="numpy"):
+    f = solve_greedy_jax if backend == "jax" else solve_greedy
+    return f(inst, semantic=True, flexible=True)
+
+
+def _si_edge(inst, backend="numpy"):
+    f = solve_greedy_jax if backend == "jax" else solve_greedy
+    return f(inst, semantic=False, flexible=False)
+
+
+def _minres_sem(inst, backend="numpy"):
+    f = solve_greedy_jax if backend == "jax" else solve_greedy
+    return f(inst, semantic=True, flexible=False)
+
+
+def _flexres_nsem(inst, backend="numpy"):
+    f = solve_greedy_jax if backend == "jax" else solve_greedy
+    return f(inst, semantic=False, flexible=True)
+
+
+def _fixed_z_solution(inst: ProblemInstance, z_fixed: np.ndarray,
+                      alloc: np.ndarray, admitted: np.ndarray) -> Solution:
+    t = inst.tasks
+    a_true = semantics.accuracy(t.app_idx, z_fixed)
+    l_true = lat_mod.latency(lat_mod.LatencyParams(), t.bits_per_job,
+                             t.jobs_per_sec, t.gpu_time_per_job, z_fixed, alloc)
+    satisfied = admitted & (a_true + 1e-9 >= t.min_accuracy) \
+        & (l_true <= t.max_latency + 1e-9)
+    return Solution(admitted=admitted, alloc=alloc * admitted[:, None],
+                    z=np.where(admitted, z_fixed, 1.0),
+                    objective=objective_value(inst, admitted, alloc),
+                    satisfied=satisfied)
+
+
+def _high_comp(inst: ProblemInstance, backend="numpy") -> Solution:
+    """z = 0.10 for everyone; min-cost allocation meeting *latency only*
+    (requirement-agnostic w.r.t. accuracy); greedy value-density admission."""
+    T = inst.num_tasks
+    t, grid, S, p = inst.tasks, inst.grid, inst.pool.capacity, inst.pool.price
+    z = np.full(T, 0.10)
+    lat = lat_mod.latency(
+        lat_mod.LatencyParams(), t.bits_per_job[:, None],
+        t.jobs_per_sec[:, None], t.gpu_time_per_job[:, None],
+        z[:, None], grid[None])
+    lat_ok = lat <= t.max_latency[:, None]
+    cost = (grid * p).sum(axis=1)
+    admitted = np.zeros(T, bool)
+    alloc = np.zeros((T, inst.m))
+    remaining = S.astype(float).copy()
+    # admit cheapest-first (maximizes count for a requirement-agnostic scheme)
+    best_a = np.where(lat_ok, cost[None, :], np.inf).argmin(axis=1)
+    has = lat_ok.any(axis=1)
+    for tau in np.argsort(np.where(has, cost[best_a], np.inf)):
+        if not has[tau]:
+            continue
+        s = grid[best_a[tau]]
+        if (s <= remaining + 1e-9).all():
+            admitted[tau] = True
+            alloc[tau] = s
+            remaining -= s
+    return _fixed_z_solution(inst, z, alloc, admitted)
+
+
+def _high_res(inst: ProblemInstance, backend="numpy") -> Solution:
+    """Static 20 %-of-capacity slice per task, z = 1, admit in arrival order."""
+    T = inst.num_tasks
+    S = inst.pool.capacity
+    # snap the 20% slice onto the discrete grid (ceil to available levels)
+    want = 0.20 * S
+    slice_ = np.array([
+        lvls[min(np.searchsorted(lvls, w), len(lvls) - 1)]
+        for lvls, w in zip(inst.pool.levels, want)])
+    admitted = np.zeros(T, bool)
+    alloc = np.zeros((T, inst.m))
+    remaining = S.astype(float).copy()
+    for tau in range(T):
+        if (slice_ <= remaining + 1e-9).all():
+            admitted[tau] = True
+            alloc[tau] = slice_
+            remaining -= slice_
+    return _fixed_z_solution(inst, np.ones(T), alloc, admitted)
+
+
+ALGORITHMS = {
+    "sem-o-ran": _sem_o_ran,
+    "si-edge": _si_edge,
+    "minres-sem": _minres_sem,
+    "flexres-n-sem": _flexres_nsem,
+    "highcomp": _high_comp,
+    "highres": _high_res,
+}
+
+
+def run_algorithm(name: str, inst: ProblemInstance, backend: str = "numpy"
+                  ) -> Solution:
+    return ALGORITHMS[name](inst, backend=backend)

@@ -1,0 +1,243 @@
+"""Greedy SF-ESP solver — paper Algorithm 1 (primal effective gradient).
+
+Two interchangeable backends:
+
+* :func:`solve_greedy` — readable numpy reference, line-for-line close to
+  Alg. 1. Used as oracle by tests and by the small-scale benchmarks.
+* :func:`solve_greedy_jax` — fully jittable ``lax.while_loop`` implementation
+  that runs the admission loop on device. Its inner hot op (feasibility +
+  primal-gradient + per-task masked argmax over the allocation grid) can be
+  served by the Pallas kernel in ``repro.kernels.pg`` (``inner="pallas"``).
+
+Both support the four (semantic × flexible) quadrants so the paper's SI-EDGE /
+MinRes-SEM / FlexRes-N-SEM baselines are the same code path with flags — the
+paper's framing is that SEM-O-RAN = semantics + flexibility on top of the same
+greedy skeleton.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from . import semantics
+from .sfesp import objective_value
+from .types import ProblemInstance, Solution
+
+__all__ = ["primal_gradient", "solve_greedy", "solve_greedy_jax", "solve",
+           "lexicographic_cost"]
+
+_EPS_DEN = 1e-9
+
+
+def lexicographic_cost(grid, xp=np):
+    """MinRes-* allocation preference: minimize the LAST resource type first
+    (compute), then the previous, ... matching the paper's observed behaviour
+    (Fig. 7(e): MinRes-SEM requests 8 RBG + 1 GPU where SEM-O-RAN picks
+    6 RBG + 5 GPU — compute is treated as the precious resource and radio
+    compensates). Encoded as Σ_k s_k · W^k with a large base W."""
+    grid = xp.asarray(grid)
+    m = grid.shape[-1]
+    weights = xp.asarray([float(1000 ** k) for k in range(m)])
+    return (grid * weights).sum(axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Primal effective gradient (paper lines 21-25, after Toyoda 1975)
+# ---------------------------------------------------------------------------
+
+def primal_gradient(grid, price, capacity, occupied, xp=np):
+    """PG(s) for every allocation s in ``grid`` (A, m) → (A,).
+
+    Line 23 (no resources occupied yet — penalize usage uniformly):
+        PG = Σ_k p_k (S_k - s_k) · m^{1/2} / Σ_k (s_k / S_k)
+    Line 25 (penalize according to occupancy o):
+        PG = Σ_k p_k (S_k - s_k) · ‖o‖₂ / Σ_k (s_k·o_k / S_k)
+
+    The occupied-branch denominator is clamped to a tiny ε: an allocation that
+    touches only currently-unused resources has denominator 0 — i.e. it is
+    maximally attractive (Toyoda's balancing intent); the clamp keeps it finite
+    while preserving the ordering by value.
+    """
+    grid = xp.asarray(grid)
+    m = grid.shape[-1]
+    value = (price * (capacity - grid)).sum(axis=-1)          # Σ p_k (S_k-s_k)
+    norm_use = (grid / capacity).sum(axis=-1)                 # Σ s_k/S_k
+    pg_uniform = value * xp.sqrt(float(m)) / xp.maximum(norm_use, _EPS_DEN)
+    o_norm = xp.sqrt((occupied * occupied).sum())
+    weighted = (grid * (occupied / capacity)).sum(axis=-1)    # Σ s_k o_k / S_k
+    pg_occ = value * o_norm / xp.maximum(weighted, _EPS_DEN)
+    return xp.where((occupied > 0).any(), pg_occ, pg_uniform)
+
+
+# ---------------------------------------------------------------------------
+# numpy reference (Alg. 1 structure)
+# ---------------------------------------------------------------------------
+
+def _select_tables(inst: ProblemInstance, semantic: bool):
+    if semantic:
+        return inst.lat, inst.z_star_idx
+    return inst.lat_agnostic, inst.z_star_idx_agnostic
+
+
+def solve_greedy(inst: ProblemInstance, *, semantic: bool = True,
+                 flexible: bool = True) -> Solution:
+    """Numpy reference of Alg. 1.
+
+    ``flexible=False`` replaces the PG-maximizing allocation of Eq. (3) with
+    the minimum-cost feasible allocation (MinRes-* behaviour); task priority is
+    still the gradient evaluated at that fixed allocation.
+    """
+    lat, z_idx = _select_tables(inst, semantic)
+    T, A = lat.shape
+    S, p = inst.pool.capacity, inst.pool.price
+    grid = inst.grid
+    max_lat = inst.tasks.max_latency
+
+    lat_ok = lat <= max_lat[:, None]                       # (T, A) static
+    admitted = np.zeros(T, bool)
+    alloc_idx = np.full(T, -1, np.int64)
+    # line 1/7: candidates = tasks whose accuracy bound is reachable (Eq. 2)
+    alive = (z_idx >= 0) & lat_ok.any(axis=1)
+    occupied = np.zeros_like(S)
+    cost = lexicographic_cost(grid)                        # for MinRes mode
+
+    while alive.any():                                      # lines 8-19
+        remaining = S - occupied
+        cap_ok = (grid <= remaining + 1e-9).all(axis=1)     # s ≤ S - o
+        pg = primal_gradient(grid, p, S, occupied)          # (A,)
+        feas = lat_ok & cap_ok[None, :] & alive[:, None]
+        has = feas.any(axis=1)
+        alive &= has                                        # line 15: discard
+        if not alive.any():
+            break
+        if flexible:                                        # Eq. (3)
+            score = np.where(feas, pg[None, :], -np.inf)
+        else:                                               # min-cost alloc
+            score = np.where(feas, -cost[None, :], -np.inf)
+        best_a = score.argmax(axis=1)                       # per-task s*
+        G = pg[best_a]                                      # task gradient
+        G = np.where(alive, G, -np.inf)
+        tau = int(G.argmax())                               # line 16
+        admitted[tau] = True                                # line 17
+        alloc_idx[tau] = best_a[tau]
+        occupied = occupied + grid[best_a[tau]]
+        alive[tau] = False                                  # line 18
+
+    return _pack_solution(inst, semantic, admitted, alloc_idx, z_idx)
+
+
+def _pack_solution(inst, semantic, admitted, alloc_idx, z_idx) -> Solution:
+    grid = inst.grid
+    T = inst.num_tasks
+    alloc = np.zeros((T, inst.m))
+    alloc[admitted] = grid[alloc_idx[admitted]]
+    z = np.where(admitted & (z_idx >= 0),
+                 inst.z_grid[np.clip(z_idx, 0, None)], 1.0)
+    # true satisfaction: re-check accuracy on the task's OWN curve (agnostic
+    # algorithms may have picked a z that the real class cannot tolerate).
+    a_true = semantics.accuracy(inst.tasks.app_idx, z)
+    lat_tbl = inst.lat if semantic else inst.lat_agnostic
+    l_val = np.where(admitted & (alloc_idx >= 0),
+                     lat_tbl[np.arange(T), np.clip(alloc_idx, 0, None)], np.inf)
+    satisfied = admitted & (a_true + 1e-9 >= inst.tasks.min_accuracy) \
+        & (l_val <= inst.tasks.max_latency + 1e-9)
+    return Solution(
+        admitted=admitted, alloc=alloc, z=z,
+        objective=objective_value(inst, admitted, alloc),
+        satisfied=satisfied,
+    )
+
+
+# ---------------------------------------------------------------------------
+# JAX backend (jit + lax.while_loop; optional Pallas inner step)
+# ---------------------------------------------------------------------------
+
+def _inner_jnp(grid, price, cap, occupied, remaining, lat_ok, alive, cost,
+               flexible: bool):
+    """One admission round: per-task best allocation + gradient.
+
+    Returns (G (T,), best_a (T,), has_feasible (T,)).
+    """
+    cap_ok = (grid <= remaining[None, :] + 1e-9).all(axis=1)      # (A,)
+    pg = primal_gradient(grid, price, cap, occupied, xp=jnp)      # (A,)
+    feas = lat_ok & cap_ok[None, :] & alive[:, None]              # (T, A)
+    sel = pg if flexible else -cost
+    score = jnp.where(feas, sel[None, :], -jnp.inf)
+    best_a = score.argmax(axis=1)
+    has = feas.any(axis=1)
+    G = jnp.where(has, pg[best_a], -jnp.inf)
+    return G, best_a, has
+
+
+@functools.partial(jax.jit, static_argnames=("flexible", "inner"))
+def _greedy_jax(lat_ok, grid, price, cap, alive0, cost,
+                flexible: bool = True, inner: str = "jnp"):
+    T = lat_ok.shape[0]
+    m = grid.shape[1]
+
+    if inner == "pallas":
+        from repro.kernels.pg import ops as pg_ops
+        inner_fn = functools.partial(pg_ops.pg_argmax, flexible=flexible)
+    else:
+        inner_fn = None
+
+    def body(state):
+        admitted, alloc_idx, occupied, alive = state
+        remaining = cap - occupied
+        if inner_fn is not None:
+            G, best_a, has = inner_fn(grid, price, cap, occupied, remaining,
+                                      lat_ok, alive, cost)
+        else:
+            G, best_a, has = _inner_jnp(grid, price, cap, occupied, remaining,
+                                        lat_ok, alive, cost, flexible)
+        alive = alive & has                                  # drop infeasible
+        G = jnp.where(alive, G, -jnp.inf)
+        tau = jnp.argmax(G)
+        any_feas = jnp.any(alive)
+        admit_now = any_feas
+        admitted = admitted.at[tau].set(admitted[tau] | admit_now)
+        alloc_idx = jnp.where(
+            admit_now, alloc_idx.at[tau].set(best_a[tau]), alloc_idx)
+        occupied = occupied + jnp.where(admit_now, grid[best_a[tau]], 0.0)
+        alive = alive.at[tau].set(False)
+        return admitted, alloc_idx, occupied, alive
+
+    def cond(state):
+        *_, alive = state
+        return jnp.any(alive)
+
+    init = (jnp.zeros(T, bool), jnp.full(T, -1, jnp.int32),
+            jnp.zeros(m, grid.dtype), alive0)
+    admitted, alloc_idx, occupied, _ = jax.lax.while_loop(cond, body, init)
+    return admitted, alloc_idx, occupied
+
+
+def solve_greedy_jax(inst: ProblemInstance, *, semantic: bool = True,
+                     flexible: bool = True, inner: str = "jnp") -> Solution:
+    """JAX (jit) backend; bitwise-equivalent decisions to :func:`solve_greedy`
+    up to argmax tie-breaking (both use first-max)."""
+    lat, z_idx = _select_tables(inst, semantic)
+    lat_ok = jnp.asarray(lat <= inst.tasks.max_latency[:, None])
+    alive0 = jnp.asarray((z_idx >= 0) & np.asarray(lat_ok).any(axis=1))
+    grid = jnp.asarray(inst.grid)
+    cost = jnp.asarray(lexicographic_cost(inst.grid))
+    admitted, alloc_idx, _ = _greedy_jax(
+        lat_ok, grid, jnp.asarray(inst.pool.price),
+        jnp.asarray(inst.pool.capacity), alive0, cost,
+        flexible=flexible, inner=inner)
+    return _pack_solution(inst, semantic, np.asarray(admitted),
+                          np.asarray(alloc_idx, np.int64), z_idx)
+
+
+def solve(inst: ProblemInstance, *, semantic: bool = True, flexible: bool = True,
+          backend: str = "numpy", inner: str = "jnp") -> Solution:
+    """Front door used by serving admission + benchmarks."""
+    if backend == "numpy":
+        return solve_greedy(inst, semantic=semantic, flexible=flexible)
+    return solve_greedy_jax(inst, semantic=semantic, flexible=flexible,
+                            inner=inner)

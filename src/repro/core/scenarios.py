@@ -1,0 +1,110 @@
+"""Scenario generators reproducing the paper's evaluation setups (Section V).
+
+* :func:`numerical_pool` / :func:`numerical_tasks` — Fig. 6 numerical analysis:
+  2 or 4 edge/network resource types; accuracy thresholds {low, med, high} =
+  {0.20, 0.35, 0.55} mAP (detection) / {0.35, 0.50, 0.70} mIoU (segmentation);
+  latency thresholds {low, high} = {0.2 s, 0.7 s}; tasks equally distributed
+  over the Tab. II applications.
+* :func:`colosseum_pool` / :func:`colosseum_tasks` — Section V-C prototype:
+  15 RBGs available for slicing (17 total, 2 reserved for iperf traffic),
+  20 GPUs; three slices (Bags, Animals, Flat) with time-varying fps.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from . import semantics
+from .types import ResourcePool, TaskSet
+
+__all__ = [
+    "ACC_THRESHOLDS", "LAT_THRESHOLDS",
+    "numerical_pool", "numerical_tasks", "colosseum_pool", "colosseum_tasks",
+]
+
+# paper Section V-B threshold definitions
+ACC_THRESHOLDS = {
+    "low": {"detection": 0.20, "segmentation": 0.35},
+    "med": {"detection": 0.35, "segmentation": 0.50},
+    "high": {"detection": 0.55, "segmentation": 0.70},
+}
+LAT_THRESHOLDS = {"low": 0.2, "high": 0.7}
+
+# per-service stream characteristics (Section V-A: COCO images ~100 KB;
+# YOLOX ≈ 0.125 s on one reference GPU — the Fig. 2-right calibration point;
+# BiSeNetV2 is a real-time segmenter, ~3x lighter).
+_BITS_PER_JOB = {"detection": 0.8, "segmentation": 0.8}       # Mbit
+_GPU_TIME = {"detection": 0.125, "segmentation": 0.042}       # s/job @ z=1
+
+
+def numerical_pool(m: int = 2) -> ResourcePool:
+    """2-resource (RBG, GPU) or 4-resource (RBG, GPU, CPU, RAM) pool."""
+    if m == 2:
+        return ResourcePool(
+            names=("rbg", "gpu"),
+            capacity=np.array([15.0, 20.0]),
+            price=np.array([1.0 / 15.0, 1.0 / 20.0]),   # normalized prices
+            levels=(np.arange(1.0, 16.0), np.arange(1.0, 21.0)),
+        )
+    if m == 4:
+        return ResourcePool(
+            names=("rbg", "gpu", "cpu", "ram"),
+            capacity=np.array([15.0, 20.0, 32.0, 128.0]),
+            price=np.array([1 / 15.0, 1 / 20.0, 1 / 32.0, 1 / 128.0]),
+            levels=(np.arange(1.0, 16.0, 2.0),           # coarser grid keeps
+                    np.arange(1.0, 21.0, 2.0),           # A = |grid| tractable
+                    np.array([1.0, 2.0, 4.0, 8.0]),
+                    np.array([4.0, 8.0, 16.0, 32.0])),
+        )
+    raise ValueError(f"unsupported m={m}")
+
+
+def numerical_tasks(n_tasks: int, acc: str, lat: str,
+                    seed: int = 0, jobs_per_sec: float = 5.0) -> TaskSet:
+    """Tasks equally distributed across the 10 Tab. II applications."""
+    rng = np.random.default_rng(seed)
+    app_idx = np.arange(n_tasks) % len(semantics.APPS)
+    rng.shuffle(app_idx)
+    services = np.array([semantics.APPS[i].service for i in app_idx])
+    min_acc = np.array([ACC_THRESHOLDS[acc][s] for s in services])
+    max_lat = np.full(n_tasks, LAT_THRESHOLDS[lat])
+    bits = np.array([_BITS_PER_JOB[s] for s in services])
+    gpu_t = np.array([_GPU_TIME[s] for s in services])
+    return TaskSet(
+        app_idx=app_idx, min_accuracy=min_acc, max_latency=max_lat,
+        bits_per_job=bits, jobs_per_sec=np.full(n_tasks, jobs_per_sec),
+        gpu_time_per_job=gpu_t, n_ues=np.ones(n_tasks, np.int64),
+    )
+
+
+def colosseum_pool() -> ResourcePool:
+    """Section V-C: 15 sliceable RBGs, 20 Tesla-class GPUs."""
+    return ResourcePool(
+        names=("rbg", "gpu"),
+        capacity=np.array([15.0, 20.0]),
+        price=np.array([1.0 / 15.0, 1.0 / 20.0]),
+        levels=(np.arange(1.0, 16.0), np.arange(1.0, 21.0)),
+    )
+
+
+def colosseum_tasks(fps: float, min_acc: float = 0.30,
+                    max_lat: float = 0.7) -> TaskSet:
+    """The three Fig. 7 slices (Bags, Animals, Flat) at a given frame rate.
+
+    Fig. 7 varies the per-UE fps every 25 s period while keeping the accuracy
+    and latency requirements constant.
+    """
+    apps = ["coco_bags", "coco_animals", "cityscapes_flat"]
+    app_idx = np.array([semantics.APP_INDEX[a] for a in apps])
+    services = np.array([semantics.APPS[i].service for i in app_idx])
+    # Animals' Fig. 7(f) threshold is 0.50 mAP; Bags/Flat use the base bound.
+    min_accs = np.array([min_acc, 0.50, min_acc])
+    return TaskSet(
+        app_idx=app_idx,
+        min_accuracy=min_accs,
+        max_latency=np.full(3, max_lat),
+        bits_per_job=np.array([_BITS_PER_JOB[s] for s in services]),
+        jobs_per_sec=np.full(3, float(fps)),
+        gpu_time_per_job=np.array([_GPU_TIME[s] for s in services]),
+        n_ues=np.ones(3, np.int64),
+    )

@@ -1,0 +1,186 @@
+"""Semantic accuracy curves a_τ(z) — the paper's first key concept.
+
+Different target-class sets tolerate different compression levels (paper Fig. 1
+and Fig. 2-left). The paper treats ``a_τ(z)`` as *given problem input*, built by
+the SDLA rApp from representative datasets. We model each application's
+accuracy-vs-compression curve with a saturating Hill function
+
+    a(z) = M · z^γ / (z^γ + H)          (M = asymptotic metric, H = h^γ)
+
+whose three parameters are calibrated to every operating point the paper
+reports. ``z`` is the bitrate scaling factor of Section IV-A; the metric is mAP
+for the COCO/YOLOX detection applications and mIoU for the Cityscapes/BiSeNetV2
+segmentation applications (Tab. II).
+
+Calibration anchors (all from the paper text):
+  * COCO All:        a(1.0) = 0.50 (YOLOX on full COCO),  a(0.10) ≈ 0.25
+                     (HighComp baseline: 10 % size → mAP ≈ 0.25), sup < 0.55
+                     (Fig. 6 "high" threshold unreachable for All).
+  * COCO Bags:       a(0.28) ≈ 0.30 (Fig. 7: Bags compressed to 28 % meets the
+                     constraint; the agnostic All curve would pick 14 %, which
+                     the true Bags curve does NOT meet).
+  * COCO Animals:    reaches 0.50 on its own curve (Fig. 7(f)), which All never
+                     does.
+  * Cityscapes All:  meets 0.50 mIoU at z ≈ 0.18 (Fig. 7(i) agnostic pick),
+                     sup < 0.70 ("high" mIoU unreachable for All).
+  * Cityscapes Flat: meets 0.50 mIoU at z ≈ 0.08 (Fig. 7(i) semantic pick).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = [
+    "AppClass",
+    "APPS",
+    "APP_INDEX",
+    "DETECTION_APPS",
+    "SEGMENTATION_APPS",
+    "accuracy",
+    "accuracy_table",
+    "min_z_for_accuracy",
+    "agnostic_app",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class AppClass:
+    """One row of paper Tab. II plus its calibrated curve parameters."""
+
+    name: str
+    service: str          # "detection" (mAP) | "segmentation" (mIoU)
+    target_classes: tuple[str, ...]
+    asymptote: float      # M — metric as z → ∞ (strict upper bound of a(z))
+    gamma: float          # γ — curve steepness
+    hill: float           # H = h^γ — half-saturation constant
+
+
+def _hill(M: float, anchor_z: float, anchor_a: float, gamma: float) -> AppClass | tuple:
+    """Solve H from one (z, a) anchor given M and γ: a = M x/(x+H), x=z^γ."""
+    x = anchor_z ** gamma
+    H = x * (M - anchor_a) / anchor_a
+    return M, gamma, H
+
+
+# --- COCO / YOLOX multi-object detection applications (Tab. II) -------------
+# γ for COCO-All solved from the two anchors a(1)=0.50, a(0.1)=0.25 with
+# M=0.55:  H=0.1 from the first;  γ = log(H·0.25/(0.55-0.25)·...)  → 1.079.
+_COCO_ALL = AppClass(
+    "coco_all", "detection",
+    ("<all 80 COCO classes>",),
+    # a(1) = 0.4975 — strictly below the 0.50 bound ("a mAP of 0.5 can never
+    # be reached by All", Fig. 7(f)) while matching the ≈0.50/≈0.25 anchors.
+    asymptote=0.55, gamma=1.079, hill=0.1055,
+)
+_COCO_URBAN = AppClass(
+    "coco_urban", "detection",
+    ("bicycle", "car", "motorcycle", "bus", "truck", "traffic light",
+     "stop sign", "person"),
+    # bicycle-limited: slightly easier than All at mid z, sup just below 0.58
+    *_hill(M=0.58, anchor_z=1.0, anchor_a=0.52, gamma=1.05),
+)
+_COCO_BAGS = AppClass(
+    "coco_bags", "detection",
+    ("handbag", "backpack", "suitcase"),
+    # small objects — *harder* than All: a(0.28)=0.30, a(0.14)≈0.19 < 0.30.
+    *_hill(M=0.48, anchor_z=0.28, anchor_a=0.30, gamma=1.30),
+)
+_COCO_ANIMALS = AppClass(
+    "coco_animals", "detection",
+    ("bird", "cat", "dog", "horse", "sheep", "cow", "elephant", "bear",
+     "zebra", "giraffe"),
+    # large distinctive objects: reaches 0.50 at z ≈ 0.30, a(1) ≈ 0.62.
+    *_hill(M=0.68, anchor_z=0.30, anchor_a=0.50, gamma=1.10),
+)
+_COCO_PERSON = AppClass(
+    "coco_person", "detection",
+    ("person",),
+    # the easiest detection app: meets the 0.55 "high" bound at z ≈ 0.25.
+    *_hill(M=0.70, anchor_z=0.25, anchor_a=0.55, gamma=1.10),
+)
+
+# --- Cityscapes / BiSeNetV2 segmentation applications (Tab. II) -------------
+_CITY_ALL = AppClass(
+    "cityscapes_all", "segmentation",
+    ("<all 19 Cityscapes eval classes>",),
+    # anchors: a(1)=0.65 (≈BiSeNetV2 val mIoU under stream re-encode),
+    # a(0.18)=0.50 (Fig. 7(i) agnostic pick), sup < 0.70.
+    asymptote=0.69, gamma=1.062, hill=0.0615,
+)
+_CITY_VEHICLES = AppClass(
+    "cityscapes_vehicles", "segmentation",
+    ("car", "truck", "bus", "train", "motorcycle", "bicycle"),
+    *_hill(M=0.80, anchor_z=0.55, anchor_a=0.70, gamma=1.10),
+)
+_CITY_OBJECTS = AppClass(
+    "cityscapes_objects", "segmentation",
+    ("pole", "traffic light", "traffic sign"),
+    # thin structures — hardest: sup < 0.60.
+    *_hill(M=0.60, anchor_z=1.0, anchor_a=0.55, gamma=1.35),
+)
+_CITY_FLAT = AppClass(
+    "cityscapes_flat", "segmentation",
+    ("road", "sidewalk"),
+    # huge homogeneous regions — easiest: meets 0.50 at z ≈ 0.08.
+    *_hill(M=0.85, anchor_z=0.08, anchor_a=0.50, gamma=1.168),
+)
+_CITY_PERSON = AppClass(
+    "cityscapes_person", "segmentation",
+    ("person",),
+    *_hill(M=0.74, anchor_z=1.0, anchor_a=0.68, gamma=1.15),
+)
+
+DETECTION_APPS = (_COCO_ALL, _COCO_URBAN, _COCO_BAGS, _COCO_ANIMALS, _COCO_PERSON)
+SEGMENTATION_APPS = (_CITY_ALL, _CITY_VEHICLES, _CITY_OBJECTS, _CITY_FLAT,
+                     _CITY_PERSON)
+APPS: tuple[AppClass, ...] = DETECTION_APPS + SEGMENTATION_APPS
+APP_INDEX: dict[str, int] = {a.name: i for i, a in enumerate(APPS)}
+
+# parameter matrix for vectorized evaluation: (n_apps, 3) = [M, γ, H]
+_PARAMS = np.array([[a.asymptote, a.gamma, a.hill] for a in APPS])
+
+
+def accuracy(app_idx, z):
+    """a(z) for application index/array ``app_idx`` at compression ``z``.
+
+    Vectorized over both arguments (broadcast); pure numpy so it can also be
+    traced by JAX via jnp dispatch on the caller side when needed.
+    """
+    app_idx = np.asarray(app_idx)
+    z = np.asarray(z, np.float64)
+    M, g, H = (_PARAMS[app_idx, i] for i in range(3))
+    x = np.power(np.clip(z, 1e-9, 1.0), g)
+    return M * x / (x + H)
+
+
+def accuracy_table(app_idx: np.ndarray, z_grid: np.ndarray) -> np.ndarray:
+    """(T, Z) table of a_τ(z) for each task's app over the z grid."""
+    return accuracy(np.asarray(app_idx)[:, None], np.asarray(z_grid)[None, :])
+
+
+def min_z_for_accuracy(app_idx: np.ndarray, min_acc: np.ndarray,
+                       z_grid: np.ndarray) -> np.ndarray:
+    """Eq. (2): z*_τ = min z s.t. a_τ(z) ≥ A_c, as an index into z_grid.
+
+    Returns -1 where the bound is unreachable for any z ≤ 1 (the task is pruned
+    from the candidate set, Alg. 1 line 7). Relies on a(z) being monotone
+    increasing in z (Hill curves are).
+    """
+    table = accuracy_table(app_idx, z_grid)          # (T, Z)
+    ok = table >= np.asarray(min_acc)[:, None]
+    any_ok = ok.any(axis=1)
+    first = np.argmax(ok, axis=1)                    # first True (z ascending)
+    return np.where(any_ok, first, -1)
+
+
+def agnostic_app(app_idx: np.ndarray) -> np.ndarray:
+    """Map each app to the dataset-wide 'All' app (what SI-EDGE assumes).
+
+    SI-EDGE "considers all the tasks as belonging to the 'All' application"
+    (Section V-B): detection apps → coco_all, segmentation → cityscapes_all.
+    """
+    app_idx = np.asarray(app_idx)
+    is_seg = app_idx >= len(DETECTION_APPS)
+    return np.where(is_seg, APP_INDEX["cityscapes_all"], APP_INDEX["coco_all"])

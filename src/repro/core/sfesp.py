@@ -1,0 +1,97 @@
+"""SF-ESP instance construction + feasibility/objective checking.
+
+Builds the fully discretized :class:`~repro.core.types.ProblemInstance` from a
+resource pool and a task set, by (i) solving Eq. (2) for z*_τ on both the
+semantic and the agnostic accuracy curve, and (ii) tabulating l_τ(z*, s) over
+the enumerated allocation grid. Also hosts the shared solution validator used
+by every solver, the property tests, and the serving admission controller.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from . import latency as lat_mod
+from . import semantics
+from .types import ProblemInstance, ResourcePool, Solution, TaskSet, make_allocation_grid
+
+__all__ = ["build_instance", "check_solution", "objective_value", "default_z_grid"]
+
+
+def default_z_grid(n: int = 64) -> np.ndarray:
+    """Log-spaced compression factors in (0.02, 1] — covers the paper's range
+    (Fig. 7 picks factors down to 0.04)."""
+    return np.geomspace(0.02, 1.0, n)
+
+
+def build_instance(pool: ResourcePool, tasks: TaskSet,
+                   lat_params: lat_mod.LatencyParams | None = None,
+                   z_grid: np.ndarray | None = None) -> ProblemInstance:
+    lat_params = lat_params or lat_mod.LatencyParams()
+    z_grid = default_z_grid() if z_grid is None else np.asarray(z_grid)
+    grid = make_allocation_grid(pool.levels)
+
+    acc = semantics.accuracy_table(tasks.app_idx, z_grid)
+    agn_idx = semantics.agnostic_app(tasks.app_idx)
+    acc_agn = semantics.accuracy_table(agn_idx, z_grid)
+
+    zi = semantics.min_z_for_accuracy(tasks.app_idx, tasks.min_accuracy, z_grid)
+    zi_agn = semantics.min_z_for_accuracy(agn_idx, tasks.min_accuracy, z_grid)
+
+    # latency tables at the chosen z* (pruned tasks get z=1 rows; they are
+    # excluded by z_star_idx == -1 anyway).
+    z_sem = np.where(zi >= 0, z_grid[np.clip(zi, 0, None)], 1.0)
+    z_agn = np.where(zi_agn >= 0, z_grid[np.clip(zi_agn, 0, None)], 1.0)
+    lat = lat_mod.latency_table(lat_params, tasks, z_sem, grid)
+    lat_agn = lat_mod.latency_table(lat_params, tasks, z_agn, grid)
+
+    return ProblemInstance(
+        pool=pool, tasks=tasks, z_grid=z_grid,
+        acc=acc, acc_agnostic=acc_agn, grid=grid,
+        lat=lat, lat_agnostic=lat_agn,
+        z_star_idx=zi, z_star_idx_agnostic=zi_agn,
+    )
+
+
+def objective_value(inst: ProblemInstance, admitted: np.ndarray,
+                    alloc: np.ndarray) -> float:
+    """Paper Eq. (1a): Σ_τ Σ_k p_k (S_k - s_τk) x_τ."""
+    p, S = inst.pool.price, inst.pool.capacity
+    per_task = (p[None, :] * (S[None, :] - alloc)).sum(axis=1)
+    return float((per_task * admitted).sum())
+
+
+def check_solution(inst: ProblemInstance, sol: Solution,
+                   lat_params: lat_mod.LatencyParams | None = None,
+                   atol: float = 1e-9) -> dict:
+    """Independent re-validation of a solution against constraints (1b)-(1f).
+
+    Returns a report dict; ``report["valid"]`` means capacity is respected and
+    every *admitted* task actually meets its accuracy and latency bounds when
+    re-evaluated from first principles (not from the solver's own tables).
+    """
+    lat_params = lat_params or lat_mod.LatencyParams()
+    t = inst.tasks
+    x = sol.admitted.astype(bool)
+
+    used = (sol.alloc * x[:, None]).sum(axis=0)
+    cap_ok = bool((used <= inst.pool.capacity + atol).all())
+
+    a = semantics.accuracy(t.app_idx, sol.z)
+    acc_ok = a + atol >= t.min_accuracy
+
+    l = lat_mod.latency(lat_params, t.bits_per_job, t.jobs_per_sec,
+                        t.gpu_time_per_job, sol.z, sol.alloc)
+    lat_ok = l <= t.max_latency + atol
+
+    admitted_ok = (~x) | (acc_ok & lat_ok)
+    return {
+        "valid": cap_ok and bool(admitted_ok.all()),
+        "capacity_ok": cap_ok,
+        "used": used,
+        "accuracy_ok": acc_ok,
+        "latency_ok": lat_ok,
+        "latency": l,
+        "accuracy": a,
+        "objective": objective_value(inst, x, sol.alloc),
+    }

@@ -1,0 +1,161 @@
+"""Core data types for the Semantic Flexible Edge Slicing Problem (SF-ESP).
+
+The SF-ESP (paper Eq. 1a-1f) decides, for a set of DL tasks ``τ = (c, d, t)``:
+
+* admission            ``x_τ ∈ {0, 1}``
+* compression factor   ``z_τ ∈ (0, 1]``   (bitrate scaling of the input stream)
+* slice allocation     ``s_τ ∈ R+^m``     (one entry per edge resource type)
+
+subject to capacity (1b), accuracy (1d) and latency (1e) constraints, maximizing
+``Σ_τ Σ_k p_k (S_k - s_τk) x_τ`` (1a).
+
+Everything downstream (greedy solver, baselines, exact solver, benchmarks,
+serving admission) consumes the array-of-struct :class:`ProblemInstance` built
+here, so the solvers stay pure-JAX-friendly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+__all__ = [
+    "ResourcePool",
+    "TaskSet",
+    "ProblemInstance",
+    "Solution",
+    "make_allocation_grid",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ResourcePool:
+    """The ``m`` edge resource types of the system model (Section IV-A).
+
+    Attributes:
+      names: human-readable resource names, e.g. ("rbg", "gpu").
+      capacity: ``S_k`` — total units of each type. Shape (m,).
+      price: ``p_k`` — cost coefficient of each type. Shape (m,).
+      levels: per-resource list of allocatable discrete amounts (the paper
+        enumerates the discrete solution space, Section IV-C). Each entry is a
+        1-D ascending array of allowed per-task allocations (> 0).
+    """
+
+    names: tuple[str, ...]
+    capacity: np.ndarray
+    price: np.ndarray
+    levels: tuple[np.ndarray, ...]
+
+    def __post_init__(self):
+        object.__setattr__(self, "capacity", np.asarray(self.capacity, np.float64))
+        object.__setattr__(self, "price", np.asarray(self.price, np.float64))
+        assert self.capacity.shape == self.price.shape == (len(self.names),)
+        assert len(self.levels) == len(self.names)
+
+    @property
+    def m(self) -> int:
+        return len(self.names)
+
+
+@dataclasses.dataclass(frozen=True)
+class TaskSet:
+    """Array-of-struct description of all submitted tasks ``T``.
+
+    Every field has leading dimension T. ``app_idx`` indexes into the semantic
+    application registry (core.semantics) used to evaluate ``a_τ(z)``.
+    """
+
+    app_idx: np.ndarray        # (T,) int — application class of each task
+    min_accuracy: np.ndarray   # (T,) float — A_c
+    max_latency: np.ndarray    # (T,) float — L_c (seconds)
+    bits_per_job: np.ndarray   # (T,) float — uncompressed job size b_τ (Mbit)
+    jobs_per_sec: np.ndarray   # (T,) float — per-task job arrival rate λ
+    gpu_time_per_job: np.ndarray  # (T,) float — seconds on one reference GPU, z=1
+    n_ues: np.ndarray          # (T,) int — UEs multiplexed in the slice
+
+    def __post_init__(self):
+        t = len(self.app_idx)
+        for f in dataclasses.fields(self):
+            v = getattr(self, f.name)
+            object.__setattr__(self, f.name, np.asarray(v))
+            assert getattr(self, f.name).shape == (t,), f.name
+
+    @property
+    def num_tasks(self) -> int:
+        return len(self.app_idx)
+
+
+def make_allocation_grid(levels: Sequence[np.ndarray]) -> np.ndarray:
+    """Cartesian product of per-resource allocation levels → grid (A, m).
+
+    The paper solves Eqs. (2)-(3) "through the enumeration of the resource
+    allocation solution space"; this is that enumerated space.
+    """
+    mesh = np.meshgrid(*[np.asarray(l, np.float64) for l in levels], indexing="ij")
+    return np.stack([g.reshape(-1) for g in mesh], axis=-1)
+
+
+@dataclasses.dataclass(frozen=True)
+class ProblemInstance:
+    """A fully discretized SF-ESP instance, ready for the solvers.
+
+    Attributes:
+      pool: the resource pool (capacities S, prices p).
+      tasks: the task set.
+      z_grid: (Z,) ascending compression factors in (0, 1].
+      acc: (T, Z) — a_τ(z) evaluated on the z grid (task's own class curve).
+      acc_agnostic: (T, Z) — a(z) on the dataset-wide "All" curve; what a
+        semantics-agnostic algorithm (SI-EDGE / FlexRes-N-SEM) believes.
+      grid: (A, m) — enumerated candidate allocations.
+      lat: (T, A) — l_τ(z*_τ, s_a) with z* from the *semantic* curve.
+      lat_agnostic: (T, A) — latency with z* from the agnostic curve.
+      z_star_idx: (T,) int — index into z_grid of z*_τ (semantic); -1 if the
+        accuracy bound is unreachable on the task's own curve.
+      z_star_idx_agnostic: (T,) int — same for the agnostic curve.
+    """
+
+    pool: ResourcePool
+    tasks: TaskSet
+    z_grid: np.ndarray
+    acc: np.ndarray
+    acc_agnostic: np.ndarray
+    grid: np.ndarray
+    lat: np.ndarray
+    lat_agnostic: np.ndarray
+    z_star_idx: np.ndarray
+    z_star_idx_agnostic: np.ndarray
+
+    @property
+    def num_tasks(self) -> int:
+        return self.tasks.num_tasks
+
+    @property
+    def num_allocs(self) -> int:
+        return self.grid.shape[0]
+
+    @property
+    def m(self) -> int:
+        return self.pool.m
+
+
+@dataclasses.dataclass(frozen=True)
+class Solution:
+    """Solver output: (x, s, z) per paper Alg. 1 line 20, plus diagnostics."""
+
+    admitted: np.ndarray       # (T,) bool — x_τ
+    alloc: np.ndarray          # (T, m) — s_τ (zero rows for rejected tasks)
+    z: np.ndarray              # (T,) — z_τ (1.0 for rejected tasks)
+    objective: float           # Eq. (1a) value
+    satisfied: np.ndarray      # (T,) bool — admitted AND meets A_c and L_c
+    # (the paper's HighComp / HighRes baselines allocate tasks that then fail
+    # their requirements; `satisfied` is what Fig. 6's discussion checks.)
+
+    @property
+    def num_allocated(self) -> int:
+        return int(self.admitted.sum())
+
+    @property
+    def num_satisfied(self) -> int:
+        return int(self.satisfied.sum())

@@ -1,0 +1,17 @@
+"""Small version-compat shims for jax API drift."""
+
+import inspect
+
+try:
+    from jax import shard_map as _shard_map  # jax >= 0.8
+except ImportError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_CHECK_KW = ("check_vma" if "check_vma"
+             in inspect.signature(_shard_map).parameters else "check_rep")
+
+
+def shard_map_nocheck(f, *, mesh, in_specs, out_specs):
+    """shard_map with replication checking off (name changed across versions)."""
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **{_CHECK_KW: False})

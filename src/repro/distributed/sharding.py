@@ -1,0 +1,235 @@
+"""Logical-axis sharding rules → NamedSharding (MaxText-style).
+
+Model code calls :func:`constrain` with *logical* axis names; an active
+:func:`axis_rules` context maps them to mesh axes and inserts
+``with_sharding_constraint``. With no context active, ``constrain`` is a
+no-op — smoke tests and single-device runs never touch device state.
+
+Param shardings for pjit in_shardings are derived from parameter *path names*
+by :func:`param_shardings`, with divisibility-aware fallbacks (e.g. an MQA
+``wk`` whose kv-head dim cannot split 16 ways is replicated instead).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import re
+import threading
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["axis_rules", "constrain", "param_shardings", "logical_to_spec",
+           "DEFAULT_RULES", "batch_axes", "current_mesh",
+           "named_sharding_for"]
+
+_state = threading.local()
+
+# logical axis name → mesh axis (or tuple of mesh axes)
+DEFAULT_RULES = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "seq_kv": None,          # flipped to "data" for SP long-context decode
+    "embed": None,
+    "heads": "model",
+    "kv": None,
+    "ff": "model",
+    "vocab": "model",
+    "experts": "model",
+    "rnn": "model",
+    "seq_sp": None,          # → "model" under Megatron-SP (launch --opt)
+    "fsdp": None,            # → ("pod", "data") for ZeRO-3 MoE weights
+}
+
+
+def batch_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _filter_rule(rule, mesh):
+    if rule is None:
+        return None
+    axes = rule if isinstance(rule, tuple) else (rule,)
+    kept = tuple(a for a in axes if a in mesh.axis_names)
+    if not kept:
+        return None
+    return kept if len(kept) > 1 else kept[0]
+
+
+@contextlib.contextmanager
+def axis_rules(mesh: Mesh, rules: dict | None = None):
+    rules = {**DEFAULT_RULES, **(rules or {})}
+    rules = {k: _filter_rule(v, mesh) for k, v in rules.items()}
+    prev = getattr(_state, "ctx", None)
+    _state.ctx = (mesh, rules)
+    try:
+        yield
+    finally:
+        _state.ctx = prev
+
+
+def current_mesh() -> Mesh | None:
+    ctx = getattr(_state, "ctx", None)
+    return ctx[0] if ctx else None
+
+
+def logical_to_spec(logical: tuple, mesh: Mesh, rules: dict) -> P:
+    return P(*(rules.get(a) if a is not None else None for a in logical))
+
+
+def constrain(x, *logical):
+    """Apply a sharding constraint by logical axis names (no-op w/o context)."""
+    ctx = getattr(_state, "ctx", None)
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec_axes = []
+    for dim, name in zip(x.shape, logical):
+        rule = rules.get(name) if name else None
+        if rule is not None:
+            axes = rule if isinstance(rule, tuple) else (rule,)
+            n = int(np.prod([mesh.shape[a] for a in axes]))
+            if dim % n != 0:
+                rule = None                     # divisibility fallback
+        spec_axes.append(rule)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec_axes)))
+
+
+def named_sharding_for(shape, logical: tuple, mesh: Mesh,
+                       rules: dict | None = None) -> NamedSharding:
+    """NamedSharding from logical axis names with divisibility fallback."""
+    rules = {**DEFAULT_RULES, **(rules or {})}
+    spec_axes = []
+    for dim, name in zip(shape, logical):
+        rule = _filter_rule(rules.get(name) if name else None, mesh)
+        if rule is not None:
+            axes = rule if isinstance(rule, tuple) else (rule,)
+            n = int(np.prod([mesh.shape[a] for a in axes]))
+            if dim % n != 0:
+                rule = None
+        spec_axes.append(rule)
+    return NamedSharding(mesh, P(*spec_axes))
+
+
+# ---------------------------------------------------------------------------
+# parameter shardings by path-name pattern
+# ---------------------------------------------------------------------------
+
+# (regex over "/"-joined param path, logical spec). First match wins.
+_PARAM_RULES: tuple[tuple[str, tuple], ...] = (
+    (r"embed$", ("vocab", "embed")),
+    (r"lm_head$", ("embed", "vocab")),
+    (r"enc_in_proj$", ("embed", None)),
+    (r"(wq|wk|wv)$", ("embed", "heads")),
+    (r"wo$", ("heads", "embed")),
+    (r"(w_gate|w_up)$", ("embed", "ff")),
+    (r"w_down$", ("ff", "embed")),
+    (r"router$", ("embed", "experts")),
+    (r"time/(w_r|w_k|w_v|w_g)$", ("embed", "heads")),
+    (r"time/w_o$", ("heads", "embed")),
+    (r"time/w_lora_a$", ("embed", None)),
+    (r"time/w_lora_b$", (None, "embed")),
+    (r"channel/w_k$", ("embed", "ff")),
+    (r"channel/w_v$", ("ff", "embed")),
+    (r"channel/w_r$", ("embed", None)),
+    (r"(w_x|w_y)$", ("embed", "rnn")),
+    (r"rec/w_o$", ("rnn", "embed")),
+)
+
+# MoE expert tensors are 3-D; handled specially per impl. The *_FSDP
+# variants additionally shard a free dim over the data axes (ZeRO-3 style
+# weight sharding; gathered one scanned layer at a time) — required to fit
+# 235B-scale expert stacks in 16 GB/chip.
+_MOE_EP = {
+    "w_gate": ("experts", "embed", None), "w_up": ("experts", "embed", None),
+    "w_down": ("experts", None, "embed"),
+}
+_MOE_TP = {
+    "w_gate": (None, "embed", "ff"), "w_up": (None, "embed", "ff"),
+    "w_down": (None, "ff", "embed"),
+}
+_MOE_EP_FSDP = {
+    "w_gate": ("experts", None, "fsdp"), "w_up": ("experts", None, "fsdp"),
+    "w_down": ("experts", "fsdp", None),
+}
+_MOE_TP_FSDP = {
+    "w_gate": (None, "fsdp", "ff"), "w_up": (None, "fsdp", "ff"),
+    "w_down": (None, "ff", "fsdp"),
+}
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_shardings(params, mesh: Mesh, cfg=None, rules: dict | None = None,
+                    extra_batch_dim: bool = False, moe_fsdp: bool = False):
+    """Pytree of NamedSharding matching ``params``.
+
+    Scanned stacks have a leading repeat dim — detected by rank mismatch and
+    padded with None. ``extra_batch_dim``: additionally shard the largest
+    remaining free dim over the data axes (ZeRO-style, used for optimizer
+    state).
+    """
+    rules = {k: _filter_rule(v, mesh)
+             for k, v in {**DEFAULT_RULES, **(rules or {})}.items()}
+    is_ep = cfg is not None and cfg.is_moe and cfg.moe_impl == "ep"
+    if moe_fsdp:
+        moe_rules = _MOE_EP_FSDP if is_ep else _MOE_TP_FSDP
+    else:
+        moe_rules = _MOE_EP if is_ep else _MOE_TP
+    data_axes = batch_axes(mesh)
+
+    def one(path, leaf):
+        name = _path_str(path)
+        logical = None
+        leafname = name.rsplit("/", 1)[-1]
+        if leaf.ndim >= 3 and leafname in moe_rules and (
+                cfg is not None and cfg.is_moe) and "ffn" in name:
+            logical = moe_rules[leafname]
+        else:
+            for pat, spec in _PARAM_RULES:
+                if re.search(pat, name):
+                    logical = spec
+                    break
+        rank = leaf.ndim
+        if logical is None:
+            spec_axes = [None] * rank
+        else:
+            spec_axes = [rules.get(a) if a else None for a in logical]
+            spec_axes = [None] * (rank - len(spec_axes)) + list(spec_axes)
+        # divisibility fallback
+        for i, (dim, ax) in enumerate(zip(leaf.shape, spec_axes)):
+            if ax is None:
+                continue
+            axs = ax if isinstance(ax, tuple) else (ax,)
+            n = int(np.prod([mesh.shape[a] for a in axs]))
+            if dim % n != 0:
+                spec_axes[i] = None
+        if extra_batch_dim and data_axes:
+            used = set()
+            for ax in spec_axes:
+                if ax is not None:
+                    used.update(ax if isinstance(ax, tuple) else (ax,))
+            avail = tuple(a for a in data_axes if a not in used)
+            if avail:
+                n_data = int(np.prod([mesh.shape[a] for a in avail]))
+                free = [i for i, ax in enumerate(spec_axes) if ax is None
+                        and leaf.shape[i] % n_data == 0
+                        and leaf.shape[i] >= n_data]
+                if free:
+                    big = max(free, key=lambda i: leaf.shape[i])
+                    spec_axes[big] = avail if len(avail) > 1 else avail[0]
+        return NamedSharding(mesh, P(*spec_axes))
+
+    return jax.tree_util.tree_map_with_path(one, params)

@@ -1,0 +1,117 @@
+"""Pallas TPU kernel: flash-attention forward (causal, GQA) for prefill.
+
+The serving engine's prefill is the per-job compute hot spot the slicer
+allocates for; this kernel keeps the streaming-softmax state in VMEM across
+the KV-block grid dimension so no (Tq × Tk) score tile ever reaches HBM.
+
+Grid: (B·Hq, n_q, n_k) with the KV dimension innermost; the output block and
+the (m, l) running statistics are revisited across n_k (standard Pallas
+accumulation). GQA is expressed in the K/V index maps (kv head = q head // G)
+— no K/V duplication in memory. Outputs are the *unnormalized* accumulator
+plus (m, l); the cheap elementwise epilogue lives in ops.py so the kernel
+stays a pure reduction.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["flash_attention_fwd"]
+
+NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, acc_ref, m_ref, l_ref, *, cq, ck, scale,
+            causal, tk):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale            # (cq, dh)
+    k = k_ref[0].astype(jnp.float32)                    # (ck, dh)
+    v = v_ref[0].astype(jnp.float32)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)   # (cq, ck)
+    kpos = ki * ck + jax.lax.broadcasted_iota(jnp.int32, (cq, ck), 1)
+    valid = kpos < tk
+    if causal:
+        qpos = qi * cq + jax.lax.broadcasted_iota(jnp.int32, (cq, ck), 0)
+        valid = valid & (kpos <= qpos)
+    s = jnp.where(valid, s, NEG)
+
+    m_prev = m_ref[0]                                   # (cq,)
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_ref[0] = l_ref[0] * alpha + p.sum(axis=1)
+    acc_ref[0] = acc_ref[0] * alpha[:, None] \
+        + jnp.dot(p, v, preferred_element_type=jnp.float32)
+    m_ref[0] = m_new
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention_fwd(q, k, v, *, causal: bool = True, block_q: int = 256,
+                        block_k: int = 256, interpret: bool = True):
+    """q (B, Tq, Hq, Dh); k, v (B, Tk, Hkv, Dh) → (B, Tq, Hq, Dh).
+
+    Returns the normalized attention output (epilogue applied here)."""
+    b, tq, hq, dh = q.shape
+    tk, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    cq = min(block_q, tq)
+    ck = min(block_k, tk)
+    n_q = -(-tq // cq)
+    n_k = -(-tk // ck)
+    tqp, tkp = n_q * cq, n_k * ck
+
+    # head-major layout: (B·Hq, Tq, Dh) / (B·Hkv, Tk, Dh)
+    qh = q.transpose(0, 2, 1, 3).reshape(b * hq, tq, dh)
+    kh = k.transpose(0, 2, 1, 3).reshape(b * hkv, tk, dh)
+    vh = v.transpose(0, 2, 1, 3).reshape(b * hkv, tk, dh)
+    if tqp != tq:
+        qh = jnp.pad(qh, [(0, 0), (0, tqp - tq), (0, 0)])
+    if tkp != tk:
+        kh = jnp.pad(kh, [(0, 0), (0, tkp - tk), (0, 0)])
+        vh = jnp.pad(vh, [(0, 0), (0, tkp - tk), (0, 0)])
+
+    kernel = functools.partial(_kernel, cq=cq, ck=ck, scale=dh ** -0.5,
+                               causal=causal, tk=tk)
+    acc, m, l = pl.pallas_call(
+        kernel,
+        grid=(b * hq, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, cq, dh), lambda bh, qi, ki: (bh, qi, 0)),
+            # GQA: the kv head for q head h is h // G
+            pl.BlockSpec((1, ck, dh),
+                         lambda bh, qi, ki, g=g, hq=hq:
+                         ((bh // hq) * (hq // g) + (bh % hq) // g, ki, 0)),
+            pl.BlockSpec((1, ck, dh),
+                         lambda bh, qi, ki, g=g, hq=hq:
+                         ((bh // hq) * (hq // g) + (bh % hq) // g, ki, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, cq, dh), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, cq), lambda bh, qi, ki: (bh, qi)),
+            pl.BlockSpec((1, cq), lambda bh, qi, ki: (bh, qi)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b * hq, tqp, dh), jnp.float32),
+            jax.ShapeDtypeStruct((b * hq, tqp), jnp.float32),
+            jax.ShapeDtypeStruct((b * hq, tqp), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qh, kh, vh)
+
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out[:, :tq].reshape(b, hq, tq, dh).transpose(0, 2, 1, 3)
+    return out.astype(q.dtype)

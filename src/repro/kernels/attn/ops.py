@@ -1,0 +1,5 @@
+"""jit'd wrapper for the flash-attention prefill kernel."""
+
+from .attn import flash_attention_fwd
+
+__all__ = ["flash_attention_fwd"]

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the flash-attention kernel: plain masked softmax
+attention with GQA (same math as models/attention.py's chunked version)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["attention_ref"]
+
+
+def attention_ref(q, k, v, *, causal: bool = True):
+    """q (B, Tq, Hq, Dh); k, v (B, Tk, Hkv, Dh) → (B, Tq, Hq, Dh)."""
+    b, tq, hq, dh = q.shape
+    tk, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qh = (q * dh ** -0.5).reshape(b, tq, hkv, g, dh)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qh, k,
+                   preferred_element_type=jnp.float32)
+    if causal:
+        mask = jnp.arange(tk)[None, :] <= jnp.arange(tq)[:, None]
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(b, tq, hq, dh).astype(q.dtype)

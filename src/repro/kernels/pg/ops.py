@@ -1,0 +1,34 @@
+"""jit'd wrapper: one greedy admission round served by the Pallas kernel.
+
+Provides the same contract as ``repro.core.greedy._inner_jnp`` so the solver
+can swap inner implementations (``inner="pallas"``). The per-allocation PG
+vector (A·m work) is computed in plain jnp — the kernel fuses the expensive
+(T × A) masked reduction.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.greedy import primal_gradient
+from . import pg as pg_kernel
+
+__all__ = ["pg_argmax"]
+
+
+def pg_argmax(grid, price, cap, occupied, remaining, lat_ok, alive, cost,
+              *, flexible: bool = True, interpret: bool = True,
+              block_t: int = 256, block_a: int = 512):
+    """Returns (G (T,), best_a (T,), has_feasible (T,)) for one round."""
+    cap_ok = (grid <= remaining[None, :] + 1e-9).all(axis=1)        # (A,)
+    pg = primal_gradient(grid, price, cap, occupied, xp=jnp)        # (A,)
+    sel = pg if flexible else -cost
+    g, best_a = pg_kernel.masked_argmax(
+        sel, lat_ok, cap_ok, alive,
+        block_t=block_t, block_a=block_a, interpret=interpret)
+    has = g > pg_kernel.NEG_INF
+    # task priority is always the primal gradient of the selected allocation,
+    # even when the selection criterion was min-cost (MinRes mode).
+    G = jnp.where(has, jnp.where(flexible, g, pg[best_a]), -jnp.inf)
+    return G, best_a, has

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the fused PG masked-argmax kernel.
+
+One admission round of Alg. 1 needs, for every candidate task τ, the best
+allocation under the current occupancy:
+
+    score[τ, a] = sel[a]            if lat_ok[τ, a] ∧ cap_ok[a] ∧ alive[τ]
+                  -inf              otherwise
+    best_a[τ]   = argmax_a score[τ, a]        (first max wins)
+    G[τ]        = max_a score[τ, a]
+
+where ``sel`` is the primal gradient PG (flexible mode) or the negated
+allocation cost (MinRes mode). The oracle materializes the full (T, A) score
+matrix; the Pallas kernel streams it through VMEM tiles instead.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["masked_argmax_ref"]
+
+
+def masked_argmax_ref(sel, lat_ok, cap_ok, alive):
+    """sel (A,) f32; lat_ok (T, A) bool; cap_ok (A,) bool; alive (T,) bool.
+
+    Returns (G (T,) f32, best_a (T,) int32). Rows with no feasible allocation
+    get G = -inf (and best_a = 0 by jnp argmax convention on all -inf rows).
+    """
+    feas = lat_ok & cap_ok[None, :] & alive[:, None]
+    score = jnp.where(feas, sel[None, :].astype(jnp.float32), -jnp.inf)
+    return score.max(axis=1), score.argmax(axis=1).astype(jnp.int32)

@@ -1,0 +1,28 @@
+"""jit'd wrapper: apply a compression factor z to a batch of frames."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from . import ref as resize_ref_mod
+from . import resize as resize_kernel
+
+__all__ = ["compress_frames"]
+
+
+def compress_frames(img, z: float, *, use_kernel: bool = True,
+                    interpret: bool = True):
+    """Resize (B, H, W, C) frames to the resolution implied by compression
+    factor ``z`` (output pixel count = z · input pixel count).
+
+    The interpolation matrices are built host-side (tiny, O(out·in) each);
+    the resampling itself runs on the Pallas kernel (or the jnp oracle).
+    """
+    b, h, w, c = img.shape
+    ho, wo = resize_ref_mod.out_size_for_z(h, w, float(z))
+    r_h = jnp.asarray(resize_ref_mod.resize_matrix(ho, h))
+    r_w = jnp.asarray(resize_ref_mod.resize_matrix(wo, w))
+    if use_kernel:
+        return resize_kernel.resize_bilinear(img, r_h, r_w, interpret=interpret)
+    return resize_ref_mod.resize_ref(img, r_h, r_w)

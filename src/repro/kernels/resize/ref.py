@@ -1,0 +1,49 @@
+"""Pure-jnp oracle for the semantic-compression resize kernel.
+
+SEM-O-RAN realizes the compression factor ``z`` (bitrate scaling) as image
+resolution scaling on the serving ingest path: out_pixels = z · in_pixels, so
+the linear scale factor is sqrt(z) per axis. Bilinear resampling with
+half-pixel centers (same convention as ``jax.image.resize(method="linear")``).
+
+Bilinear resize is separable-linear, so the oracle is the explicit matrix
+form ``out = R_h @ img @ R_wᵀ`` per (batch, channel) — exactly what the Pallas
+kernel evaluates on the MXU.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+__all__ = ["resize_matrix", "resize_ref", "out_size_for_z"]
+
+
+def out_size_for_z(h: int, w: int, z: float) -> tuple[int, int]:
+    """Output resolution for compression factor z (pixel count ∝ bitrate)."""
+    s = float(np.sqrt(z))
+    return max(1, int(round(h * s))), max(1, int(round(w * s)))
+
+
+def resize_matrix(n_out: int, n_in: int) -> np.ndarray:
+    """(n_out, n_in) bilinear interpolation matrix, half-pixel centers.
+
+    Row i holds the two source weights for output sample i:
+      src = (i + 0.5) · n_in/n_out − 0.5, clamped to [0, n_in−1].
+    """
+    scale = n_in / n_out
+    src = (np.arange(n_out) + 0.5) * scale - 0.5
+    src = np.clip(src, 0.0, n_in - 1)
+    lo = np.floor(src).astype(np.int64)
+    hi = np.minimum(lo + 1, n_in - 1)
+    frac = src - lo
+    R = np.zeros((n_out, n_in), np.float32)
+    R[np.arange(n_out), lo] += (1.0 - frac).astype(np.float32)
+    R[np.arange(n_out), hi] += frac.astype(np.float32)
+    return R
+
+
+def resize_ref(img, r_h, r_w):
+    """img (B, H, W, C); r_h (h, H); r_w (w, W) → (B, h, w, C)."""
+    return jnp.einsum("hH,bHWc,wW->bhwc", jnp.asarray(r_h), img,
+                      jnp.asarray(r_w), preferred_element_type=jnp.float32
+                      ).astype(img.dtype)

@@ -1,0 +1,169 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST run before any jax import — jax locks the device
+count at first init; the dry-run (and only the dry-run) needs 512 placeholder
+host devices to build the production meshes.
+
+Per cell this script:
+  1. builds the step function + ShapeDtypeStruct inputs + shardings
+     (launch/specs.py — no allocation anywhere),
+  2. ``jax.jit(...).lower(...).compile()`` on the requested mesh,
+  3. prints ``compiled.memory_analysis()`` (proves the per-device footprint
+     fits) and ``compiled.cost_analysis()``,
+  4. runs the loop-aware HLO analysis (launch/hlo_analysis.py) for
+     trip-count-corrected dot FLOPs + collective bytes,
+  5. derives the three §Roofline terms and writes a JSON record.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch granite-34b \
+      --shape train_4k [--multipod] [--out experiments/dryrun]
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.launch import hlo_analysis, specs
+from repro.launch.mesh import HW, make_production_mesh
+
+
+def run_cell(arch: str, shape: str, *, multi_pod: bool, out_dir: str | None,
+             save_hlo: bool = False, optimized: bool = False) -> dict:
+    mesh_name = "multi" if multi_pod else "single"
+    record: dict = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                    "optimized": optimized}
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.size
+    cell = specs.build_cell(arch, shape, mesh, optimized=optimized)
+    if cell.skipped:
+        record["skipped"] = cell.skipped
+        print(f"[dryrun] SKIP {arch} × {shape} ({mesh_name}): {cell.skipped}")
+        return _write(record, out_dir)
+
+    try:
+        jit_fn = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                         donate_argnums=cell.donate)
+        with mesh:
+            lowered = jit_fn.lower(*cell.args)
+            t1 = time.time()
+            compiled = lowered.compile()
+            t2 = time.time()
+
+        ma = compiled.memory_analysis()
+        print(ma)                                   # proves it fits
+        ca = compiled.cost_analysis()
+        if isinstance(ca, list):
+            ca = ca[0]
+        print({k: ca[k] for k in ("flops", "transcendentals", "bytes accessed")
+               if k in ca})
+
+        stats = hlo_analysis.analyze_hlo(compiled.as_text())
+
+        flops_pd = stats.dot_flops
+        bytes_pd = stats.dot_bytes
+        coll_pd = stats.total_collective_bytes()
+        compute_s = flops_pd / HW.PEAK_FLOPS_BF16
+        memory_s = bytes_pd / HW.HBM_BW
+        collective_s = coll_pd / HW.ICI_BW
+        terms = {"compute_s": compute_s, "memory_s": memory_s,
+                 "collective_s": collective_s}
+        dominant = max(terms, key=terms.get)
+
+        n_active = cell.meta["active_params"]
+        factor = 6 if cell.mode == "train" else 2
+        model_flops = factor * n_active * cell.tokens_per_step
+        hlo_total = flops_pd * n_dev
+
+        record.update({
+            "mode": cell.mode,
+            "devices": n_dev,
+            "lower_s": round(t1 - t0, 2),
+            "compile_s": round(t2 - t1, 2),
+            "memory": {
+                "argument_bytes": ma.argument_size_in_bytes,
+                "output_bytes": ma.output_size_in_bytes,
+                "temp_bytes": ma.temp_size_in_bytes,
+                "alias_bytes": ma.alias_size_in_bytes,
+                "fits_hbm": bool(
+                    ma.argument_size_in_bytes + ma.temp_size_in_bytes
+                    - ma.alias_size_in_bytes < HW.HBM_BYTES),
+                # The CPU lowering upcasts every bf16 dot/collective temporary
+                # to f32 (no MXU), so temp_bytes is ~2x a TPU compile for bf16
+                # models; arguments are dtype-exact. Corrected bound:
+                "fits_hbm_bf16_corrected": bool(
+                    ma.argument_size_in_bytes + ma.temp_size_in_bytes / 2
+                    - ma.alias_size_in_bytes < HW.HBM_BYTES),
+            },
+            "cost_analysis_raw": {
+                "flops": ca.get("flops"),
+                "bytes_accessed": ca.get("bytes accessed"),
+            },
+            "per_device": {
+                "dot_flops": flops_pd,
+                "dot_bytes": bytes_pd,
+                "collective_bytes": stats.collective_bytes,
+                "collective_counts": stats.n_collectives,
+            },
+            "roofline": {
+                **terms,
+                "dominant": dominant,
+                "bound_s": max(terms.values()),
+                "model_flops": model_flops,
+                "hlo_flops_total": hlo_total,
+                "useful_ratio": model_flops / hlo_total if hlo_total else 0.0,
+                "tokens_per_step": cell.tokens_per_step,
+            },
+            "meta": cell.meta,
+        })
+        print(f"[dryrun] OK {arch} × {shape} ({mesh_name}) "
+              f"compile={t2-t1:.1f}s dominant={dominant} "
+              f"compute={compute_s*1e3:.2f}ms memory={memory_s*1e3:.2f}ms "
+              f"collective={collective_s*1e3:.2f}ms "
+              f"useful={record['roofline']['useful_ratio']:.2f}")
+        if save_hlo and out_dir:
+            hp = os.path.join(out_dir, f"{arch}__{shape}__{mesh_name}.hlo")
+            with open(hp, "w") as f:
+                f.write(compiled.as_text())
+    except Exception as e:  # noqa: BLE001 — record per-cell failures
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[dryrun] FAIL {arch} × {shape} ({mesh_name}): {record['error']}")
+    return _write(record, out_dir)
+
+
+def _write(record: dict, out_dir: str | None) -> dict:
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        path = os.path.join(
+            out_dir, f"{record['arch']}__{record['shape']}__"
+                     f"{record['mesh']}.json")
+        with open(path, "w") as f:
+            json.dump(record, f, indent=1, default=float)
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True, choices=list(specs.SHAPES))
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--opt", action="store_true",
+                    help="beyond-baseline levers: Megatron-SP + MoE FSDP")
+    args = ap.parse_args()
+    rec = run_cell(args.arch, args.shape, multi_pod=args.multipod,
+                   out_dir=args.out, save_hlo=args.save_hlo,
+                   optimized=args.opt)
+    raise SystemExit(1 if "error" in rec else 0)
+
+
+if __name__ == "__main__":
+    main()

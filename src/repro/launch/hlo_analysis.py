@@ -1,0 +1,240 @@
+"""Loop-aware analysis of compiled (SPMD-partitioned) HLO text.
+
+``compiled.cost_analysis()`` counts each while-loop body ONCE, but our stacks
+scan over layer repeats and attention/recurrence chunks — so raw numbers
+undercount by the trip counts. This parser rebuilds the call graph
+(entry → while bodies → nested bodies), infers each loop's trip count from its
+condition computation, and accumulates
+
+  * dot FLOPs              (2 · prod(output shape) · prod(contracting dims))
+  * collective bytes       (operand bytes of all-reduce / all-gather /
+                            reduce-scatter / all-to-all / collective-permute)
+  * dot operand+out bytes  (a lower-bound HBM-traffic proxy for matmuls)
+
+with multiplicative trip counts along the nesting chain. Shapes in the
+partitioned module are per-device, so all results are per-device quantities.
+
+Verified against fully-unrolled compiles (no loops) in tests — see
+tests/test_hlo_analysis.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+__all__ = ["analyze_hlo", "HloStats"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+@dataclasses.dataclass
+class HloStats:
+    dot_flops: float = 0.0
+    dot_bytes: float = 0.0
+    collective_bytes: dict = None
+    n_collectives: dict = None
+
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+def _shape_elems(dtype: str, dims: str) -> tuple[int, int]:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n, _DTYPE_BYTES.get(dtype, 4)
+
+
+def _split_computations(text: str) -> dict[str, str]:
+    """computation name → body text (header line included as first line)."""
+    comps = {}
+    cur_name, cur_lines, depth = None, [], 0
+    for line in text.splitlines():
+        stripped = line.strip()
+        if cur_name is None:
+            # header: `%name (args) -> type {` — args may contain nested
+            # parens (tuple types), so only anchor on the name + trailing `{`.
+            m = re.match(r"(?:ENTRY\s+)?%([\w\.\-]+)\s*\(", stripped)
+            if m and stripped.endswith("{"):
+                cur_name = m.group(1)
+                cur_lines = [stripped]
+                depth = 1
+            continue
+        depth += stripped.count("{") - stripped.count("}")
+        if depth <= 0:
+            comps[cur_name] = "\n".join(cur_lines)
+            cur_name = None
+        else:
+            cur_lines.append(stripped)
+    return comps
+
+
+def _symbol_table(body: str) -> dict[str, tuple[str, str]]:
+    """name → (dtype, dims) for every value defined in a computation,
+    including the computation parameters declared in the header line."""
+    table: dict[str, tuple[str, str]] = {}
+    header = body.splitlines()[0] if body else ""
+    for m in re.finditer(r"([\w\.\-]+)\s*:\s*(\w+)\[([\d,]*)\]", header):
+        table[m.group(1)] = (m.group(2), m.group(3))
+    for line in body.splitlines():
+        m = re.match(r"(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*\(?(\w+)\[([\d,]*)\]",
+                     line.strip())
+        if m:
+            table[m.group(1)] = (m.group(2), m.group(3))
+    return table
+
+
+def _operand_names(line: str) -> list[str]:
+    """Operand value names inside the op's (...) argument list."""
+    par = line.find("(")
+    if par < 0:
+        return []
+    # cut at the closing paren of the argument list (before attributes)
+    depth, end = 0, len(line)
+    for i in range(par, len(line)):
+        if line[i] == "(":
+            depth += 1
+        elif line[i] == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    inner = line[par + 1:end]
+    return re.findall(r"%([\w\.\-]+)", inner)
+
+
+def _trip_count(cond_text: str) -> int:
+    """Trip count from a while condition: the compare-against constant."""
+    consts = [int(m) for m in re.findall(r"s32\[\]\s+constant\((\d+)\)",
+                                         cond_text)]
+    return max(consts) if consts else 1
+
+
+def _result_shape(line: str) -> tuple[str, str] | None:
+    m = re.search(r"=\s*(?:\()?(\w+)\[([\d,]*)\]", line)
+    return (m.group(1), m.group(2)) if m else None
+
+
+def _resolve_operands(line: str, table: dict) -> list[tuple[str, str]]:
+    return [table[n] for n in _operand_names(line) if n in table]
+
+
+def _dot_flops(line: str, table: dict) -> tuple[float, float]:
+    """(flops, bytes) for a dot line, operand shapes from the symbol table."""
+    res = _result_shape(line)
+    if res is None:
+        return 0.0, 0.0
+    out_elems, out_b = _shape_elems(*res)
+    ops = _resolve_operands(line, table)
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+    contract = 1
+    if m and ops:
+        lhs_dims = [int(d) for d in ops[0][1].split(",") if d]
+        for idx in m.group(1).split(","):
+            if idx:
+                contract *= lhs_dims[int(idx)]
+    flops = 2.0 * out_elems * contract
+    byts = out_elems * out_b + sum(
+        _shape_elems(dt, dims)[0] * _DTYPE_BYTES.get(dt, 4)
+        for dt, dims in ops[:2])
+    return flops, byts
+
+
+def analyze_hlo(text: str) -> HloStats:
+    comps = _split_computations(text)
+
+    # map: computation → list of (callee, multiplier)
+    # while ops: `while(...), condition=%c, body=%b`
+    edges: dict[str, list[tuple[str, int]]] = defaultdict(list)
+    local = {}
+    for name, body in comps.items():
+        stats = HloStats(collective_bytes=defaultdict(float),
+                         n_collectives=defaultdict(int))
+        table = _symbol_table(body)
+        for line in body.splitlines():
+            if re.search(r"=\s*(?:\()?\w+\[[\d,]*\]\S*\s+dot\(", line):
+                f, b = _dot_flops(line, table)
+                stats.dot_flops += f
+                stats.dot_bytes += b
+            for coll in _COLLECTIVES:
+                if re.search(rf"\s{coll}(?:-start)?\(", line):
+                    byts = sum(
+                        _shape_elems(dt, dims)[0] * _DTYPE_BYTES.get(dt, 4)
+                        for dt, dims in _resolve_operands(line, table))
+                    stats.collective_bytes[coll] += byts
+                    stats.n_collectives[coll] += 1
+                    break
+            m = re.search(r"\bwhile\(.*condition=%?([\w\.\-]+),\s*"
+                          r"body=%?([\w\.\-]+)", line)
+            if not m:
+                m = re.search(r"body=%?([\w\.\-]+),\s*condition=%?([\w\.\-]+)",
+                              line)
+                if m:
+                    body_c, cond_c = m.group(1), m.group(2)
+                else:
+                    body_c = cond_c = None
+            else:
+                cond_c, body_c = m.group(1), m.group(2)
+            if body_c and cond_c:
+                trips = _trip_count(comps.get(cond_c, ""))
+                edges[name].append((body_c, trips))
+            for cm in re.finditer(r"calls=%?([\w\.\-]+)", line):
+                edges[name].append((cm.group(1), 1))
+            for cm in re.finditer(r"to_apply=%?([\w\.\-]+)", line):
+                edges[name].append((cm.group(1), 1))
+            for branch in re.findall(r"branch_computations=\{([^}]*)\}", line):
+                for b in branch.split(","):
+                    edges[name].append((b.strip().lstrip("%"), 1))
+        local[name] = stats
+
+    # accumulate bottom-up from the entry computation
+    entry = None
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            m = re.match(r"ENTRY\s+%?([\w\.\-]+)", line)
+            if m:
+                entry = m.group(1)
+        if entry:
+            break
+    if entry is None or entry not in local:
+        # fall back: largest computation
+        entry = max(local, key=lambda n: local[n].dot_flops, default=None)
+
+    memo: dict[str, HloStats] = {}
+
+    def total(name: str, seen=()) -> HloStats:
+        if name in memo:
+            return memo[name]
+        if name in seen or name not in local:
+            return HloStats(collective_bytes=defaultdict(float),
+                            n_collectives=defaultdict(int))
+        s = local[name]
+        agg = HloStats(dot_flops=s.dot_flops, dot_bytes=s.dot_bytes,
+                       collective_bytes=defaultdict(float, s.collective_bytes),
+                       n_collectives=defaultdict(int, s.n_collectives))
+        for callee, mult in edges.get(name, ()):
+            sub = total(callee, seen + (name,))
+            agg.dot_flops += mult * sub.dot_flops
+            agg.dot_bytes += mult * sub.dot_bytes
+            for k, v in sub.collective_bytes.items():
+                agg.collective_bytes[k] += mult * v
+            for k, v in sub.n_collectives.items():
+                agg.n_collectives[k] += mult * v
+        memo[name] = agg
+        return agg
+
+    out = total(entry)
+    out.collective_bytes = dict(out.collective_bytes)
+    out.n_collectives = dict(out.n_collectives)
+    return out

@@ -1,0 +1,37 @@
+"""Production mesh construction.
+
+Single pod: (data=16, model=16) = 256 chips (TPU v5e pod).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the ``pod`` axis is pure
+data parallelism so the only cross-pod (DCI) traffic is the per-step gradient
+all-reduce.
+
+``make_production_mesh`` is a function (not a module constant) so importing
+this module never touches jax device state — smoke tests see 1 CPU device;
+only ``dryrun.py`` sets XLA_FLAGS for 512 host devices before first jax init.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_test_mesh", "HW"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(n_data: int = 2, n_model: int = 4):
+    """Small mesh for CI-scale sharding tests (8 fake devices)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+class HW:
+    """TPU v5e roofline constants (per chip)."""
+
+    PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+    HBM_BW = 819e9                  # B/s
+    ICI_BW = 50e9                   # B/s per link
+    HBM_BYTES = 16 * 1024**3

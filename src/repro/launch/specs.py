@@ -1,0 +1,225 @@
+"""Per-(architecture × input-shape) dry-run cell specifications.
+
+For every cell this module builds: the step function (train_step /
+serve_prefill / serve_step), ShapeDtypeStruct stand-ins for every input (no
+allocation), and the in_shardings — the same pattern shannon/kernels uses.
+
+Shape semantics (assignment):
+  train_4k     seq 4096,   global_batch 256  → train_step
+  prefill_32k  seq 32768,  global_batch 32   → serve_prefill
+  decode_32k   seq 32768,  global_batch 128  → serve_step (1 token, KV=seq)
+  long_500k    seq 524288, global_batch 1    → serve_step; only sub-quadratic
+               archs (skips per DESIGN.md §Arch-applicability)
+
+Whisper (enc-dec, stub frontend): the assigned seq_len is the encoder frame
+count; decoder length = seq_len // 8; decode uses self-cache seq//8 + full
+cross cache.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, get_config, long_context_ok
+from repro.distributed.sharding import (axis_rules, batch_axes,
+                                        named_sharding_for, param_shardings)
+from repro.models import cache_specs, decode_step, loss_fn, param_specs, prefill
+from repro.training.optimizer import OptConfig, make_train_step, opt_init
+
+__all__ = ["SHAPES", "CellSpec", "build_cell", "all_cells"]
+
+SHAPES = {
+    "train_4k": dict(seq=4096, batch=256, mode="train"),
+    "prefill_32k": dict(seq=32768, batch=32, mode="prefill"),
+    "decode_32k": dict(seq=32768, batch=128, mode="decode"),
+    "long_500k": dict(seq=524288, batch=1, mode="decode"),
+}
+
+
+@dataclasses.dataclass
+class CellSpec:
+    arch: str
+    shape: str
+    mode: str
+    fn: Callable                 # jittable step fn
+    args: tuple                  # ShapeDtypeStruct pytrees
+    in_shardings: tuple
+    donate: tuple
+    tokens_per_step: int
+    meta: dict
+    rules: dict
+    skipped: str | None = None   # reason if cell is skipped
+
+
+def _struct(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _choose_moe_impl(cfg, mode: str, batch: int, mesh) -> str | None:
+    if not cfg.is_moe:
+        return None
+    n_data = 1
+    for a in batch_axes(mesh):
+        n_data *= mesh.shape[a]
+    if mode in ("train", "prefill"):
+        return cfg.moe_impl
+    # decode: TP dispatch if the batch shards over the data axes, else the
+    # dense oracle (tiny token counts).
+    return "tp" if batch % n_data == 0 else "dense"
+
+
+def _cache_shardings(cache, mesh, rules):
+    """Logical axes per cache leaf, by leaf name."""
+    def one(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        nd = len(leaf.shape)
+        if name in ("k", "v") and nd == 5:
+            logical = (None, "batch", "seq_kv", "kv", None)
+        elif name == "s":                       # rwkv state (R,B,H,N,N)
+            logical = (None, "batch", "heads", None, None)
+        elif name in ("x_att", "x_ffn"):
+            logical = (None, "batch", "embed")
+        elif name == "h":                       # rg-lru (R,B,dr)
+            logical = (None, "batch", "rnn")
+        elif name == "conv":
+            logical = (None, "batch", None, "rnn")
+        else:
+            logical = (None,) * nd
+        return named_sharding_for(leaf.shape, logical, mesh, rules)
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def build_cell(arch: str, shape: str, mesh, *, rules: dict | None = None,
+               optimized: bool = False) -> CellSpec:
+    """``optimized=True`` applies the beyond-baseline §Perf levers:
+    Megatron-SP residual sharding (seq_sp → model) and ZeRO-3 FSDP for MoE
+    expert weights (fsdp → data axes). The baseline keeps both off so the
+    EXPERIMENTS.md §Perf before/after is reproducible."""
+    cfg = get_config(arch)
+    if optimized and cfg.is_moe and cfg.moe_impl != "ep":
+        cfg = dataclasses.replace(cfg, moe_psum_late=True)
+    info = SHAPES[shape]
+    seq, batch, mode = info["seq"], info["batch"], info["mode"]
+
+    if shape == "long_500k" and not long_context_ok(arch):
+        return CellSpec(arch, shape, mode, None, (), (), (), 0, {},
+                        rules or {},
+                        skipped="pure full attention — long_500k n/a "
+                                "(DESIGN.md §Arch-applicability)")
+
+    rules = dict(rules or {})
+    if optimized and mode == "train":
+        # Megatron-SP targets the remat-saved residual stacks — a training
+        # memory concern; prefill has no backward, so SP would only add
+        # collectives there.
+        rules.setdefault("seq_sp", "model")
+    if optimized:
+        rules.setdefault("fsdp", ("pod", "data"))
+    if shape == "long_500k":
+        # SP: batch of 1 cannot shard; the KV/sequence axis shards instead.
+        rules.setdefault("batch", None)
+        rules.setdefault("seq_kv", ("data", "model"))
+    elif mode == "decode":
+        rules.setdefault("seq_kv", "model")
+
+    moe_impl = _choose_moe_impl(cfg, mode, batch, mesh)
+    p_specs = param_specs(cfg)
+    p_shard = param_shardings(p_specs, mesh, cfg, rules, moe_fsdp=optimized)
+    baxes = batch_axes(mesh)
+    meta = dict(params=cfg.param_count(), active_params=cfg.active_param_count(),
+                moe_impl=moe_impl, seq=seq, batch=batch, optimized=optimized)
+
+    dec_len = seq // 8 if cfg.is_encdec else seq
+
+    if mode == "train":
+        opt_specs = jax.eval_shape(opt_init, p_specs)
+        opt_shard = param_shardings(opt_specs, mesh, cfg, rules,
+                                    extra_batch_dim=True,
+                                    moe_fsdp=optimized)
+        tokens = _struct((batch, dec_len), jnp.int32)
+        batch_args: dict[str, Any] = {"tokens": tokens, "labels": tokens}
+        batch_shard = {
+            "tokens": named_sharding_for(tokens.shape, ("batch", None), mesh,
+                                         rules),
+            "labels": named_sharding_for(tokens.shape, ("batch", None), mesh,
+                                         rules)}
+        if cfg.is_encdec:
+            enc = _struct((batch, seq, cfg.d_model), jnp.bfloat16)
+            batch_args["enc_input"] = enc
+            batch_shard["enc_input"] = named_sharding_for(
+                enc.shape, ("batch", None, None), mesh, rules)
+        n_data = 1
+        for a in baxes:
+            n_data *= mesh.shape[a]
+        n_micro = max(1, batch // n_data)   # 1 sample/device per microbatch
+        meta["n_microbatches"] = n_micro
+        # ZeRO-2 under --opt: fp32 grad accumulator constrained to the
+        # optimizer-state (extra data-axis) sharding.
+        grad_sh = opt_shard["m"] if optimized else None
+        step = make_train_step(cfg, OptConfig(), mesh=mesh, moe_impl=moe_impl,
+                               n_microbatches=n_micro, grad_shardings=grad_sh,
+                               param_out_shardings=p_shard if optimized
+                               else None,
+                               accum_dtype=(jnp.bfloat16 if optimized
+                                            else jnp.float32))
+
+        def fn(params, opt_state, b):
+            with axis_rules(mesh, rules):
+                return step(params, opt_state, b)
+
+        return CellSpec(arch, shape, mode, fn,
+                        (p_specs, opt_specs, batch_args),
+                        (p_shard, opt_shard, batch_shard),
+                        donate=(0, 1),
+                        tokens_per_step=batch * dec_len, meta=meta,
+                        rules=rules)
+
+    if mode == "prefill":
+        tokens = _struct((batch, dec_len), jnp.int32)
+        batch_args = {"tokens": tokens}
+        batch_shard = {"tokens": named_sharding_for(
+            tokens.shape, ("batch", None), mesh, rules)}
+        if cfg.is_encdec:
+            enc = _struct((batch, seq, cfg.d_model), jnp.bfloat16)
+            batch_args["enc_input"] = enc
+            batch_shard["enc_input"] = named_sharding_for(
+                enc.shape, ("batch", None, None), mesh, rules)
+
+        def fn(params, b):
+            with axis_rules(mesh, rules):
+                return prefill(params, b, cfg, cache_len=dec_len, mesh=mesh,
+                               moe_impl=moe_impl)
+
+        return CellSpec(arch, shape, mode, fn, (p_specs, batch_args),
+                        (p_shard, batch_shard), donate=(),
+                        tokens_per_step=batch * dec_len, meta=meta,
+                        rules=rules)
+
+    # decode
+    cache = cache_specs(cfg, batch, dec_len,
+                        enc_len=seq if cfg.is_encdec else 0)
+    cache_shard = _cache_shardings(cache, mesh, rules)
+    tok = _struct((batch,), jnp.int32)
+    pos = _struct((), jnp.int32)
+    tok_shard = named_sharding_for(tok.shape, ("batch",), mesh, rules)
+    pos_shard = named_sharding_for((), (), mesh, rules)
+
+    def fn(params, c, t, p):
+        with axis_rules(mesh, rules):
+            return decode_step(params, c, t, p, cfg, mesh=mesh,
+                               moe_impl=moe_impl or "dense")
+
+    return CellSpec(arch, shape, mode, fn, (p_specs, cache, tok, pos),
+                    (p_shard, cache_shard, tok_shard, pos_shard),
+                    donate=(1,), tokens_per_step=batch, meta=meta,
+                    rules=rules)
+
+
+def all_cells() -> list[tuple[str, str]]:
+    return [(a, s) for a in ARCHS for s in SHAPES]

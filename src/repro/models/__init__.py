@@ -1,0 +1,8 @@
+"""Composable model zoo covering the 10 assigned architectures."""
+
+from .common import ModelConfig
+from .model import (cache_specs, decode_step, forward_train, init_cache,
+                    init_params, loss_fn, param_specs, prefill)
+
+__all__ = ["ModelConfig", "cache_specs", "decode_step", "forward_train",
+           "init_cache", "init_params", "loss_fn", "param_specs", "prefill"]

@@ -1,0 +1,290 @@
+"""Attention: GQA/MQA, full-causal + sliding-window, train/prefill/decode.
+
+Full-sequence attention is computed *chunked* (flash-style streaming softmax in
+pure JAX, f32 accumulators): a ``lax.scan`` over query chunks with an inner
+``lax.scan`` over KV chunks for the full-causal kind, and a single banded block
+per query chunk (``dynamic_slice`` of width window+chunk) for the sliding-window
+kind. This keeps the per-layer attention working set at
+O(chunk_q · chunk_k) instead of O(T²) — required for the 32k prefill shapes —
+and the scan structure keeps lowered HLO small for the dry-run.
+
+Sliding-window layers use a rolling (ring) KV cache of length ``window``
+(Mistral-style): slot ``i`` holds the newest position ≡ i (mod window).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import apply_rotary, dense_init, rms_norm, rotary_cos_sin
+
+__all__ = ["attn_init", "attn_train", "attn_prefill", "attn_decode",
+           "cache_spec"]
+
+NEG = -1e30
+
+
+def attn_init(key, cfg, *, cross: bool = False, dtype=jnp.float32):
+    d, dh = cfg.d_model, cfg.d_head
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": dense_init(ks[0], (d, cfg.n_heads * dh), dtype=dtype),
+        "wk": dense_init(ks[1], (d, cfg.n_kv_heads * dh), dtype=dtype),
+        "wv": dense_init(ks[2], (d, cfg.n_kv_heads * dh), dtype=dtype),
+        "wo": dense_init(ks[3], (cfg.n_heads * dh, d), dtype=dtype),
+    }
+    if cfg.qk_norm and not cross:
+        p["q_scale"] = jnp.zeros((dh,), dtype)
+        p["k_scale"] = jnp.zeros((dh,), dtype)
+    return p
+
+
+def _project(params, x, cfg, positions, *, rope: bool = True):
+    b, t, _ = x.shape
+    dh = cfg.d_head
+    q = (x @ params["wq"]).reshape(b, t, cfg.n_heads, dh)
+    k = (x @ params["wk"]).reshape(b, t, cfg.n_kv_heads, dh)
+    v = (x @ params["wv"]).reshape(b, t, cfg.n_kv_heads, dh)
+    if cfg.qk_norm and "q_scale" in params:
+        q = rms_norm(q, params["q_scale"], cfg.norm_eps)
+        k = rms_norm(k, params["k_scale"], cfg.norm_eps)
+    if rope:
+        cos, sin = rotary_cos_sin(positions, int(dh * cfg.rope_fraction),
+                                  cfg.rope_theta)
+        q = apply_rotary(q, cos, sin, cfg.rope_fraction)
+        k = apply_rotary(k, cos, sin, cfg.rope_fraction)
+    return q, k, v
+
+
+def _gqa_scores(q, k):
+    """q (B,cq,Hkv,G,Dh), k (B,ck,Hkv,Dh) → (B,Hkv,G,cq,ck) f32."""
+    return jnp.einsum("bqhgd,bkhd->bhgqk", q, k,
+                      preferred_element_type=jnp.float32)
+
+
+def _softmax_block(scores, mask, m, l, acc, v):
+    """One streaming-softmax update. scores (B,H,G,cq,ck) f32."""
+    scores = jnp.where(mask, scores, NEG)
+    m_new = jnp.maximum(m, scores.max(axis=-1))
+    alpha = jnp.exp(m - m_new)
+    p = jnp.exp(scores - m_new[..., None])
+    l_new = l * alpha + p.sum(axis=-1)
+    pv = jnp.einsum("bhgqk,bkhd->bhgqd", p, v,
+                    preferred_element_type=jnp.float32)
+    acc_new = acc * alpha[..., None] + pv
+    return m_new, l_new, acc_new
+
+
+def flash_attention(q, k, v, *, causal: bool, window: int | None,
+                    chunk_q: int, chunk_k: int, q_offset: int = 0,
+                    unroll: bool = False):
+    """Chunked attention. q (B,Tq,Hq,Dh); k,v (B,Tk,Hkv,Dh) → (B,Tq,Hq,Dh).
+
+    ``window`` (if set) restricts each query to the previous ``window`` keys
+    (inclusive of self) — the sliding-window kind. ``q_offset`` is the absolute
+    position of q[0] relative to k[0] (prefill continuation / decode).
+    """
+    b, tq, hq, dh = q.shape
+    tk, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    scale = dh ** -0.5
+
+    cq = min(chunk_q, tq)
+    n_q = -(-tq // cq)
+    tq_pad = n_q * cq
+    if tq_pad != tq:
+        pad = [(0, 0), (0, tq_pad - tq), (0, 0), (0, 0)]
+        q = jnp.pad(q, pad)
+    qc = (q * scale).reshape(b, n_q, cq, hkv, g, dh).transpose(1, 0, 2, 3, 4, 5)
+
+    if window is not None:
+        # banded: per q-chunk, one KV slice of static size window+cq. Front
+        # padding makes every slice start valid; 2·cq of end padding keeps the
+        # last chunk's slice in-bounds (masked out via kpos < tk).
+        span = window + cq
+        k_pad = jnp.pad(k, [(0, 0), (span, 2 * cq), (0, 0), (0, 0)])
+        v_pad = jnp.pad(v, [(0, 0), (span, 2 * cq), (0, 0), (0, 0)])
+
+        def band_block(qi_q):
+            qi, q_blk = qi_q
+            q_start = qi * cq + q_offset
+            k_start = q_start - window + 1 + span          # in padded coords
+            k_blk = jax.lax.dynamic_slice_in_dim(k_pad, k_start, span, axis=1)
+            v_blk = jax.lax.dynamic_slice_in_dim(v_pad, k_start, span, axis=1)
+            qpos = q_start + jnp.arange(cq)
+            kpos = q_start - window + 1 + jnp.arange(span)
+            mask = (kpos[None, :] <= qpos[:, None]) & (kpos[None, :] >= 0) \
+                & (kpos[None, :] < tk) \
+                & (kpos[None, :] > qpos[:, None] - window)
+            s = _gqa_scores(q_blk, k_blk)
+            s = jnp.where(mask[None, None, None], s, NEG)
+            p = jax.nn.softmax(s, axis=-1)
+            o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v_blk,
+                           preferred_element_type=jnp.float32)
+            return o
+
+        band_ck = jax.checkpoint(band_block)   # recompute p in backward
+        _, out = jax.lax.scan(lambda _, x: (None, band_ck(x)), None,
+                              (jnp.arange(n_q), qc), unroll=unroll)
+    else:
+        ck = min(chunk_k, tk)
+        n_k = -(-tk // ck)
+        tk_pad = n_k * ck
+        if tk_pad != tk:
+            k = jnp.pad(k, [(0, 0), (0, tk_pad - tk), (0, 0), (0, 0)])
+            v = jnp.pad(v, [(0, 0), (0, tk_pad - tk), (0, 0), (0, 0)])
+        kc = k.reshape(b, n_k, ck, hkv, dh).transpose(1, 0, 2, 3, 4)
+        vc = v.reshape(b, n_k, ck, hkv, dh).transpose(1, 0, 2, 3, 4)
+
+        def q_block(qi_q):
+            qi, q_blk = qi_q
+            qpos = qi * cq + q_offset + jnp.arange(cq)
+
+            def kv_step(carry, kj_blk):
+                m, l, acc = carry
+                kj, k_blk, v_blk = kj_blk
+                kpos = kj * ck + jnp.arange(ck)
+                mask = kpos[None, :] < tk
+                if causal:
+                    mask = mask & (kpos[None, :] <= qpos[:, None])
+                s = _gqa_scores(q_blk, k_blk)
+                m, l, acc = _softmax_block(
+                    s, mask[None, None, None], m, l, acc, v_blk)
+                return (m, l, acc), None
+
+            init = (jnp.full((b, hkv, g, cq), NEG, jnp.float32),
+                    jnp.zeros((b, hkv, g, cq), jnp.float32),
+                    jnp.zeros((b, hkv, g, cq, dh), jnp.float32))
+            (m, l, acc), _ = jax.lax.scan(
+                jax.checkpoint(kv_step),           # flash bwd: recompute p
+                init, (jnp.arange(n_k), kc, vc), unroll=unroll)
+            o = acc / jnp.maximum(l, 1e-30)[..., None]
+            return o.transpose(0, 3, 1, 2, 4)               # (B,cq,Hkv,G,Dh)
+
+        q_block_ck = jax.checkpoint(q_block)   # one live q-block in backward
+        _, out = jax.lax.scan(lambda _, x: (None, q_block_ck(x)), None,
+                              (jnp.arange(n_q), qc), unroll=unroll)
+
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(b, tq_pad, hq, dh)
+    return out[:, :tq].astype(v.dtype)
+
+
+# ---------------------------------------------------------------------------
+# train / prefill / decode entry points
+# ---------------------------------------------------------------------------
+
+def attn_train(params, x, cfg, kind: str, *, rope: bool = True,
+               causal: bool = True):
+    b, t, _ = x.shape
+    positions = jnp.arange(t)[None, :]
+    q, k, v = _project(params, x, cfg, positions, rope=rope)
+    window = cfg.window if kind == "local" else None
+    o = flash_attention(q, k, v, causal=causal, window=window,
+                        chunk_q=cfg.chunk_q, chunk_k=cfg.chunk_k,
+                        unroll=cfg.unroll_scan)
+    return o.reshape(b, t, -1) @ params["wo"]
+
+
+def cache_spec(cfg, kind: str, batch: int, seq_len: int, dtype):
+    """Shape of the KV cache for one attention layer of the given kind."""
+    length = min(cfg.window, seq_len) if kind == "local" else seq_len
+    shp = (batch, length, cfg.n_kv_heads, cfg.d_head)
+    return {"k": jax.ShapeDtypeStruct(shp, dtype),
+            "v": jax.ShapeDtypeStruct(shp, dtype)}
+
+
+def attn_prefill(params, x, cfg, kind: str, cache_len: int):
+    """Full-sequence pass that also returns the populated KV cache.
+
+    For "local" layers the cache is the rolling window (last ``window``
+    positions, ring-aligned); otherwise the full ``cache_len`` buffer with the
+    first T slots filled.
+    """
+    b, t, _ = x.shape
+    positions = jnp.arange(t)[None, :]
+    q, k, v = _project(params, x, cfg, positions)
+    window = cfg.window if kind == "local" else None
+    o = flash_attention(q, k, v, causal=True, window=window,
+                        chunk_q=cfg.chunk_q, chunk_k=cfg.chunk_k,
+                        unroll=cfg.unroll_scan)
+    y = o.reshape(b, t, -1) @ params["wo"]
+
+    if kind == "local":
+        w = min(cfg.window, cache_len)
+        k_tail, v_tail = k[:, -w:], v[:, -w:]
+        if t >= w:
+            shift = t % w
+            k_c = jnp.roll(k_tail, shift, axis=1)
+            v_c = jnp.roll(v_tail, shift, axis=1)
+        else:
+            k_c = jnp.zeros((b, w) + k.shape[2:], k.dtype).at[:, :t].set(k_tail)
+            v_c = jnp.zeros((b, w) + v.shape[2:], v.dtype).at[:, :t].set(v_tail)
+    else:
+        k_c = jnp.zeros((b, cache_len) + k.shape[2:], k.dtype)
+        v_c = jnp.zeros((b, cache_len) + v.shape[2:], v.dtype)
+        k_c = jax.lax.dynamic_update_slice_in_dim(k_c, k, 0, axis=1)
+        v_c = jax.lax.dynamic_update_slice_in_dim(v_c, v, 0, axis=1)
+    return y, {"k": k_c, "v": v_c}
+
+
+def attn_decode(params, x, cache, pos, cfg, kind: str):
+    """One-token step. x (B, 1, d); ``pos`` scalar absolute position of x."""
+    b = x.shape[0]
+    dh = cfg.d_head
+    positions = jnp.full((b, 1), pos)
+    q, k_new, v_new = _project(params, x, cfg, positions)
+    length = cache["k"].shape[1]
+
+    if kind == "local":
+        slot = pos % length
+        k_c = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, slot, 1)
+        v_c = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, slot, 1)
+        slots = jnp.arange(length)
+        age = (pos - slots) % length
+        abs_pos = pos - age
+        valid = (abs_pos >= 0) & (abs_pos > pos - cfg.window)
+    else:
+        k_c = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, pos, 1)
+        v_c = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, pos, 1)
+        valid = jnp.arange(length) <= pos
+
+    g = cfg.n_heads // cfg.n_kv_heads
+    qh = (q * dh ** -0.5).reshape(b, cfg.n_kv_heads, g, dh)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qh, k_c,
+                   preferred_element_type=jnp.float32)
+    s = jnp.where(valid[None, None, None], s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p, v_c,
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    y = o.reshape(b, 1, cfg.n_heads * dh) @ params["wo"]
+    return y, {"k": k_c, "v": v_c}
+
+
+# --- cross attention (whisper decoder) --------------------------------------
+
+def cross_attn_train(params, x, enc, cfg):
+    """x (B,Td,d) queries; enc (B,Te,d) keys/values. No RoPE, no mask."""
+    b, t, _ = x.shape
+    te = enc.shape[1]
+    dh = cfg.d_head
+    q = (x @ params["wq"]).reshape(b, t, cfg.n_heads, dh)
+    k = (enc @ params["wk"]).reshape(b, te, cfg.n_kv_heads, dh)
+    v = (enc @ params["wv"]).reshape(b, te, cfg.n_kv_heads, dh)
+    o = flash_attention(q, k, v, causal=False, window=None,
+                        chunk_q=cfg.chunk_q, chunk_k=cfg.chunk_k,
+                        unroll=cfg.unroll_scan)
+    return o.reshape(b, t, -1) @ params["wo"], {"k": k, "v": v}
+
+
+def cross_attn_decode(params, x, cross_cache, cfg):
+    b = x.shape[0]
+    dh = cfg.d_head
+    g = cfg.n_heads // cfg.n_kv_heads
+    q = (x @ params["wq"]).reshape(b, cfg.n_kv_heads, g, dh) * dh ** -0.5
+    s = jnp.einsum("bhgd,bkhd->bhgk", q, cross_cache["k"],
+                   preferred_element_type=jnp.float32)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p, cross_cache["v"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    return o.reshape(b, 1, cfg.n_heads * dh) @ params["wo"]

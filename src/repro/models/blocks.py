@@ -1,0 +1,171 @@
+"""Per-kind transformer blocks with pre-norm residual wiring.
+
+Kinds: "attn" (full causal), "local" (sliding window), "rec" (RG-LRU),
+"rwkv" (RWKV6 time+channel mix). Encoder-decoder adds cross-attention via
+``cross=True``. Each kind exposes init / train / prefill / decode with a
+uniform cache interface so the stack can scan over heterogeneous patterns.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import moe as moe_mod
+from . import recurrent as rec
+from . import rwkv as rwkv_mod
+from .layers import mlp_apply, mlp_init, rms_norm
+
+__all__ = ["block_init", "block_train", "block_prefill", "block_decode",
+           "block_cache_spec"]
+
+
+def _ffn_init(key, cfg, dtype):
+    if cfg.is_moe:
+        return moe_mod.moe_init(key, cfg, dtype)
+    return mlp_init(key, cfg.d_model, cfg.d_ff, cfg.mlp_kind, dtype)
+
+
+def _ffn_apply(params, x, cfg, mesh, moe_impl):
+    if cfg.is_moe:
+        return moe_mod.moe_apply(params, x, cfg, impl=moe_impl, mesh=mesh,
+                                 psum_late=cfg.moe_psum_late)
+    return mlp_apply(params, x, cfg.mlp_kind)
+
+
+def block_init(key, cfg, kind: str, dtype, *, cross: bool = False):
+    ks = jax.random.split(key, 6)
+    d = cfg.d_model
+    p = {"ln1": jnp.zeros((d,), dtype), "ln2": jnp.zeros((d,), dtype)}
+    if kind in ("attn", "local"):
+        p["attn"] = attn.attn_init(ks[0], cfg, dtype=dtype)
+        p["ffn"] = _ffn_init(ks[1], cfg, dtype)
+    elif kind == "rec":
+        p["rec"] = rec.rglru_init(ks[0], cfg, dtype)
+        p["ffn"] = _ffn_init(ks[1], cfg, dtype)
+    elif kind == "rwkv":
+        p.update(rwkv_mod.rwkv_init(ks[0], cfg, dtype))
+    else:
+        raise ValueError(kind)
+    if cross:
+        p["ln_cross"] = jnp.zeros((d,), dtype)
+        p["cross"] = attn.attn_init(ks[2], cfg, cross=True, dtype=dtype)
+    return p
+
+
+def block_train(params, x, cfg, kind: str, *, mesh=None, moe_impl=None,
+                enc=None, causal: bool = True):
+    eps = cfg.norm_eps
+    if kind in ("attn", "local"):
+        h = attn.attn_train(params["attn"], rms_norm(x, params["ln1"], eps),
+                            cfg, kind, causal=causal)
+        x = x + h
+        if "cross" in params:
+            c, _ = attn.cross_attn_train(
+                params["cross"], rms_norm(x, params["ln_cross"], eps), enc, cfg)
+            x = x + c
+        return x + _ffn_apply(params["ffn"], rms_norm(x, params["ln2"], eps),
+                              cfg, mesh, moe_impl)
+    if kind == "rec":
+        h, _ = rec.rglru_train(params["rec"], rms_norm(x, params["ln1"], eps),
+                               cfg)
+        x = x + h
+        return x + _ffn_apply(params["ffn"], rms_norm(x, params["ln2"], eps),
+                              cfg, mesh, moe_impl)
+    if kind == "rwkv":
+        h, _ = rwkv_mod.rwkv_time_mix(params, rms_norm(x, params["ln1"], eps),
+                                      cfg)
+        x = x + h
+        h, _ = rwkv_mod.rwkv_channel_mix(
+            params, rms_norm(x, params["ln2"], eps), cfg)
+        return x + h
+    raise ValueError(kind)
+
+
+def block_cache_spec(cfg, kind: str, batch: int, cache_len: int, dtype,
+                     *, cross_len: int = 0):
+    if kind in ("attn", "local"):
+        spec = attn.cache_spec(cfg, kind, batch, cache_len, dtype)
+    elif kind == "rec":
+        spec = rec.rglru_state_spec(cfg, batch, dtype)
+    elif kind == "rwkv":
+        spec = rwkv_mod.rwkv_state_spec(cfg, batch, dtype)
+    else:
+        raise ValueError(kind)
+    if cross_len:
+        shp = (batch, cross_len, cfg.n_kv_heads, cfg.d_head)
+        spec = dict(spec)
+        spec["cross"] = {"k": jax.ShapeDtypeStruct(shp, dtype),
+                         "v": jax.ShapeDtypeStruct(shp, dtype)}
+    return spec
+
+
+def block_prefill(params, x, cfg, kind: str, cache_len: int, *, mesh=None,
+                  moe_impl=None, enc=None):
+    eps = cfg.norm_eps
+    if kind in ("attn", "local"):
+        h, cache = attn.attn_prefill(params["attn"],
+                                     rms_norm(x, params["ln1"], eps), cfg,
+                                     kind, cache_len)
+        x = x + h
+        if "cross" in params:
+            c, cross_cache = attn.cross_attn_train(
+                params["cross"], rms_norm(x, params["ln_cross"], eps), enc, cfg)
+            x = x + c
+            cache["cross"] = cross_cache
+        x = x + _ffn_apply(params["ffn"], rms_norm(x, params["ln2"], eps),
+                           cfg, mesh, moe_impl)
+        return x, cache
+    if kind == "rec":
+        h, state = rec.rglru_train(params["rec"],
+                                   rms_norm(x, params["ln1"], eps), cfg)
+        x = x + h
+        x = x + _ffn_apply(params["ffn"], rms_norm(x, params["ln2"], eps),
+                           cfg, mesh, moe_impl)
+        return x, state
+    if kind == "rwkv":
+        xn = rms_norm(x, params["ln1"], eps)
+        h, st_att = rwkv_mod.rwkv_time_mix(params, xn, cfg)
+        x = x + h
+        xn2 = rms_norm(x, params["ln2"], eps)
+        h, st_ffn = rwkv_mod.rwkv_channel_mix(params, xn2, cfg)
+        return x + h, {**st_att, **st_ffn}
+    raise ValueError(kind)
+
+
+def block_decode(params, x, cache, pos, cfg, kind: str, *, mesh=None,
+                 moe_impl="dense"):
+    eps = cfg.norm_eps
+    if kind in ("attn", "local"):
+        h, new_kv = attn.attn_decode(params["attn"],
+                                     rms_norm(x, params["ln1"], eps),
+                                     cache, pos, cfg, kind)
+        x = x + h
+        new_cache = dict(new_kv)
+        if "cross" in params:
+            c = attn.cross_attn_decode(
+                params["cross"], rms_norm(x, params["ln_cross"], eps),
+                cache["cross"], cfg)
+            x = x + c
+            new_cache["cross"] = cache["cross"]
+        x = x + _ffn_apply(params["ffn"], rms_norm(x, params["ln2"], eps),
+                           cfg, mesh, moe_impl)
+        return x, new_cache
+    if kind == "rec":
+        h, state = rec.rglru_decode(params["rec"],
+                                    rms_norm(x, params["ln1"], eps), cache, cfg)
+        x = x + h
+        x = x + _ffn_apply(params["ffn"], rms_norm(x, params["ln2"], eps),
+                           cfg, mesh, moe_impl)
+        return x, state
+    if kind == "rwkv":
+        xn = rms_norm(x, params["ln1"], eps)
+        h, st_att = rwkv_mod.rwkv_time_mix(
+            params, xn, cfg, state={"s": cache["s"], "x_att": cache["x_att"]})
+        x = x + h
+        xn2 = rms_norm(x, params["ln2"], eps)
+        h, st_ffn = rwkv_mod.rwkv_channel_mix(
+            params, xn2, cfg, state={"x_ffn": cache["x_ffn"]})
+        return x + h, {**st_att, **st_ffn}
+    raise ValueError(kind)

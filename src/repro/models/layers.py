@@ -1,0 +1,105 @@
+"""Shared building blocks: norms, MLPs, embeddings, rotary embeddings."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "dense_init", "rms_norm", "mlp_init", "mlp_apply",
+    "rotary_cos_sin", "apply_rotary", "softcap", "cross_entropy",
+]
+
+
+def dense_init(key, shape, scale: float | None = None, dtype=jnp.float32):
+    """Truncated-normal fan-in init (LeCun-style) used for all projections."""
+    fan_in = shape[0] if len(shape) > 1 else shape[-1]
+    scale = (1.0 / np.sqrt(fan_in)) if scale is None else scale
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+def rms_norm(x, weight, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + weight.astype(jnp.float32))
+            ).astype(dt)
+
+
+# --- gated / plain MLPs -----------------------------------------------------
+
+def mlp_init(key, d_model: int, d_ff: int, kind: str, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    if kind in ("swiglu", "geglu"):
+        return {
+            "w_gate": dense_init(ks[0], (d_model, d_ff), dtype=dtype),
+            "w_up": dense_init(ks[1], (d_model, d_ff), dtype=dtype),
+            "w_down": dense_init(ks[2], (d_ff, d_model), dtype=dtype),
+        }
+    return {
+        "w_up": dense_init(ks[0], (d_model, d_ff), dtype=dtype),
+        "w_down": dense_init(ks[1], (d_ff, d_model), dtype=dtype),
+    }
+
+
+def mlp_apply(params, x, kind: str):
+    if kind in ("swiglu", "geglu"):
+        act = jax.nn.silu if kind == "swiglu" else jax.nn.gelu
+        h = act(x @ params["w_gate"]) * (x @ params["w_up"])
+        return h @ params["w_down"]
+    return jax.nn.gelu(x @ params["w_up"]) @ params["w_down"]
+
+
+# --- rotary position embeddings ----------------------------------------------
+
+def rotary_cos_sin(positions, d_rot: int, theta: float):
+    """cos/sin tables for rotary dims. positions (...,) → (..., d_rot/2)."""
+    inv = 1.0 / (theta ** (jnp.arange(0, d_rot, 2, dtype=jnp.float32) / d_rot))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rotary(x, cos, sin, fraction: float = 1.0):
+    """x (..., T, H, Dh); cos/sin (..., T, d_rot/2) broadcast over heads.
+
+    ``fraction < 1`` rotates only the first ``fraction·Dh`` dims (chatglm3's
+    2d-RoPE keeps half of the head dims position-free).
+    """
+    dh = x.shape[-1]
+    d_rot = int(dh * fraction) // 2 * 2
+    xr, xp = x[..., :d_rot], x[..., d_rot:]
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    c = cos[..., None, :].astype(x.dtype)  # add head axis; keep activation dtype
+    s = sin[..., None, :].astype(x.dtype)
+    r1 = x1 * c - x2 * s
+    r2 = x2 * c + x1 * s
+    rot = jnp.stack([r1, r2], axis=-1).reshape(xr.shape)
+    out = jnp.concatenate([rot, xp], axis=-1) if d_rot < dh else rot
+    return out.astype(x.dtype)
+
+
+def softcap(logits, cap: float):
+    if cap and cap > 0:
+        return jnp.tanh(logits / cap) * cap
+    return logits
+
+
+def cross_entropy(logits, labels, ignore_id: int = -100):
+    """Token-level CE in f32; labels == ignore_id are masked out.
+
+    The gold logit is extracted with an iota-mask reduction instead of
+    ``take_along_axis`` so a vocab-sharded logits tensor reduces with a psum
+    rather than an all-gather (the gather would materialize the full-vocab
+    logits on every device — 17 GB/device for the 4k-train shapes).
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    vocab_idx = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                         logits.ndim - 1)
+    gold = jnp.sum(jnp.where(vocab_idx == labels[..., None], logits, 0.0),
+                   axis=-1)
+    nll = lse - gold
+    mask = (labels != ignore_id).astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)

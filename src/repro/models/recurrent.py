@@ -1,0 +1,133 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma) in chunked form.
+
+TPU adaptation (DESIGN.md §4): instead of a step-per-token scan, the diagonal
+linear recurrence ``h_t = a_t ⊙ h_{t-1} + b_t`` is evaluated as an outer
+``lax.scan`` over chunks carrying the state, with an ``associative_scan``
+*within* each chunk — O(T/C) sequential depth, chunk-local memory, and no
+per-token HBM round trip. Decode is the single-step update.
+
+Block structure (Griffin Fig. 2): two branches from the input —
+  gate branch:   GeLU(W_y x)
+  value branch:  temporal causal conv (width 4) → RG-LRU
+merged multiplicatively, projected back by W_o. Gates of the RG-LRU itself are
+per-channel (diagonal) as in the public RecurrentGemma reference.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+__all__ = ["rglru_init", "rglru_train", "rglru_decode", "rglru_state_spec"]
+
+_C_RGLRU = 8.0  # Griffin's fixed recurrence sharpness constant
+
+
+def rglru_init(key, cfg, dtype=jnp.float32):
+    d, dr = cfg.d_model, cfg.d_rnn or cfg.d_model
+    ks = jax.random.split(key, 8)
+    # Λ init so that a = exp(-c·softplus(Λ)·σ(r)) spans (0.9, 0.999) roughly.
+    lam = jax.random.uniform(ks[0], (dr,), jnp.float32, 0.001, 0.1)
+    return {
+        "w_x": dense_init(ks[1], (d, dr), dtype=dtype),
+        "w_y": dense_init(ks[2], (d, dr), dtype=dtype),
+        "w_o": dense_init(ks[3], (dr, d), dtype=dtype),
+        "conv_w": dense_init(ks[4], (cfg.conv_width, dr), dtype=dtype),
+        "conv_b": jnp.zeros((dr,), dtype),
+        "gate_r_w": jnp.zeros((dr,), dtype), "gate_r_b": jnp.zeros((dr,), dtype),
+        "gate_i_w": jnp.zeros((dr,), dtype), "gate_i_b": jnp.zeros((dr,), dtype),
+        "lam": lam.astype(dtype),
+    }
+
+
+def _rglru_coeffs(params, u):
+    """Per-step decay a_t and input b_t from the conv output u (..., dr)."""
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf * params["gate_r_w"] + params["gate_r_b"])
+    i = jax.nn.sigmoid(uf * params["gate_i_w"] + params["gate_i_b"])
+    log_a = -_C_RGLRU * jax.nn.softplus(params["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * uf)
+    return a, b
+
+
+def _conv_causal(u, w, b, carry=None):
+    """Causal temporal conv, width W. u (B,T,dr); carry (B,W-1,dr) or None."""
+    width = w.shape[0]
+    if carry is None:
+        carry = jnp.zeros((u.shape[0], width - 1, u.shape[2]), u.dtype)
+    ext = jnp.concatenate([carry, u], axis=1)
+    out = sum(ext[:, width - 1 - j: ext.shape[1] - j] * w[width - 1 - j]
+              for j in range(width))
+    return out + b, ext[:, -(width - 1):]
+
+
+def _linear_scan_chunked(a, b, h0, chunk: int, unroll: bool = False):
+    """h_t = a_t ⊙ h_{t-1} + b_t. a, b (B,T,D) → h (B,T,D), h_T (B,D)."""
+    bsz, t, d = a.shape
+    c = min(chunk, t)
+    n = -(-t // c)
+    tp = n * c
+    if tp != t:
+        a = jnp.pad(a, [(0, 0), (0, tp - t), (0, 0)], constant_values=1.0)
+        b = jnp.pad(b, [(0, 0), (0, tp - t), (0, 0)])
+    ac = a.reshape(bsz, n, c, d).transpose(1, 0, 2, 3)
+    bc = b.reshape(bsz, n, c, d).transpose(1, 0, 2, 3)
+
+    def combine(lhs, rhs):
+        (a1, b1), (a2, b2) = lhs, rhs
+        return a1 * a2, b1 * a2 + b2
+
+    def chunk_step(h, ab):
+        a_k, b_k = ab                                 # (B, C, D)
+        pa, pb = jax.lax.associative_scan(combine, (a_k, b_k), axis=1)
+        h_all = pa * h[:, None, :] + pb               # (B, C, D)
+        return h_all[:, -1, :], h_all
+
+    h_last, hs = jax.lax.scan(jax.checkpoint(chunk_step), h0, (ac, bc),
+                              unroll=unroll)
+    h = hs.transpose(1, 0, 2, 3).reshape(bsz, tp, d)[:, :t]
+    return h, h_last
+
+
+def rglru_state_spec(cfg, batch: int, dtype):
+    dr = cfg.d_rnn or cfg.d_model
+    return {
+        "h": jax.ShapeDtypeStruct((batch, dr), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, cfg.conv_width - 1, dr), dtype),
+    }
+
+
+def rglru_train(params, x, cfg, state=None):
+    """x (B,T,d) → (y (B,T,d), state). ``state=None`` starts from zeros."""
+    bsz = x.shape[0]
+    dr = cfg.d_rnn or cfg.d_model
+    gate = jax.nn.gelu(x @ params["w_y"])
+    u = x @ params["w_x"]
+    conv_carry = None if state is None else state["conv"]
+    u, conv_carry = _conv_causal(u, params["conv_w"], params["conv_b"],
+                                 conv_carry)
+    a, b = _rglru_coeffs(params, u)
+    h0 = (jnp.zeros((bsz, dr), jnp.float32) if state is None
+          else state["h"].astype(jnp.float32))
+    h, h_last = _linear_scan_chunked(a, b, h0, cfg.chunk_rec,
+                                     unroll=cfg.unroll_scan)
+    y = (h.astype(x.dtype) * gate) @ params["w_o"]
+    return y, {"h": h_last, "conv": conv_carry}
+
+
+def rglru_decode(params, x, state, cfg):
+    """One-token step. x (B,1,d)."""
+    gate = jax.nn.gelu(x @ params["w_y"])[:, 0]
+    u = (x @ params["w_x"])[:, 0]                     # (B, dr)
+    ext = jnp.concatenate([state["conv"], u[:, None, :]], axis=1)
+    w = params["conv_w"]
+    width = w.shape[0]
+    u_c = sum(ext[:, width - 1 - j] * w[width - 1 - j] for j in range(width)) \
+        + params["conv_b"]
+    a, b = _rglru_coeffs(params, u_c)
+    h = a * state["h"].astype(jnp.float32) + b
+    y = (h.astype(x.dtype) * gate) @ params["w_o"]
+    return y[:, None, :], {"h": h, "conv": ext[:, 1:]}

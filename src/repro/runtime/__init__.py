@@ -1,0 +1,2 @@
+from .fault_tolerance import (ElasticMesh, HeartbeatMonitor, StepClock,
+                              StragglerMitigator)

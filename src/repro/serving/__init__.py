@@ -1,0 +1,4 @@
+from .request import SliceRequest
+from .sdla import SDLA
+from .admission import SESM, SliceDecision
+from .engine import EdgeServingEngine

@@ -1,0 +1,61 @@
+"""Semantic Edge Slicing Module (SESM) — the Near-real-time RIC xApp.
+
+Runs the SF-ESP greedy (core.greedy, optionally via the Pallas inner kernel)
+over the current request set + edge status and emits the three-fold output of
+paper Section III-B: (i) admitted tasks, (ii) per-task compression level,
+(iii) per-task resource slices. Re-slicing is full (new and running tasks are
+equally considered — already-running tasks may be evicted, Section III-C).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import ResourcePool, check_solution, solve
+from .request import SliceRequest
+from .sdla import SDLA
+
+__all__ = ["SliceDecision", "SESM"]
+
+
+@dataclasses.dataclass
+class SliceDecision:
+    request: SliceRequest
+    admitted: bool
+    z: float
+    alloc: dict[str, float]
+    expected_latency_s: float
+    expected_accuracy: float
+
+
+class SESM:
+    def __init__(self, pool: ResourcePool, sdla: SDLA | None = None,
+                 backend: str = "numpy", inner: str = "jnp"):
+        self.pool = pool
+        self.sdla = sdla or SDLA()
+        self.backend = backend
+        self.inner = inner
+        self.algorithm = {"semantic": True, "flexible": True}
+
+    def slice(self, requests: list[SliceRequest]) -> list[SliceDecision]:
+        if not requests:
+            return []
+        inst = self.sdla.build_instance(requests, self.pool)
+        sol = solve(inst, backend=self.backend, inner=self.inner,
+                    **self.algorithm)
+        report = check_solution(inst, sol, lat_params=self.sdla.lat_params)
+        out = []
+        for i, r in enumerate(requests):
+            alloc = {n: float(sol.alloc[i, k])
+                     for k, n in enumerate(self.pool.names)}
+            out.append(SliceDecision(
+                request=r,
+                admitted=bool(sol.admitted[i]),
+                z=float(sol.z[i]),
+                alloc=alloc,
+                expected_latency_s=float(report["latency"][i]),
+                expected_accuracy=float(report["accuracy"][i]),
+            ))
+        return out

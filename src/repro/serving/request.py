@@ -1,0 +1,32 @@
+"""O-RAN Slice Requests (paper Section III-B).
+
+An OSR = Task Description (TD) + Task Requirements (TR):
+  TD: DL service, DL model, target object classes
+  TR: max latency, min accuracy, number of UEs, jobs/s per UE
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+
+__all__ = ["SliceRequest"]
+
+_ids = itertools.count()
+
+
+@dataclasses.dataclass
+class SliceRequest:
+    # --- Task Description ---
+    service: str                  # e.g. "object-recognition", "lm-serving"
+    model: str                    # DL model name (arch id or CV model)
+    app_class: str                # semantic application (core.semantics name)
+    # --- Task Requirements ---
+    max_latency_s: float
+    min_accuracy: float
+    n_ues: int = 1
+    jobs_per_sec: float = 5.0
+    # --- stream characteristics (filled by the SDLA if left None) ---
+    bits_per_job: float | None = None      # Mbit
+    gpu_time_per_job: float | None = None  # s on one reference accelerator
+    request_id: int = dataclasses.field(default_factory=lambda: next(_ids))

@@ -1,0 +1,58 @@
+"""Semantic Deep Learning Analyzer (SDLA) — the Non-real-time RIC rApp.
+
+Builds the accuracy function a_τ(z) and latency function l_τ(z, s) for each
+Task Description (paper Section III-B, Steps 1-2): accuracy from the semantic
+application registry (representative-dataset curves), latency from the
+calibrated Colosseum regression. Functions are cached per TD and refreshed
+with radio/edge status updates (Step 7) via the ``latency_scale`` knob.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import ResourcePool, TaskSet, build_instance, semantics
+from repro.core.latency import LatencyParams
+from .request import SliceRequest
+
+__all__ = ["SDLA"]
+
+_DEFAULT_BITS = {"detection": 0.8, "segmentation": 0.8, "lm": 0.02}
+_DEFAULT_GPU_TIME = {"detection": 0.125, "segmentation": 0.042, "lm": 0.060}
+
+
+class SDLA:
+    def __init__(self, lat_params: LatencyParams | None = None):
+        self.lat_params = lat_params or LatencyParams()
+        self.latency_scale = 1.0            # refined from radio status (Step 7)
+
+    def update_radio_status(self, scale: float):
+        """Step 7: refine the latency function from observed channel state."""
+        self.latency_scale = scale
+
+    def task_set(self, requests: list[SliceRequest]) -> TaskSet:
+        apps, accs, lats, bits, rates, gpu_t, ues = [], [], [], [], [], [], []
+        for r in requests:
+            app_idx = semantics.APP_INDEX[r.app_class]
+            service = semantics.APPS[app_idx].service
+            apps.append(app_idx)
+            accs.append(r.min_accuracy)
+            lats.append(r.max_latency_s)
+            bits.append(r.bits_per_job
+                        if r.bits_per_job is not None
+                        else _DEFAULT_BITS.get(service, 0.8))
+            rates.append(r.jobs_per_sec * r.n_ues)
+            gpu_t.append(r.gpu_time_per_job
+                         if r.gpu_time_per_job is not None
+                         else _DEFAULT_GPU_TIME.get(service, 0.06))
+            ues.append(r.n_ues)
+        return TaskSet(
+            app_idx=np.array(apps), min_accuracy=np.array(accs),
+            max_latency=np.array(lats) / self.latency_scale,
+            bits_per_job=np.array(bits), jobs_per_sec=np.array(rates),
+            gpu_time_per_job=np.array(gpu_t), n_ues=np.array(ues),
+        )
+
+    def build_instance(self, requests: list[SliceRequest], pool: ResourcePool):
+        return build_instance(pool, self.task_set(requests),
+                              lat_params=self.lat_params)

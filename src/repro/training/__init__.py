@@ -1,0 +1,2 @@
+from .optimizer import OptConfig, make_train_step, opt_init, opt_update
+from .train_loop import TrainLoopConfig, train

@@ -1,0 +1,173 @@
+"""AdamW + global-norm clipping + warmup-cosine schedule, pure JAX.
+
+Optimizer moments are kept in fp32 regardless of parameter dtype (bf16 params
+get fp32-accurate updates). Under the production mesh the moments are
+additionally ZeRO-1 sharded over the data axes (see
+``distributed.sharding.param_shardings(extra_batch_dim=True)``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["OptConfig", "opt_init", "opt_update", "lr_schedule",
+           "global_norm", "make_train_step"]
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def lr_schedule(opt: OptConfig, step):
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(opt.warmup_steps, 1)
+    t = (step - opt.warmup_steps) / jnp.maximum(
+        opt.total_steps - opt.warmup_steps, 1)
+    t = jnp.clip(t, 0.0, 1.0)
+    cos = opt.min_lr_ratio + (1 - opt.min_lr_ratio) * 0.5 * (
+        1 + jnp.cos(jnp.pi * t))
+    return opt.lr * jnp.where(step < opt.warmup_steps, warm, cos)
+
+
+def global_norm(tree):
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def opt_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def opt_update(opt: OptConfig, params, grads, state, *, zero_shardings=None,
+               out_shardings=None):
+    """AdamW update. With ``zero_shardings`` (ZeRO-1): params are resharded
+    (bf16, cheap) into the optimizer-state layout, all fp32 math happens on
+    the 1/N_data shard, and only the bf16 result is gathered back to the
+    compute layout (``out_shardings``) — no full-size fp32 transient ever
+    materializes."""
+    step = state["step"] + 1
+    lr = lr_schedule(opt, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, opt.clip_norm / jnp.maximum(gnorm, 1e-12))
+
+    def upd(p, g, m, v, zsh, osh):
+        if zsh is not None:
+            p = jax.lax.with_sharding_constraint(p, zsh)
+            g = jax.lax.with_sharding_constraint(g, zsh)
+        g = g.astype(jnp.float32) * scale
+        m = opt.b1 * m + (1 - opt.b1) * g
+        v = opt.b2 * v + (1 - opt.b2) * g * g
+        mhat = m / (1 - opt.b1 ** step.astype(jnp.float32))
+        vhat = v / (1 - opt.b2 ** step.astype(jnp.float32))
+        delta = mhat / (jnp.sqrt(vhat) + opt.eps) \
+            + opt.weight_decay * p.astype(jnp.float32)
+        p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        if zsh is not None:
+            # pin the bf16 cast at the ZeRO layout BEFORE gathering, so the
+            # cross-data all-gather moves bf16 (not the f32 update); the
+            # optimization barrier stops GSPMD from hoisting the reshard
+            # above the convert.
+            p = jax.lax.with_sharding_constraint(p, zsh)
+            p = jax.lax.optimization_barrier(p)
+        if osh is not None:
+            p = jax.lax.with_sharding_constraint(p, osh)
+        return p, m, v
+
+    # explicit flatten/unflatten: the params pytree may itself contain tuples
+    # (e.g. remainder-layer stacks), so tuple-is_leaf tricks are unsafe.
+    leaves_p, tdef = jax.tree_util.tree_flatten(params)
+    n = len(leaves_p)
+    zsh_l = (jax.tree_util.tree_leaves(zero_shardings)
+             if zero_shardings is not None else [None] * n)
+    osh_l = (jax.tree_util.tree_leaves(out_shardings)
+             if out_shardings is not None else [None] * n)
+    leaves = [upd(p, g, m, v, zsh, osh) for p, g, m, v, zsh, osh in zip(
+        leaves_p, jax.tree_util.tree_leaves(grads),
+        jax.tree_util.tree_leaves(state["m"]),
+        jax.tree_util.tree_leaves(state["v"]), zsh_l, osh_l)]
+    params_new = jax.tree_util.tree_unflatten(tdef, [o[0] for o in leaves])
+    m_new = jax.tree_util.tree_unflatten(tdef, [o[1] for o in leaves])
+    v_new = jax.tree_util.tree_unflatten(tdef, [o[2] for o in leaves])
+    return params_new, {"m": m_new, "v": v_new, "step": step}, \
+        {"lr": lr, "grad_norm": gnorm}
+
+
+def make_train_step(cfg, opt: OptConfig, *, mesh=None, moe_impl=None,
+                    n_microbatches: int = 1, grad_shardings=None,
+                    param_out_shardings=None, accum_dtype=jnp.float32):
+    """Build the jittable train step (loss → grads → clip → AdamW).
+
+    ``n_microbatches > 1`` enables gradient accumulation: the global batch is
+    scanned in micro-slices so the per-step activation footprint (layer-scan
+    residual checkpoints) shrinks by the microbatch count — the standard
+    production lever for fitting large global batches in HBM. Accumulation is
+    fp32.
+
+    ``grad_shardings`` (optional pytree of NamedSharding): ZeRO-2 — constrains
+    the fp32 gradient accumulator to the optimizer-state sharding (extra data
+    axis), so each microbatch's gradients reduce-scatter into the ZeRO layout
+    instead of materializing a full model-sharded fp32 copy per device.
+    """
+    from repro.models import loss_fn
+    grad_fn = jax.value_and_grad(
+        functools.partial(loss_fn, cfg=cfg, mesh=mesh, moe_impl=moe_impl),
+        has_aux=True)
+
+    def _constrain_grads(g):
+        if grad_shardings is None:
+            return g
+        return jax.tree.map(jax.lax.with_sharding_constraint, g,
+                            grad_shardings)
+
+    def train_step(params, opt_state, batch):
+        if n_microbatches == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            grads = _constrain_grads(grads)
+        else:
+            m = n_microbatches
+
+            def split(x):
+                return x.reshape((m, x.shape[0] // m) + x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+
+            def acc_step(gacc, mb):
+                (l, _), g = grad_fn(params, mb)
+                # ZeRO-2 intent: reshard the microbatch gradient before the
+                # accumulate. (GSPMD under this XLA version keeps the carry at
+                # the producer sharding regardless — see EXPERIMENTS.md §Perf;
+                # the accum_dtype lever below is the fallback that fits.)
+                g = _constrain_grads(g)
+                gacc = jax.tree.map(
+                    lambda a, gg: a + gg.astype(accum_dtype), gacc, g)
+                return gacc, l
+
+            gacc0 = _constrain_grads(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), params))
+            grads, losses = jax.lax.scan(acc_step, gacc0, micro)
+            grads = jax.tree.map(lambda g: (g.astype(jnp.float32) / m), grads)
+            loss = losses.mean()
+            metrics = {"loss": loss}
+        params, opt_state, opt_metrics = opt_update(
+            opt, params, grads, opt_state, zero_shardings=grad_shardings,
+            out_shardings=param_out_shardings)
+        return params, opt_state, {**metrics, **opt_metrics}
+
+    return train_step

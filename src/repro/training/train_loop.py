@@ -1,0 +1,92 @@
+"""Training loop with checkpoint/restart, heartbeats, straggler tracking.
+
+The loop is host-driven: build mesh + sharded step fn, restore the latest
+checkpoint if any (fault-tolerant restart), then step the deterministic data
+pipeline from the restored step. Failure injection hooks exercise the
+restart path in tests/examples.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.data.pipeline import DataConfig, TokenStream
+from repro.models import init_params
+from repro.runtime.fault_tolerance import (HeartbeatMonitor,
+                                           StragglerMitigator)
+from .optimizer import OptConfig, make_train_step, opt_init
+
+__all__ = ["TrainLoopConfig", "train"]
+
+
+@dataclasses.dataclass
+class TrainLoopConfig:
+    total_steps: int = 100
+    log_every: int = 10
+    checkpoint_every: int = 50
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+    seed: int = 0
+    global_batch: int = 8
+    seq_len: int = 128
+    n_microbatches: int = 1
+
+
+def train(cfg, loop: TrainLoopConfig, *, mesh=None, moe_impl=None,
+          opt: OptConfig | None = None,
+          on_step: Callable[[int, dict], None] | None = None,
+          inject_failure_at: int | None = None) -> dict:
+    """Run (or resume) training; returns final metrics history."""
+    opt = opt or OptConfig(total_steps=loop.total_steps)
+    key = jax.random.PRNGKey(loop.seed)
+    params = init_params(key, cfg)
+    opt_state = opt_init(params)
+
+    ckpt = Checkpointer(loop.checkpoint_dir)
+    start_step = 0
+    restored = ckpt.restore_latest({"params": params, "opt": opt_state})
+    if restored is not None:
+        start_step, state = restored
+        params, opt_state = state["params"], state["opt"]
+        print(f"[train] restored checkpoint at step {start_step}")
+
+    data = TokenStream(DataConfig(
+        global_batch=loop.global_batch, seq_len=loop.seq_len,
+        vocab_size=cfg.vocab_size, seed=loop.seed))
+    step_fn = jax.jit(make_train_step(
+        cfg, opt, mesh=mesh, moe_impl=moe_impl,
+        n_microbatches=loop.n_microbatches), donate_argnums=(0, 1))
+
+    hb = HeartbeatMonitor(n_hosts=1)
+    strag = StragglerMitigator(n_hosts=1)
+    history = []
+    for step in range(start_step, loop.total_steps):
+        if inject_failure_at is not None and step == inject_failure_at:
+            raise RuntimeError(f"injected failure at step {step}")
+        t0 = time.time()
+        batch = {k: jax.numpy.asarray(v) for k, v in data.batch(step).items()}
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        dt = time.time() - t0
+        hb.beat(0, step)
+        strag.record(0, dt)
+        metrics = {k: float(v) for k, v in metrics.items()}
+        metrics["step_time_s"] = dt
+        history.append({"step": step, **metrics})
+        if on_step:
+            on_step(step, metrics)
+        if step % loop.log_every == 0:
+            print(f"[train] step {step:5d} loss {metrics['loss']:.4f} "
+                  f"lr {metrics['lr']:.2e} gnorm {metrics['grad_norm']:.3f} "
+                  f"({dt:.2f}s)")
+        if step > 0 and step % loop.checkpoint_every == 0:
+            ckpt.save(step + 1, {"params": params, "opt": opt_state})
+    ckpt.save(loop.total_steps, {"params": params, "opt": opt_state},
+              blocking=True)
+    return {"history": history, "params": params,
+            "final_loss": history[-1]["loss"] if history else None,
+            "stragglers": strag.flagged}

@@ -1,0 +1,54 @@
+"""Baseline algorithms reproduce the paper's qualitative comparison story."""
+import numpy as np
+
+from repro.core import build_instance, check_solution, run_algorithm, scenarios
+
+
+def _inst(n=30, acc="med", lat="high", m=2, seed=0):
+    return build_instance(scenarios.numerical_pool(m),
+                          scenarios.numerical_tasks(n, acc, lat, seed=seed))
+
+
+def test_all_respect_capacity():
+    inst = _inst()
+    for name in ("sem-o-ran", "si-edge", "minres-sem", "flexres-n-sem",
+                 "highcomp", "highres"):
+        sol = run_algorithm(name, inst)
+        assert check_solution(inst, sol)["capacity_ok"], name
+
+
+def test_si_edge_zero_at_high_accuracy():
+    # Fig. 6: at the "high" thresholds only semantic algorithms admit tasks —
+    # the agnostic All curves cannot reach 0.55 mAP / 0.70 mIoU.
+    inst = _inst(acc="high")
+    assert run_algorithm("si-edge", inst).num_allocated == 0
+    assert run_algorithm("flexres-n-sem", inst).num_allocated == 0
+    assert run_algorithm("sem-o-ran", inst).num_allocated > 0
+    assert run_algorithm("minres-sem", inst).num_allocated > 0
+
+
+def test_agnostic_allocates_but_fails_semantically():
+    # Fig. 7 "Bags": FlexRes-N-SEM over-compresses (All curve) → allocated
+    # tasks miss their true per-class accuracy bound.
+    inst = _inst(n=40, acc="med", lat="high", seed=2)
+    sol = run_algorithm("flexres-n-sem", inst)
+    assert sol.num_satisfied < sol.num_allocated
+
+
+def test_requirement_agnostic_baselines_fail_requirements():
+    inst = _inst(n=30, acc="med", lat="low", seed=1)
+    hc = run_algorithm("highcomp", inst)
+    hr = run_algorithm("highres", inst)
+    assert hc.num_satisfied < max(hc.num_allocated, 1)
+    # HighRes admits at most 5 tasks (20% static slices)
+    assert hr.num_allocated <= 5
+
+
+def test_sem_o_ran_dominates_satisfied():
+    for seed in range(4):
+        for acc in ("low", "med", "high"):
+            inst = _inst(n=40, acc=acc, seed=seed)
+            sem = run_algorithm("sem-o-ran", inst).num_satisfied
+            for other in ("si-edge", "highcomp", "highres"):
+                assert sem >= run_algorithm(other, inst).num_satisfied, \
+                    (acc, seed, other)

@@ -1,0 +1,34 @@
+"""Heartbeat / straggler / elastic-mesh control plane."""
+from repro.runtime import (ElasticMesh, HeartbeatMonitor, StragglerMitigator)
+
+
+def test_heartbeat_detects_dead_host():
+    hb = HeartbeatMonitor(n_hosts=4, timeout_steps=3)
+    for step in range(1, 6):
+        for h in (0, 1, 2):                  # host 3 goes silent
+            hb.beat(h, step)
+    assert hb.dead_hosts() == [3]
+    assert hb.alive_hosts() == [0, 1, 2]
+
+
+def test_straggler_flagging():
+    s = StragglerMitigator(n_hosts=2, threshold=2.0)
+    for _ in range(5):
+        s.record(0, 1.0)
+        s.record(1, 1.0)
+    assert not s.record(0, 1.1)
+    assert s.record(1, 5.0)                  # 5x slower than its EWMA
+    s.record(1, 5.0), s.record(1, 5.0)
+    assert 1 in s.chronic(min_flags=2)
+
+
+def test_elastic_mesh_replan():
+    em = ElasticMesh(model_degree=16, chips_per_host=4)
+    full = em.plan(alive_hosts=64, global_batch=256)
+    assert full["mesh_shape"] == (16, 16)
+    assert full["chips_idle"] == 0
+    # lose 4 hosts → data axis shrinks to a divisor of the global batch
+    degraded = em.plan(alive_hosts=60, global_batch=256)
+    d, m = degraded["mesh_shape"]
+    assert m == 16 and 256 % d == 0
+    assert degraded["chips_used"] <= 60 * 4

@@ -1,0 +1,53 @@
+"""Loop-aware HLO parser vs fully-unrolled oracle compiles.
+
+Unrolled HLO has no while loops, so raw per-line accounting is exact; the
+scanned compile must agree after trip-count multiplication.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.models import init_params, loss_fn
+
+
+def _flops(cfg_mod):
+    params = jax.eval_shape(
+        lambda: init_params(jax.random.PRNGKey(0), cfg_mod))
+    batch = {"tokens": jax.ShapeDtypeStruct((2, 64), jax.numpy.int32),
+             "labels": jax.ShapeDtypeStruct((2, 64), jax.numpy.int32)}
+    if cfg_mod.is_encdec:
+        batch["enc_input"] = jax.ShapeDtypeStruct((2, 32, cfg_mod.d_model),
+                                                  jax.numpy.float32)
+    def fn(p, b):
+        return loss_fn(p, b, cfg_mod)[0]
+    compiled = jax.jit(fn).lower(params, batch).compile()
+    return analyze_hlo(compiled.as_text())
+
+
+@pytest.mark.parametrize("arch", ["h2o-danube-3-4b", "recurrentgemma-9b",
+                                  "rwkv6-1.6b"])
+def test_scan_matches_unrolled(arch):
+    base = get_smoke_config(arch)
+    cfg_scan = dataclasses.replace(base, n_layers=base.pattern_len * 3,
+                                   remat=False)
+    cfg_unroll = dataclasses.replace(cfg_scan, unroll_scan=True)
+    s = _flops(cfg_scan)
+    u = _flops(cfg_unroll)
+    assert u.dot_flops > 0
+    rel = abs(s.dot_flops - u.dot_flops) / u.dot_flops
+    assert rel < 0.05, (s.dot_flops, u.dot_flops)
+
+
+def test_parser_finds_trip_counts():
+    cfg = dataclasses.replace(get_smoke_config("granite-34b"), n_layers=6,
+                              remat=False)
+    s1 = _flops(cfg)
+    cfg2 = dataclasses.replace(cfg, n_layers=12)
+    s2 = _flops(cfg2)
+    # doubling depth ≈ doubles in-loop dot flops (embed/head constant)
+    ratio = s2.dot_flops / s1.dot_flops
+    assert 1.5 < ratio < 2.3, ratio

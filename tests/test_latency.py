@@ -1,0 +1,54 @@
+"""Latency model: Fig. 2-right anchors + structural properties."""
+import numpy as np
+import pytest
+
+from repro.core.latency import LatencyParams, latency
+
+
+P = LatencyParams()
+
+
+def _lat(rbg, gpu, z=1.0, lam=10.0):
+    return latency(P, 0.8, lam, 0.125, z, np.array([float(rbg), float(gpu)]))
+
+
+def test_fig2_right_flexibility_anchor():
+    # the paper's Section II example: (6,3) and (10,2) both ≈ 0.4 s
+    assert _lat(6, 3) == pytest.approx(0.40, abs=0.01)
+    assert _lat(10, 2) == pytest.approx(0.40, abs=0.01)
+
+
+def test_monotone_in_resources():
+    for rbg in range(4, 15):
+        assert _lat(rbg + 1, 3) <= _lat(rbg, 3) + 1e-9
+    for gpu in range(2, 20):
+        assert _lat(10, gpu + 1) <= _lat(10, gpu) + 1e-9
+
+
+def test_monotone_in_z():
+    zs = np.linspace(0.05, 1.0, 30)
+    lats = [_lat(8, 4, z=z) for z in zs]
+    assert all(np.diff(lats) >= -1e-9)
+
+
+def test_saturated_queue_infeasible():
+    # 1 RBG at 10 jobs/s of 0.8 Mbit exceeds uplink capacity → ∞
+    assert np.isinf(_lat(1, 20, z=1.0, lam=30.0))
+
+
+def test_zero_allocation_infeasible():
+    assert np.isinf(_lat(0, 3))
+    assert np.isinf(_lat(5, 0))
+
+
+def test_low_fps_increases_latency():
+    # Section V-C: lower fps → higher scheduling-request latency
+    assert _lat(10, 4, lam=1.0) > _lat(10, 4, lam=10.0)
+
+
+def test_four_resource_ram_gate():
+    a_ok = np.array([8.0, 4.0, 4.0, 8.0])
+    a_bad = np.array([8.0, 4.0, 4.0, 2.0])   # below the 4 GB footprint
+    l_ok = latency(P, 0.8, 5.0, 0.125, 1.0, a_ok)
+    l_bad = latency(P, 0.8, 5.0, 0.125, 1.0, a_bad)
+    assert np.isfinite(l_ok) and np.isinf(l_bad)

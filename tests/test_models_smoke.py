@@ -1,0 +1,83 @@
+"""Per-architecture smoke tests: reduced config, forward/train step on CPU,
+output shapes + no NaNs (assignment deliverable f)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config, get_smoke_config
+from repro.models import forward_train, init_params, loss_fn
+from repro.training.optimizer import OptConfig, make_train_step, opt_init
+
+
+def _batch(cfg, b=2, t=32, seed=1):
+    k = jax.random.PRNGKey(seed)
+    batch = {"tokens": jax.random.randint(k, (b, t), 0, cfg.vocab_size),
+             "labels": jax.random.randint(k, (b, t), 0, cfg.vocab_size)}
+    if cfg.is_encdec:
+        batch["enc_input"] = jax.random.normal(k, (b, 16, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", list(ARCHS))
+def test_forward_shapes_and_finite(arch):
+    cfg = get_smoke_config(arch)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    batch = _batch(cfg)
+    logits = forward_train(params, batch, cfg)
+    assert logits.shape == (2, 32, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+
+
+@pytest.mark.parametrize("arch", list(ARCHS))
+def test_one_train_step(arch):
+    cfg = get_smoke_config(arch)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    opt_state = opt_init(params)
+    step = jax.jit(make_train_step(cfg, OptConfig(warmup_steps=1)))
+    p2, o2, metrics = step(params, opt_state, _batch(cfg))
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    # params actually changed
+    l0 = jax.tree_util.tree_leaves(params)[0]
+    l1 = jax.tree_util.tree_leaves(p2)[0]
+    assert not np.allclose(np.asarray(l0), np.asarray(l1))
+
+
+@pytest.mark.parametrize("arch", list(ARCHS))
+def test_full_config_exact_assignment(arch):
+    """The FULL configs carry the exact assigned figures (exercised only via
+    dry-run; here we assert the numbers)."""
+    cfg = get_config(arch)
+    expected = {
+        "granite-34b": (88, 6144, 48, 1, 24576, 49152),
+        "gemma3-12b": (48, 3840, 16, 8, 15360, 262144),
+        "h2o-danube-3-4b": (24, 3840, 32, 8, 10240, 32000),
+        "chatglm3-6b": (28, 4096, 32, 2, 13696, 65024),
+        "mixtral-8x7b": (32, 4096, 32, 8, 14336, 32000),
+        "qwen3-moe-235b-a22b": (94, 4096, 64, 4, 1536, 151936),
+        "rwkv6-1.6b": (24, 2048, 32, 32, 7168, 65536),
+        "chameleon-34b": (48, 8192, 64, 8, 22016, 65536),
+        "recurrentgemma-9b": (38, 4096, 16, 1, 12288, 256000),
+        "whisper-tiny": (4, 384, 6, 6, 1536, 51865),
+    }[arch]
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_ff,
+           cfg.vocab_size)
+    assert got == expected
+    if arch == "mixtral-8x7b":
+        assert (cfg.n_experts, cfg.top_k) == (8, 2)
+    if arch == "qwen3-moe-235b-a22b":
+        assert (cfg.n_experts, cfg.top_k) == (128, 8)
+
+
+def test_param_counts_sane():
+    approx = {
+        "granite-34b": 34e9, "gemma3-12b": 12e9, "h2o-danube-3-4b": 4e9,
+        "chatglm3-6b": 6e9, "mixtral-8x7b": 47e9,
+        "qwen3-moe-235b-a22b": 235e9, "rwkv6-1.6b": 1.6e9,
+        "chameleon-34b": 34e9, "recurrentgemma-9b": 9e9,
+        "whisper-tiny": 39e6,
+    }
+    for arch, want in approx.items():
+        n = get_config(arch).param_count()
+        assert 0.5 * want < n < 1.8 * want, (arch, n, want)

@@ -1,0 +1,78 @@
+"""Hypothesis property tests on SF-ESP invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (ResourcePool, TaskSet, build_instance, check_solution,
+                        primal_gradient, semantics, solve_greedy)
+
+N_APPS = len(semantics.APPS)
+
+
+@st.composite
+def instances(draw):
+    m = draw(st.sampled_from([2, 4]))
+    caps = [draw(st.integers(3, 12)) for _ in range(m)]
+    if m == 4:
+        caps[2] = max(caps[2], 4)
+        caps[3] = max(caps[3], 8)   # RAM gate needs ≥ 4 GB levels
+    cap = np.array(caps, float)
+    pool = ResourcePool(
+        names=tuple(f"r{k}" for k in range(m)), capacity=cap,
+        price=1.0 / cap,
+        levels=tuple(np.arange(1.0, c + 1) for c in cap))
+    n = draw(st.integers(1, 12))
+    app = np.array([draw(st.integers(0, N_APPS - 1)) for _ in range(n)])
+    acc = np.array([draw(st.sampled_from([0.2, 0.35, 0.5, 0.55, 0.7]))
+                    for _ in range(n)])
+    lat = np.array([draw(st.sampled_from([0.2, 0.4, 0.7, 1.5]))
+                    for _ in range(n)])
+    jobs = np.array([draw(st.sampled_from([1.0, 3.0, 5.0, 10.0]))
+                     for _ in range(n)])
+    tasks = TaskSet(app_idx=app, min_accuracy=acc, max_latency=lat,
+                    bits_per_job=np.full(n, 0.8), jobs_per_sec=jobs,
+                    gpu_time_per_job=np.full(n, 0.1),
+                    n_ues=np.ones(n, np.int64))
+    return build_instance(pool, tasks)
+
+
+@given(instances())
+@settings(max_examples=30, deadline=None)
+def test_greedy_always_feasible(inst):
+    sol = solve_greedy(inst)
+    rep = check_solution(inst, sol)
+    assert rep["valid"]
+    # SEM-O-RAN is requirement-aware: every admitted task is satisfied
+    assert sol.num_allocated == sol.num_satisfied
+    # z in (0, 1]
+    assert (sol.z > 0).all() and (sol.z <= 1.0).all()
+
+
+@given(instances())
+@settings(max_examples=30, deadline=None)
+def test_greedy_flexible_vs_minres_objective(inst):
+    flex = solve_greedy(inst, flexible=True)
+    minr = solve_greedy(inst, flexible=False)
+    # both feasible; flexible never admits fewer tasks in aggregate value
+    assert check_solution(inst, flex)["capacity_ok"]
+    assert check_solution(inst, minr)["capacity_ok"]
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=40, deadline=None)
+def test_primal_gradient_positive_and_branching(seed):
+    rng = np.random.default_rng(seed)
+    m = rng.integers(2, 5)
+    cap = rng.integers(4, 20, m).astype(float)
+    grid = np.stack([rng.integers(1, c + 1, 17).astype(float) for c in cap],
+                    axis=1)
+    price = 1.0 / cap
+    pg0 = primal_gradient(grid, price, cap, np.zeros(m))
+    value = (price * (cap - grid)).sum(axis=1)
+    assert (pg0 >= 0).all()
+    assert (pg0[value > 0] > 0).all()   # zero only when all capacity consumed
+    occ = rng.integers(0, 3, m).astype(float)
+    pg1 = primal_gradient(grid, price, cap, occ)
+    assert np.isfinite(pg1).all()
+    # uniform branch: scale-invariance under simultaneous p scaling
+    pg_scaled = primal_gradient(grid, price * 7.0, cap, np.zeros(m))
+    assert np.allclose(pg_scaled, pg0 * 7.0)

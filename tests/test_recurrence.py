@@ -1,0 +1,106 @@
+"""Chunked linear recurrences vs naive per-step oracles, and the chunked
+flash attention vs plain softmax attention."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import flash_attention
+from repro.models.recurrent import _linear_scan_chunked
+from repro.models.rwkv import _wkv_chunked
+
+
+def naive_linear_scan(a, b, h0):
+    hs = []
+    h = h0
+    for t in range(a.shape[1]):
+        h = a[:, t] * h + b[:, t]
+        hs.append(h)
+    return jnp.stack(hs, axis=1), h
+
+
+@pytest.mark.parametrize("t,chunk", [(7, 4), (16, 4), (33, 8), (12, 32)])
+def test_rglru_chunked_vs_naive(t, chunk, rng):
+    B, D = 2, 5
+    a = jnp.asarray(rng.uniform(0.3, 0.999, (B, t, D)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((B, t, D)), jnp.float32)
+    h0 = jnp.asarray(rng.standard_normal((B, D)), jnp.float32)
+    got, got_last = _linear_scan_chunked(a, b, h0, chunk)
+    want, want_last = naive_linear_scan(a, b, h0)
+    assert np.allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+    assert np.allclose(np.asarray(got_last), np.asarray(want_last), atol=1e-5)
+
+
+def naive_wkv(r, k, v, logw, u, s0):
+    B, T, H, N = r.shape
+    s = np.asarray(s0, np.float64).copy()
+    outs = np.zeros((B, T, H, N))
+    r, k, v, w = (np.asarray(x, np.float64) for x in (r, k, v, np.exp(logw)))
+    un = np.asarray(u, np.float64)
+    for t in range(T):
+        for b_ in range(B):
+            for h_ in range(H):
+                kv = np.outer(k[b_, t, h_], v[b_, t, h_])
+                wkv = s[b_, h_] + un[h_][:, None] * kv
+                outs[b_, t, h_] = r[b_, t, h_] @ wkv
+                s[b_, h_] = w[b_, t, h_][:, None] * s[b_, h_] + kv
+    return outs, s
+
+
+@pytest.mark.parametrize("t,chunk", [(6, 3), (16, 4), (9, 16)])
+def test_wkv_chunked_vs_naive(t, chunk, rng):
+    B, H, N = 1, 2, 4
+    r = jnp.asarray(rng.standard_normal((B, t, H, N)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, t, H, N)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, t, H, N)), jnp.float32)
+    logw = jnp.asarray(-np.exp(rng.uniform(-4, 0, (B, t, H, N))), jnp.float32)
+    u = jnp.asarray(rng.standard_normal((H, N)), jnp.float32)
+    s0 = jnp.asarray(rng.standard_normal((B, H, N, N)), jnp.float32)
+    got, got_s = _wkv_chunked(r, k, v, logw, u, s0, chunk)
+    want, want_s = naive_wkv(r, k, v, logw, u, s0)
+    assert np.allclose(np.asarray(got), want, atol=1e-4)
+    assert np.allclose(np.asarray(got_s), want_s, atol=1e-4)
+
+
+def naive_attention(q, k, v, causal, window=None):
+    B, Tq, Hq, Dh = q.shape
+    Hkv = k.shape[2]
+    g = Hq // Hkv
+    qh = q.reshape(B, Tq, Hkv, g, Dh)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qh * Dh ** -0.5, k)
+    Tk = k.shape[1]
+    mask = jnp.ones((Tq, Tk), bool)
+    if causal:
+        mask &= jnp.arange(Tk)[None, :] <= jnp.arange(Tq)[:, None]
+    if window is not None:
+        mask &= jnp.arange(Tk)[None, :] > jnp.arange(Tq)[:, None] - window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v)
+    return o.reshape(B, Tq, Hq, Dh)
+
+
+@pytest.mark.parametrize("tq,ck,cq", [(16, 8, 8), (33, 16, 8), (24, 32, 32)])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (4, 2), (4, 1)])
+def test_flash_full_vs_naive(tq, cq, ck, causal, hq, hkv, rng):
+    B, Dh = 2, 8
+    q = jnp.asarray(rng.standard_normal((B, tq, hq, Dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, tq, hkv, Dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, tq, hkv, Dh)), jnp.float32)
+    got = flash_attention(q, k, v, causal=causal, window=None, chunk_q=cq,
+                          chunk_k=ck)
+    want = naive_attention(q, k, v, causal)
+    assert np.allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+@pytest.mark.parametrize("tq,w,cq", [(32, 8, 8), (40, 12, 16), (16, 32, 8)])
+def test_flash_windowed_vs_naive(tq, w, cq, rng):
+    B, H, Dh = 1, 2, 8
+    q = jnp.asarray(rng.standard_normal((B, tq, H, Dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, tq, H, Dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, tq, H, Dh)), jnp.float32)
+    got = flash_attention(q, k, v, causal=True, window=w, chunk_q=cq,
+                          chunk_k=cq)
+    want = naive_attention(q, k, v, True, window=w)
+    assert np.allclose(np.asarray(got), np.asarray(want), atol=2e-5)

@@ -1,0 +1,67 @@
+"""Semantic accuracy curves: paper anchors + structural properties."""
+import numpy as np
+import pytest
+
+from repro.core import semantics as S
+
+
+def test_paper_anchor_coco_all():
+    # YOLOX on full COCO ≈ 0.50 mAP; HighComp (10% size) ≈ 0.25 (Section V-A)
+    i = S.APP_INDEX["coco_all"]
+    assert S.accuracy(i, 1.0) == pytest.approx(0.50, abs=0.01)
+    assert S.accuracy(i, 0.10) == pytest.approx(0.25, abs=0.01)
+    # "high" detection threshold 0.55 unreachable for All (Fig. 6 discussion)
+    assert S.accuracy(i, 1.0) < 0.55
+
+
+def test_paper_anchor_bags_vs_all():
+    # Fig. 7: semantic pick 28% meets the bound; agnostic pick 14% does not
+    b = S.APP_INDEX["coco_bags"]
+    assert S.accuracy(b, 0.28) == pytest.approx(0.30, abs=0.01)
+    assert S.accuracy(b, 0.14) < 0.30 - 0.05
+
+
+def test_paper_anchor_cityscapes():
+    c = S.APP_INDEX["cityscapes_all"]
+    f = S.APP_INDEX["cityscapes_flat"]
+    assert S.accuracy(c, 0.18) == pytest.approx(0.50, abs=0.01)
+    assert S.accuracy(f, 0.08) == pytest.approx(0.50, abs=0.01)
+    # "high" segmentation threshold 0.70 unreachable for All
+    assert S.accuracy(c, 1.0) < 0.70
+
+
+def test_animals_reach_050_only_on_own_curve():
+    a = S.APP_INDEX["coco_animals"]
+    allc = S.APP_INDEX["coco_all"]
+    za = S.min_z_for_accuracy(np.array([a]), np.array([0.50]),
+                              np.geomspace(0.02, 1, 64))
+    zall = S.min_z_for_accuracy(np.array([allc]), np.array([0.50]),
+                                np.geomspace(0.02, 1, 64))
+    assert za[0] >= 0 and zall[0] == -1     # Fig. 7(f) behaviour
+
+
+def test_monotone_increasing_in_z():
+    z = np.linspace(0.02, 1.0, 200)
+    for i in range(len(S.APPS)):
+        a = S.accuracy(i, z)
+        assert (np.diff(a) > -1e-12).all()
+        assert (a > 0).all() and (a < 1).all()
+
+
+def test_min_z_first_feasible():
+    z_grid = np.geomspace(0.02, 1, 64)
+    idx = S.min_z_for_accuracy(np.array([0, 4]), np.array([0.30, 0.55]), z_grid)
+    for task, i in enumerate(idx):
+        assert i >= 0
+        app = [0, 4][task]
+        thr = [0.30, 0.55][task]
+        assert S.accuracy(app, z_grid[i]) >= thr
+        if i > 0:
+            assert S.accuracy(app, z_grid[i - 1]) < thr
+
+
+def test_agnostic_mapping():
+    agn = S.agnostic_app(np.arange(len(S.APPS)))
+    for i, a in enumerate(S.APPS):
+        want = "cityscapes_all" if a.service == "segmentation" else "coco_all"
+        assert agn[i] == S.APP_INDEX[want]

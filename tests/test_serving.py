@@ -1,0 +1,55 @@
+"""Serving engine: admission, semantic compression, eviction, metrics."""
+import numpy as np
+
+from repro.core import scenarios
+from repro.serving import EdgeServingEngine, SliceRequest
+
+
+def _req(app, acc=0.30, lat=0.7, fps=4.0):
+    return SliceRequest("object-recognition", "yolox", app,
+                        max_latency_s=lat, min_accuracy=acc,
+                        jobs_per_sec=fps)
+
+
+def test_semantic_compression_differs_by_class():
+    eng = EdgeServingEngine(scenarios.colosseum_pool())
+    eng.submit(_req("coco_bags", acc=0.30))
+    eng.submit(_req("cityscapes_flat", acc=0.30))
+    d = {x.request.app_class: x for x in eng.reslice()}
+    assert d["coco_bags"].admitted and d["cityscapes_flat"].admitted
+    # flat tolerates far stronger compression than bags (paper Fig. 7)
+    assert d["cityscapes_flat"].z < d["coco_bags"].z / 2
+
+
+def test_admitted_meet_expectations():
+    eng = EdgeServingEngine(scenarios.colosseum_pool())
+    for app in ("coco_bags", "coco_animals", "cityscapes_flat"):
+        eng.submit(_req(app, acc=0.30))
+    for d in eng.reslice():
+        if d.admitted:
+            assert d.expected_latency_s <= d.request.max_latency_s + 1e-6
+            assert d.expected_accuracy >= d.request.min_accuracy - 1e-6
+
+
+def test_reslice_can_evict_running_tasks():
+    eng = EdgeServingEngine(scenarios.colosseum_pool())
+    for i in range(4):
+        eng.submit(_req("coco_person", acc=0.2, fps=2.0))
+    eng.reslice()
+    n0 = len(eng.tasks)
+    assert n0 >= 1
+    # flood with heavy tasks → full re-slice may drop earlier ones
+    for i in range(30):
+        eng.submit(_req("coco_person", acc=0.2, fps=10.0))
+    eng.reslice()
+    assert len(eng.tasks) >= 1   # engine stays consistent after re-slice
+
+
+def test_process_and_metrics():
+    eng = EdgeServingEngine(scenarios.colosseum_pool(), max_batch=4)
+    eng.submit(_req("cityscapes_flat", acc=0.30, fps=3.0))
+    eng.reslice()
+    eng.process(wall_dt=1.0)
+    m = list(eng.metrics().values())[0]
+    assert m["jobs_done"] >= 3
+    assert m["p50_latency_s"] > 0

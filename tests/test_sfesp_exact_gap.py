@@ -1,0 +1,37 @@
+"""Greedy vs exact branch-and-bound on small instances (Thm. 1 context)."""
+import numpy as np
+import pytest
+
+from repro.core import (ResourcePool, build_instance, check_solution,
+                        scenarios, solve_exact, solve_greedy)
+
+
+def _small_pool(seed):
+    rng = np.random.default_rng(seed)
+    cap = rng.integers(4, 9, size=2).astype(float)
+    return ResourcePool(
+        names=("rbg", "gpu"), capacity=cap, price=1.0 / cap,
+        levels=(np.arange(1.0, cap[0] + 1), np.arange(1.0, cap[1] + 1)))
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_gap_small_instances(seed):
+    pool = _small_pool(seed)
+    tasks = scenarios.numerical_tasks(6, "med", "high", seed=seed,
+                                      jobs_per_sec=3.0)
+    inst = build_instance(pool, tasks)
+    g = solve_greedy(inst)
+    e = solve_exact(inst)
+    assert check_solution(inst, g)["valid"]
+    assert check_solution(inst, e)["valid"]
+    assert e.objective + 1e-9 >= g.objective
+    if e.objective > 0:
+        gap = (e.objective - g.objective) / e.objective
+        assert gap <= 0.25, f"greedy gap {gap:.3f} too large"
+
+
+def test_exact_beats_or_ties_on_tiny():
+    pool = _small_pool(42)
+    tasks = scenarios.numerical_tasks(4, "low", "high", seed=42)
+    inst = build_instance(pool, tasks)
+    assert solve_exact(inst).objective >= solve_greedy(inst).objective - 1e-9
