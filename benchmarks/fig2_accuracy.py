@@ -8,9 +8,11 @@ from .common import row, time_fn
 
 
 def main():
+    # the paper's ten Tab. II applications only — the beyond-paper LM curves
+    # are not part of Fig. 2-left
     z_grid = np.geomspace(0.02, 1.0, 25)
-    us = time_fn(lambda: S.accuracy_table(np.arange(len(S.APPS)), z_grid))
-    for i, app in enumerate(S.APPS):
+    us = time_fn(lambda: S.accuracy_table(np.arange(len(S.PAPER_APPS)), z_grid))
+    for i, app in enumerate(S.PAPER_APPS):
         a = S.accuracy(i, z_grid)
         pts = ";".join(f"{z:.2f}:{v:.3f}"
                        for z, v in zip(z_grid[::6], a[::6]))

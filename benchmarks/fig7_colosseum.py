@@ -9,8 +9,6 @@ Compares SEM-O-RAN vs MinRes-SEM vs FlexRes-N-SEM exactly as Figs. 7(a)-(i):
     over-compresses "Bags" (allocated but mAP-violating).
 """
 
-import numpy as np
-
 from repro.core import build_instance, scenarios, semantics, solve_greedy
 from repro.core.latency import LatencyParams, latency
 from .common import row, time_fn

@@ -7,7 +7,7 @@ Run: PYTHONPATH=src python -m benchmarks.run [section ...]
 import sys
 
 from . import (fig2_accuracy, fig2_latency, fig6_numerical, fig7_colosseum,
-               kernel_perf, roofline, solver_perf)
+               kernel_perf, roofline, solver_perf, sweep_perf)
 
 SECTIONS = {
     "fig2_accuracy": fig2_accuracy.main,     # paper Fig. 2-left
@@ -15,6 +15,7 @@ SECTIONS = {
     "fig6": fig6_numerical.main,             # paper Fig. 6(a)(b)
     "fig7": fig7_colosseum.main,             # paper Fig. 7
     "solver": solver_perf.main,              # beyond-paper solver scaling
+    "sweep": sweep_perf.main,                # batched sweep engine vs seq
     "kernels": kernel_perf.main,             # Pallas kernel micro-bench
     "roofline": roofline.main,               # §Roofline table from dry-run
 }

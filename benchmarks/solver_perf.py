@@ -6,8 +6,6 @@ JAX while-loop solver, and the Pallas fused-inner variant (interpret mode on
 CPU — on TPU the kernel is the deploy path) across instance sizes.
 """
 
-import numpy as np
-
 from repro.core import build_instance, scenarios, solve_greedy, solve_greedy_jax
 from .common import row, time_fn
 

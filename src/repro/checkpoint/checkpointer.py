@@ -22,6 +22,14 @@ import numpy as np
 
 __all__ = ["Checkpointer"]
 
+# In-flight background writers per checkpoint directory, across Checkpointer
+# instances. A restarted trainer builds a FRESH Checkpointer on the same
+# directory while the crashed run's async save may still be committing; reads
+# must drain those writers or restore_latest() misses the newest manifest and
+# training silently resumes from an older step (or from scratch).
+_PENDING: dict[str, threading.Thread] = {}
+_PENDING_LOCK = threading.Lock()
+
 
 def _flatten(tree):
     leaves, treedef = jax.tree_util.tree_flatten(tree)
@@ -35,8 +43,11 @@ class Checkpointer:
         self.host_id = host_id
         self.n_hosts = n_hosts
         self.keep = keep
-        self._thread: threading.Thread | None = None
         os.makedirs(directory, exist_ok=True)
+
+    @property
+    def _key(self) -> str:
+        return os.path.abspath(self.dir)
 
     # ----------------------------------------------------------------- save
     def save(self, step: int, state: dict, *, blocking: bool = False):
@@ -44,16 +55,22 @@ class Checkpointer:
         leaves, treedef = _flatten(state)
         arrays = [np.asarray(l) for l in leaves]          # host snapshot
         self.wait()
-        self._thread = threading.Thread(
+        thread = threading.Thread(
             target=self._write, args=(step, arrays, str(treedef)), daemon=True)
-        self._thread.start()
+        with _PENDING_LOCK:
+            _PENDING[self._key] = thread
+        thread.start()
         if blocking:
             self.wait()
 
     def wait(self):
-        if self._thread is not None:
-            self._thread.join()
-            self._thread = None
+        """Join any in-flight writer for this directory (any instance's)."""
+        with _PENDING_LOCK:
+            thread = _PENDING.get(self._key)
+            if thread is None or thread is threading.current_thread():
+                return                 # nothing pending, or _gc inside writer
+            _PENDING.pop(self._key)
+        thread.join()
 
     def _write(self, step: int, arrays, treedef_str: str):
         tmp = os.path.join(self.dir, f".tmp-{step}-{self.host_id}")
@@ -86,6 +103,7 @@ class Checkpointer:
 
     # -------------------------------------------------------------- restore
     def list_steps(self) -> list[int]:
+        self.wait()                    # drain in-flight commits before reading
         steps = []
         for name in os.listdir(self.dir):
             if name.startswith("step_") and os.path.exists(
@@ -94,6 +112,7 @@ class Checkpointer:
         return sorted(steps)
 
     def restore(self, step: int, like: dict) -> dict:
+        self.wait()
         d = os.path.join(self.dir, f"step_{step:09d}")
         data = np.load(os.path.join(d, f"host{self.host_id}.npz"))
         leaves, treedef = _flatten(like)

@@ -1,17 +1,20 @@
 """SF-ESP core: the paper's contribution (semantic + flexible edge slicing)."""
 
-from .types import (ProblemInstance, ResourcePool, Solution, TaskSet,
-                    make_allocation_grid)
-from .sfesp import build_instance, check_solution, default_z_grid, objective_value
-from .greedy import primal_gradient, solve, solve_greedy, solve_greedy_jax
+from .types import (ProblemInstance, ResourcePool, Solution, StackedInstances,
+                    TaskSet, make_allocation_grid)
+from .sfesp import (build_instance, check_solution, default_z_grid,
+                    objective_value, stack_instances)
+from .greedy import (primal_gradient, solve, solve_greedy, solve_greedy_batch,
+                     solve_greedy_jax)
 from .exact import solve_exact
 from .baselines import ALGORITHMS, run_algorithm
 from . import latency, scenarios, semantics
 
 __all__ = [
-    "ProblemInstance", "ResourcePool", "Solution", "TaskSet",
-    "make_allocation_grid", "build_instance", "check_solution",
-    "default_z_grid", "objective_value", "primal_gradient", "solve",
-    "solve_greedy", "solve_greedy_jax", "solve_exact", "ALGORITHMS",
-    "run_algorithm", "latency", "scenarios", "semantics",
+    "ProblemInstance", "ResourcePool", "Solution", "StackedInstances",
+    "TaskSet", "make_allocation_grid", "build_instance", "check_solution",
+    "default_z_grid", "objective_value", "stack_instances", "primal_gradient",
+    "solve", "solve_greedy", "solve_greedy_batch", "solve_greedy_jax",
+    "solve_exact", "ALGORITHMS", "run_algorithm", "latency", "scenarios",
+    "semantics",
 ]

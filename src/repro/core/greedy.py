@@ -25,11 +25,11 @@ import jax
 import jax.numpy as jnp
 
 from . import semantics
-from .sfesp import objective_value
-from .types import ProblemInstance, Solution
+from .sfesp import objective_value, stack_instances
+from .types import ProblemInstance, Solution, StackedInstances
 
-__all__ = ["primal_gradient", "solve_greedy", "solve_greedy_jax", "solve",
-           "lexicographic_cost"]
+__all__ = ["primal_gradient", "solve_greedy", "solve_greedy_jax",
+           "solve_greedy_batch", "solve", "lexicographic_cost"]
 
 _EPS_DEN = 1e-9
 
@@ -174,6 +174,34 @@ def _inner_jnp(grid, price, cap, occupied, remaining, lat_ok, alive, cost,
     return G, best_a, has
 
 
+def _round(state, lat_ok, grid, price, cap, cost, flexible: bool, inner_fn):
+    """One admission round (Alg. 1 lines 8-19) as a masked state update.
+
+    Safe as a no-op: when no candidate is feasible, ``admit_now`` is False and
+    every update degenerates to identity, so besides the single-instance
+    while-loop it can run vmapped in the batched MinRes path, where finished
+    instances keep executing masked rounds until the whole batch converges.
+    """
+    admitted, alloc_idx, occupied, alive = state
+    remaining = cap - occupied
+    if inner_fn is not None:
+        G, best_a, has = inner_fn(grid, price, cap, occupied, remaining,
+                                  lat_ok, alive, cost)
+    else:
+        G, best_a, has = _inner_jnp(grid, price, cap, occupied, remaining,
+                                    lat_ok, alive, cost, flexible)
+    alive = alive & has                                  # drop infeasible
+    G = jnp.where(alive, G, -jnp.inf)
+    tau = jnp.argmax(G)
+    admit_now = jnp.any(alive)
+    admitted = admitted.at[tau].set(admitted[tau] | admit_now)
+    alloc_idx = jnp.where(
+        admit_now, alloc_idx.at[tau].set(best_a[tau]), alloc_idx)
+    occupied = occupied + jnp.where(admit_now, grid[best_a[tau]], 0.0)
+    alive = alive.at[tau].set(False)
+    return admitted, alloc_idx, occupied, alive
+
+
 @functools.partial(jax.jit, static_argnames=("flexible", "inner"))
 def _greedy_jax(lat_ok, grid, price, cap, alive0, cost,
                 flexible: bool = True, inner: str = "jnp"):
@@ -187,25 +215,8 @@ def _greedy_jax(lat_ok, grid, price, cap, alive0, cost,
         inner_fn = None
 
     def body(state):
-        admitted, alloc_idx, occupied, alive = state
-        remaining = cap - occupied
-        if inner_fn is not None:
-            G, best_a, has = inner_fn(grid, price, cap, occupied, remaining,
-                                      lat_ok, alive, cost)
-        else:
-            G, best_a, has = _inner_jnp(grid, price, cap, occupied, remaining,
-                                        lat_ok, alive, cost, flexible)
-        alive = alive & has                                  # drop infeasible
-        G = jnp.where(alive, G, -jnp.inf)
-        tau = jnp.argmax(G)
-        any_feas = jnp.any(alive)
-        admit_now = any_feas
-        admitted = admitted.at[tau].set(admitted[tau] | admit_now)
-        alloc_idx = jnp.where(
-            admit_now, alloc_idx.at[tau].set(best_a[tau]), alloc_idx)
-        occupied = occupied + jnp.where(admit_now, grid[best_a[tau]], 0.0)
-        alive = alive.at[tau].set(False)
-        return admitted, alloc_idx, occupied, alive
+        return _round(state, lat_ok, grid, price, cap, cost, flexible,
+                      inner_fn)
 
     def cond(state):
         *_, alive = state
@@ -213,6 +224,130 @@ def _greedy_jax(lat_ok, grid, price, cap, alive0, cost,
 
     init = (jnp.zeros(T, bool), jnp.full(T, -1, jnp.int32),
             jnp.zeros(m, grid.dtype), alive0)
+    admitted, alloc_idx, occupied, _ = jax.lax.while_loop(cond, body, init)
+    return admitted, alloc_idx, occupied
+
+
+def _pack_bits(mask):
+    """Pack a boolean (..., A) mask into uint32 words (..., ceil(A/32)).
+
+    The batched admission loop is memory-bound on (B, T, A) feasibility ops;
+    packing the static per-task latency-feasibility rows 32x shrinks the
+    per-round working set to ~100 KB for a 64x40x300 sweep.
+    """
+    a = mask.shape[-1]
+    w = -(-a // 32)
+    pad = jnp.zeros(mask.shape[:-1] + (w * 32 - a,), bool)
+    padded = jnp.concatenate([mask, pad], axis=-1)
+    words = padded.reshape(mask.shape[:-1] + (w, 32))
+    weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
+    return (words * weights).sum(axis=-1, dtype=jnp.uint32)
+
+
+def _unpack_bits(bits, a):
+    """Inverse of :func:`_pack_bits`: (..., W) uint32 → (..., A) bool."""
+    idx = jnp.arange(a)
+    return (bits[..., idx // 32] >> (idx % 32).astype(jnp.uint32)) & 1 > 0
+
+
+def _batch_pg(grid, price, cap, occupied):
+    """Batched :func:`primal_gradient`: (B, m) pools → (B, A) gradients.
+
+    vmap of the single-instance function, so the batched engine can never
+    drift from the oracle's formula.
+    """
+    return jax.vmap(
+        lambda p, c, o: primal_gradient(grid, p, c, o, xp=jnp)
+    )(price, cap, occupied)
+
+
+@functools.partial(jax.jit, static_argnames=("flexible",))
+def _greedy_jax_batch(lat_ok, grid, price, cap, alive0, cost,
+                      flexible: bool = True):
+    """Solve B padded instances in ONE device program.
+
+    ``lat_ok`` (B, Tmax, A), ``price``/``cap`` (B, m), ``alive0`` (B, Tmax);
+    ``grid``/``cost`` are shared (A, m)/(A,). The data-dependent while-loop of
+    the single-instance path does not vmap, so the batch runs masked rounds
+    under one while-loop whose condition is "any instance still has alive
+    candidates"; finished instances degrade to no-op rounds.
+
+    The flexible (Eq. 3) path exploits that the per-round gradient is shared
+    by every task of an instance: the selected task attains the GLOBAL best
+    feasible gradient V, so the round needs only bit-mask reductions — no
+    (B, T, A) float argmax:
+
+      1. V    = max PG over (cap-feasible ∧ lat-feasible-for-an-alive-task),
+      2. tau  = first alive task whose row intersects {PG == V},
+      3. s*   = first-max PG allocation within tau's row (tiny (B, A) argmax),
+
+    which reproduces the sequential first-max tie-breaking bit-for-bit. The
+    MinRes path (flexible=False) needs each task's OWN min-cost allocation, so
+    it keeps the vmapped dense round.
+    """
+    B, tmax, A = lat_ok.shape
+    m = grid.shape[1]
+    bidx = jnp.arange(B)
+
+    if not flexible:
+        def body(state):
+            def f(state_b, lat_ok_b, price_b, cap_b):
+                return _round(state_b, lat_ok_b, grid, price_b, cap_b, cost,
+                              False, None)
+            return jax.vmap(f)(state, lat_ok, price, cap)
+
+        def cond(state):
+            return jnp.any(state[3])
+
+        init = (jnp.zeros((B, tmax), bool), jnp.full((B, tmax), -1, jnp.int32),
+                jnp.zeros((B, m), grid.dtype), alive0)
+        admitted, alloc_idx, occupied, _ = jax.lax.while_loop(cond, body, init)
+        return admitted, alloc_idx, occupied
+
+    lat_bits = _pack_bits(lat_ok)                          # (B, T, W) u32
+
+    def body(state):
+        admitted, alloc_idx, occupied, alive = state
+        remaining = cap - occupied
+        cap_ok = (grid[None] <= remaining[:, None, :] + 1e-9).all(-1)  # (B, A)
+        pg = _batch_pg(grid, price, cap, occupied)                     # (B, A)
+
+        # columns lat-feasible for at least one alive task (bit domain)
+        rows = jnp.where(alive[:, :, None], lat_bits, jnp.uint32(0))
+        col_bits = jax.lax.reduce(rows, np.uint32(0), jax.lax.bitwise_or,
+                                  (1,))                                # (B, W)
+        col_any = _unpack_bits(col_bits, A)                            # (B, A)
+
+        pgm = jnp.where(cap_ok & col_any, pg, -jnp.inf)
+        v = pgm.max(-1)                                                # (B,)
+        admit = v > -jnp.inf
+
+        # first alive task whose feasible set attains V
+        hit_bits = _pack_bits(cap_ok & (pgm == v[:, None]))            # (B, W)
+        t_hit = ((lat_bits & hit_bits[:, None, :]) != 0).any(-1) & alive
+        tau = jnp.argmax(t_hit, axis=1)                                # (B,)
+
+        # tau's own first-max allocation (dense, but only (B, A))
+        lat_tau = _unpack_bits(
+            jnp.take_along_axis(lat_bits, tau[:, None, None], axis=1)[:, 0],
+            A)
+        cap_pgm = jnp.where(cap_ok, pg, -jnp.inf)
+        best_a = jnp.where(lat_tau, cap_pgm, -jnp.inf).argmax(-1)      # (B,)
+
+        admitted = admitted.at[bidx, tau].set(admitted[bidx, tau] | admit)
+        alloc_idx = alloc_idx.at[bidx, tau].set(
+            jnp.where(admit, best_a.astype(jnp.int32), alloc_idx[bidx, tau]))
+        occupied = occupied + jnp.where(admit[:, None], grid[best_a], 0.0)
+        # the admitted task leaves the candidate set; a round with nothing
+        # feasible retires the whole instance (the oracle's line-15 mass drop)
+        alive = alive.at[bidx, tau].set(False) & admit[:, None]
+        return admitted, alloc_idx, occupied, alive
+
+    def cond(state):
+        return jnp.any(state[3])
+
+    init = (jnp.zeros((B, tmax), bool), jnp.full((B, tmax), -1, jnp.int32),
+            jnp.zeros((B, m), grid.dtype), alive0)
     admitted, alloc_idx, occupied, _ = jax.lax.while_loop(cond, body, init)
     return admitted, alloc_idx, occupied
 
@@ -232,6 +367,61 @@ def solve_greedy_jax(inst: ProblemInstance, *, semantic: bool = True,
         flexible=flexible, inner=inner)
     return _pack_solution(inst, semantic, np.asarray(admitted),
                           np.asarray(alloc_idx, np.int64), z_idx)
+
+
+def solve_greedy_batch(insts, *, semantic: bool = True,
+                       flexible: bool = True) -> list[Solution]:
+    """Batched sweep engine: solve many instances in one jit call.
+
+    ``insts`` is a sequence of :class:`ProblemInstance` (stacked on the fly)
+    or a pre-built :class:`StackedInstances`. Decisions are identical to
+    running :func:`solve_greedy_jax` per instance, and match the
+    :func:`solve_greedy` numpy oracle with the same caveat as every JAX
+    backend here: gradients are computed in float32 (unless x64 is enabled),
+    so instances whose float64 gradient ordering hinges on sub-f32-ulp
+    differences may break argmax ties differently. Returns one
+    :class:`Solution` per instance in input order.
+    """
+    stacked = insts if isinstance(insts, StackedInstances) \
+        else stack_instances(insts)
+    if semantic:
+        lat, z_idx = stacked.lat, stacked.z_star_idx
+        z_star = stacked.z_star
+    else:
+        lat, z_idx = stacked.lat_agnostic, stacked.z_star_idx_agnostic
+        z_star = stacked.z_star_agnostic
+    lat_ok = lat <= stacked.max_latency[:, :, None]       # padded rows: False
+    alive0 = (z_idx >= 0) & lat_ok.any(axis=2) & stacked.task_mask
+    cost = lexicographic_cost(stacked.grid)
+    admitted, alloc_idx, _ = _greedy_jax_batch(
+        jnp.asarray(lat_ok), jnp.asarray(stacked.grid),
+        jnp.asarray(stacked.price), jnp.asarray(stacked.capacity),
+        jnp.asarray(alive0), jnp.asarray(cost), flexible=flexible)
+    admitted = np.asarray(admitted)
+    alloc_idx = np.asarray(alloc_idx, np.int64)
+
+    # vectorized _pack_solution over the whole batch (per-instance Python
+    # packing would dwarf the device solve at sweep sizes)
+    grid = stacked.grid
+    safe_idx = np.clip(alloc_idx, 0, None)
+    alloc = grid[safe_idx] * admitted[:, :, None]                 # (B, T, m)
+    z = np.where(admitted & (z_idx >= 0), z_star, 1.0)
+    a_true = semantics.accuracy(stacked.app_idx, z)
+    l_val = np.take_along_axis(lat, safe_idx[:, :, None], axis=2)[:, :, 0]
+    l_val = np.where(admitted & (alloc_idx >= 0), l_val, np.inf)
+    satisfied = admitted & (a_true + 1e-9 >= stacked.min_accuracy) \
+        & (l_val <= stacked.max_latency + 1e-9)
+    per_task = (stacked.price[:, None, :]
+                * (stacked.capacity[:, None, :] - alloc)).sum(axis=2)
+    objective = (per_task * admitted).sum(axis=1)                 # (B,)
+
+    out = []
+    for b, inst in enumerate(stacked.instances):
+        t = inst.num_tasks
+        out.append(Solution(
+            admitted=admitted[b, :t], alloc=alloc[b, :t], z=z[b, :t],
+            objective=float(objective[b]), satisfied=satisfied[b, :t]))
+    return out
 
 
 def solve(inst: ProblemInstance, *, semantic: bool = True, flexible: bool = True,

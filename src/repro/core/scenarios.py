@@ -1,4 +1,6 @@
-"""Scenario generators reproducing the paper's evaluation setups (Section V).
+"""Scenario generators: the paper's evaluation setups plus a dynamic library.
+
+Static (paper Section V):
 
 * :func:`numerical_pool` / :func:`numerical_tasks` — Fig. 6 numerical analysis:
   2 or 4 edge/network resource types; accuracy thresholds {low, med, high} =
@@ -8,33 +10,53 @@
 * :func:`colosseum_pool` / :func:`colosseum_tasks` — Section V-C prototype:
   15 RBGs available for slicing (17 total, 2 reserved for iperf traffic),
   20 GPUs; three slices (Bags, Animals, Flat) with time-varying fps.
+
+Dynamic (feed the batched sweep engine, ``greedy.solve_greedy_batch``): each
+generator yields a time-indexed list of :class:`ProblemInstance` sharing one
+allocation grid, so a whole trace/sweep solves as ONE stacked device program.
+
+* :func:`fig6_sweep` — the full Fig. 6 grid (task counts x accuracy x latency
+  x seeds) as a flat instance list.
+* :func:`poisson_trace` — Poisson task arrivals with exponential holding
+  times (DRL-slicing style dynamic traffic, cf. arXiv:2103.10277).
+* :func:`fps_trace` / :func:`fps_trace_instances` — Fig. 7-style piecewise-
+  constant per-UE fps periods.
+* :func:`multi_cell_pools` / :func:`multi_cell_trace` — several cells with
+  heterogeneous capacities but a shared allocation grid.
+* :func:`mixed_workload_tasks` — detection + segmentation + LM task mixes.
 """
 
 from __future__ import annotations
 
+import dataclasses
+
 import numpy as np
 
+from . import latency as lat_mod
 from . import semantics
-from .types import ResourcePool, TaskSet
+from .sfesp import build_instance
+from .types import ProblemInstance, ResourcePool, TaskSet
 
 __all__ = [
     "ACC_THRESHOLDS", "LAT_THRESHOLDS",
     "numerical_pool", "numerical_tasks", "colosseum_pool", "colosseum_tasks",
+    "fig6_sweep", "poisson_trace", "fps_trace", "fps_trace_instances",
+    "multi_cell_pools", "multi_cell_trace", "mixed_workload_tasks",
 ]
 
-# paper Section V-B threshold definitions
+# paper Section V-B threshold definitions ("lm" extends them to the
+# beyond-paper prompt-compression workload; quality metric in [0, 1])
 ACC_THRESHOLDS = {
-    "low": {"detection": 0.20, "segmentation": 0.35},
-    "med": {"detection": 0.35, "segmentation": 0.50},
-    "high": {"detection": 0.55, "segmentation": 0.70},
+    "low": {"detection": 0.20, "segmentation": 0.35, "lm": 0.40},
+    "med": {"detection": 0.35, "segmentation": 0.50, "lm": 0.55},
+    "high": {"detection": 0.55, "segmentation": 0.70, "lm": 0.72},
 }
 LAT_THRESHOLDS = {"low": 0.2, "high": 0.7}
 
-# per-service stream characteristics (Section V-A: COCO images ~100 KB;
-# YOLOX ≈ 0.125 s on one reference GPU — the Fig. 2-right calibration point;
-# BiSeNetV2 is a real-time segmenter, ~3x lighter).
-_BITS_PER_JOB = {"detection": 0.8, "segmentation": 0.8}       # Mbit
-_GPU_TIME = {"detection": 0.125, "segmentation": 0.042}       # s/job @ z=1
+# per-service stream characteristics — single source in core.semantics,
+# shared with the serving SDLA
+_BITS_PER_JOB = semantics.SERVICE_BITS_PER_JOB
+_GPU_TIME = semantics.SERVICE_GPU_TIME
 
 
 def numerical_pool(m: int = 2) -> ResourcePool:
@@ -63,7 +85,7 @@ def numerical_tasks(n_tasks: int, acc: str, lat: str,
                     seed: int = 0, jobs_per_sec: float = 5.0) -> TaskSet:
     """Tasks equally distributed across the 10 Tab. II applications."""
     rng = np.random.default_rng(seed)
-    app_idx = np.arange(n_tasks) % len(semantics.APPS)
+    app_idx = np.arange(n_tasks) % len(semantics.PAPER_APPS)
     rng.shuffle(app_idx)
     services = np.array([semantics.APPS[i].service for i in app_idx])
     min_acc = np.array([ACC_THRESHOLDS[acc][s] for s in services])
@@ -108,3 +130,169 @@ def colosseum_tasks(fps: float, min_acc: float = 0.30,
         gpu_time_per_job=np.array([_GPU_TIME[s] for s in services]),
         n_ues=np.ones(3, np.int64),
     )
+
+
+# ---------------------------------------------------------------------------
+# Dynamic scenario library — every generator below returns a list of
+# ProblemInstances over one shared allocation grid, ready for stack_instances
+# ---------------------------------------------------------------------------
+
+def _tasks_from_apps(app_idx: np.ndarray, acc: str, lat: str,
+                     jobs_per_sec: np.ndarray) -> TaskSet:
+    n = len(app_idx)
+    services = np.array([semantics.APPS[i].service for i in app_idx])
+    return TaskSet(
+        app_idx=app_idx,
+        min_accuracy=np.array([ACC_THRESHOLDS[acc][s] for s in services]),
+        max_latency=np.full(n, LAT_THRESHOLDS[lat]),
+        bits_per_job=np.array([_BITS_PER_JOB[s] for s in services]),
+        jobs_per_sec=np.asarray(jobs_per_sec, np.float64),
+        gpu_time_per_job=np.array([_GPU_TIME[s] for s in services]),
+        n_ues=np.ones(n, np.int64),
+    )
+
+
+def fig6_sweep(m: int = 2, n_tasks=(10, 20, 30, 40, 50),
+               acc_levels=("low", "med", "high"), lat_levels=("low", "high"),
+               seeds=(0, 1, 2)) -> tuple[list[ProblemInstance], list[dict]]:
+    """The Fig. 6 evaluation grid as a flat instance list + cell metadata.
+
+    All cells share ``numerical_pool(m)``, hence one allocation grid — the
+    whole sweep (default 5x3x2x3 = 90 instances) solves as a single batch.
+    """
+    pool = numerical_pool(m)
+    insts, meta = [], []
+    for acc in acc_levels:
+        for lat in lat_levels:
+            for n in n_tasks:
+                for seed in seeds:
+                    insts.append(build_instance(
+                        pool, numerical_tasks(n, acc, lat, seed=seed)))
+                    meta.append(dict(m=m, acc=acc, lat=lat, n=n, seed=seed))
+    return insts, meta
+
+
+def mixed_workload_tasks(n_tasks: int, acc: str = "med", lat: str = "high",
+                         seed: int = 0, lm_fraction: float = 0.3,
+                         jobs_per_sec: float = 5.0) -> TaskSet:
+    """Mixed detection / segmentation / LM task set.
+
+    ``lm_fraction`` of the tasks are prompt-compression LM requests; the rest
+    split evenly over the paper's vision apps (Tab. II).
+    """
+    rng = np.random.default_rng(seed)
+    n_lm = int(round(n_tasks * lm_fraction))
+    n_paper = len(semantics.PAPER_APPS)
+    vision = np.arange(n_tasks - n_lm) % n_paper
+    lm = n_paper + rng.integers(0, len(semantics.LM_APPS), n_lm)
+    app_idx = np.concatenate([vision, lm])
+    rng.shuffle(app_idx)
+    # LM requests arrive faster than video frames (chat turns vs fps)
+    rates = np.where(
+        np.array([semantics.APPS[i].service for i in app_idx]) == "lm",
+        2.0 * jobs_per_sec, jobs_per_sec)
+    return _tasks_from_apps(app_idx, acc, lat, rates)
+
+
+def poisson_trace(horizon: int, *, pool: ResourcePool | None = None,
+                  arrival_rate: float = 4.0, mean_holding: float = 5.0,
+                  acc: str = "med", lat: str = "high", seed: int = 0,
+                  lm_fraction: float = 0.0,
+                  lat_params: lat_mod.LatencyParams | None = None,
+                  ) -> tuple[list[ProblemInstance], list[np.ndarray]]:
+    """Dynamic traffic: Poisson arrivals, exponential holding times.
+
+    At each of ``horizon`` steps, ``Poisson(arrival_rate)`` new tasks arrive
+    and live for ``Exp(mean_holding)`` steps; the active set at each step
+    forms one ProblemInstance (the admission problem the RIC re-solves on
+    every slicing window — the trace evaluation style of the DRL slicing
+    literature). Returns (instances, active-app-index arrays per step).
+    """
+    rng = np.random.default_rng(seed)
+    pool = pool or numerical_pool(2)
+    n_paper = len(semantics.PAPER_APPS)
+    n_apps = len(semantics.APPS) if lm_fraction > 0 else n_paper
+    active: list[tuple[int, float]] = []       # (app_idx, departure_step)
+    insts, apps_per_step = [], []
+    for step in range(horizon):
+        active = [(a, d) for a, d in active if d > step]
+        for _ in range(rng.poisson(arrival_rate)):
+            if lm_fraction > 0 and rng.random() < lm_fraction:
+                app = int(rng.integers(n_paper, n_apps))
+            else:
+                app = int(rng.integers(0, n_paper))
+            active.append((app, step + rng.exponential(mean_holding)))
+        app_idx = np.array([a for a, _ in active], np.int64)
+        rates = np.full(len(app_idx), 5.0)
+        insts.append(build_instance(pool, _tasks_from_apps(
+            app_idx, acc, lat, rates), lat_params=lat_params))
+        apps_per_step.append(app_idx)
+    return insts, apps_per_step
+
+
+def fps_trace(n_periods: int = 4, fps_levels=(10.0, 7.0, 5.0, 3.0),
+              seed: int | None = None) -> np.ndarray:
+    """Fig. 7-style piecewise-constant per-UE fps trace (one value/period).
+
+    With ``seed=None`` returns the paper's deterministic 4-period trace;
+    otherwise samples uniformly from ``fps_levels``.
+    """
+    if seed is None:
+        reps = -(-n_periods // len(fps_levels))
+        return np.tile(np.asarray(fps_levels, np.float64), reps)[:n_periods]
+    rng = np.random.default_rng(seed)
+    return rng.choice(np.asarray(fps_levels, np.float64), size=n_periods)
+
+
+def fps_trace_instances(trace: np.ndarray, *, min_acc: float = 0.30,
+                        max_lat: float = 0.7) -> list[ProblemInstance]:
+    """One colosseum instance per fps period — the Fig. 7 re-slicing sequence
+    as a batch (all periods share the colosseum pool/grid)."""
+    pool = colosseum_pool()
+    return [build_instance(pool, colosseum_tasks(float(fps), min_acc=min_acc,
+                                                 max_lat=max_lat))
+            for fps in np.asarray(trace)]
+
+
+def multi_cell_pools(n_cells: int, m: int = 2,
+                     seed: int = 0) -> list[ResourcePool]:
+    """Heterogeneous-capacity cells sharing one allocation grid.
+
+    Every cell keeps the canonical level sets (so instances stack), but
+    capacity varies ±40 % around the numerical pool — a small O-RAN
+    deployment where each cell's RIC solves its own SF-ESP yet the operator
+    sweeps all cells in one device program.
+    """
+    rng = np.random.default_rng(seed)
+    base = numerical_pool(m)
+    pools = []
+    for _ in range(n_cells):
+        scale = rng.uniform(0.6, 1.4, size=base.m)
+        cap = np.maximum(np.round(base.capacity * scale), 2.0)
+        pools.append(dataclasses.replace(
+            base, capacity=cap, price=1.0 / cap))
+    return pools
+
+
+def multi_cell_trace(n_cells: int, horizon: int, *, m: int = 2,
+                     acc: str = "med", lat: str = "high", seed: int = 0,
+                     arrival_rate: float = 4.0, mean_holding: float = 5.0,
+                     ) -> tuple[list[ProblemInstance], list[dict]]:
+    """Per-cell Poisson traffic over a horizon, flattened time-major.
+
+    Returns ``horizon * n_cells`` instances (cell-adjacent within a step) and
+    matching ``{"step", "cell"}`` metadata; the full trace stacks into one
+    batch because all cells share the level grid.
+    """
+    pools = multi_cell_pools(n_cells, m=m, seed=seed)
+    insts, meta = [], []
+    per_cell = [poisson_trace(horizon, pool=p, acc=acc, lat=lat,
+                              seed=seed + 1000 * c,
+                              arrival_rate=arrival_rate,
+                              mean_holding=mean_holding)[0]
+                for c, p in enumerate(pools)]
+    for step in range(horizon):
+        for cell in range(n_cells):
+            insts.append(per_cell[cell][step])
+            meta.append(dict(step=step, cell=cell))
+    return insts, meta

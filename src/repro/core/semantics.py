@@ -38,6 +38,10 @@ __all__ = [
     "APP_INDEX",
     "DETECTION_APPS",
     "SEGMENTATION_APPS",
+    "LM_APPS",
+    "PAPER_APPS",
+    "SERVICE_BITS_PER_JOB",
+    "SERVICE_GPU_TIME",
     "accuracy",
     "accuracy_table",
     "min_z_for_accuracy",
@@ -135,8 +139,50 @@ _CITY_PERSON = AppClass(
 DETECTION_APPS = (_COCO_ALL, _COCO_URBAN, _COCO_BAGS, _COCO_ANIMALS, _COCO_PERSON)
 SEGMENTATION_APPS = (_CITY_ALL, _CITY_VEHICLES, _CITY_OBJECTS, _CITY_FLAT,
                      _CITY_PERSON)
-APPS: tuple[AppClass, ...] = DETECTION_APPS + SEGMENTATION_APPS
+
+# --- edge LM applications (beyond-paper workload) ----------------------------
+# Same semantic-compression story applied to token streams: ``z`` is the
+# prompt/context keep-rate and a(z) the task-quality metric. The Hill family
+# fits published prompt-compression curves (LLMLingua-style: summarization is
+# robust down to ~20 % of tokens, code generation degrades quickly).
+_LM_ALL = AppClass(
+    "lm_all", "lm",
+    ("<all prompt domains>",),
+    *_hill(M=0.80, anchor_z=0.30, anchor_a=0.55, gamma=1.10),
+)
+_LM_SUMMARIZATION = AppClass(
+    "lm_summarization", "lm",
+    ("news", "meeting notes", "papers"),
+    # redundant inputs — easiest: keeps ~0.6 quality at 20 % of tokens.
+    *_hill(M=0.78, anchor_z=0.20, anchor_a=0.60, gamma=1.05),
+)
+_LM_CODE = AppClass(
+    "lm_code", "lm",
+    ("code completion", "repair"),
+    # identifiers/structure can't be dropped — hardest: sup < 0.75.
+    *_hill(M=0.75, anchor_z=1.0, anchor_a=0.68, gamma=1.40),
+)
+LM_APPS = (_LM_ALL, _LM_SUMMARIZATION, _LM_CODE)
+
+# the ten Tab. II rows the paper evaluates; LM apps extend the registry beyond
+# the paper without disturbing the Fig. 6/7 scenario draws.
+PAPER_APPS: tuple[AppClass, ...] = DETECTION_APPS + SEGMENTATION_APPS
+APPS: tuple[AppClass, ...] = PAPER_APPS + LM_APPS
 APP_INDEX: dict[str, int] = {a.name: i for i, a in enumerate(APPS)}
+
+# service → dataset-wide "All" curve a semantics-agnostic algorithm falls back to
+_AGNOSTIC_NAME = {"detection": "coco_all", "segmentation": "cityscapes_all",
+                  "lm": "lm_all"}
+
+# per-service stream characteristics, shared by the scenario library and the
+# serving SDLA so scenario-built and request-built instances agree
+# (Section V-A: COCO images ~100 KB; YOLOX ≈ 0.125 s on one reference GPU —
+# the Fig. 2-right calibration point; BiSeNetV2 is a real-time segmenter,
+# ~3x lighter; LM requests are small token payloads, decode-dominated).
+SERVICE_BITS_PER_JOB = {"detection": 0.8, "segmentation": 0.8,
+                        "lm": 0.02}                              # Mbit/job
+SERVICE_GPU_TIME = {"detection": 0.125, "segmentation": 0.042,
+                    "lm": 0.060}                                 # s/job @ z=1
 
 # parameter matrix for vectorized evaluation: (n_apps, 3) = [M, γ, H]
 _PARAMS = np.array([[a.asymptote, a.gamma, a.hill] for a in APPS])
@@ -175,12 +221,14 @@ def min_z_for_accuracy(app_idx: np.ndarray, min_acc: np.ndarray,
     return np.where(any_ok, first, -1)
 
 
+_AGNOSTIC_IDX = np.array([APP_INDEX[_AGNOSTIC_NAME[a.service]] for a in APPS])
+
+
 def agnostic_app(app_idx: np.ndarray) -> np.ndarray:
     """Map each app to the dataset-wide 'All' app (what SI-EDGE assumes).
 
     SI-EDGE "considers all the tasks as belonging to the 'All' application"
-    (Section V-B): detection apps → coco_all, segmentation → cityscapes_all.
+    (Section V-B): detection apps → coco_all, segmentation → cityscapes_all,
+    and the beyond-paper LM apps → lm_all.
     """
-    app_idx = np.asarray(app_idx)
-    is_seg = app_idx >= len(DETECTION_APPS)
-    return np.where(is_seg, APP_INDEX["cityscapes_all"], APP_INDEX["coco_all"])
+    return _AGNOSTIC_IDX[np.asarray(app_idx)]

@@ -9,13 +9,17 @@ by every solver, the property tests, and the serving admission controller.
 
 from __future__ import annotations
 
+from typing import Sequence
+
 import numpy as np
 
 from . import latency as lat_mod
 from . import semantics
-from .types import ProblemInstance, ResourcePool, Solution, TaskSet, make_allocation_grid
+from .types import (ProblemInstance, ResourcePool, Solution, StackedInstances,
+                    TaskSet, make_allocation_grid)
 
-__all__ = ["build_instance", "check_solution", "objective_value", "default_z_grid"]
+__all__ = ["build_instance", "check_solution", "objective_value",
+           "default_z_grid", "stack_instances"]
 
 
 def default_z_grid(n: int = 64) -> np.ndarray:
@@ -50,6 +54,69 @@ def build_instance(pool: ResourcePool, tasks: TaskSet,
         acc=acc, acc_agnostic=acc_agn, grid=grid,
         lat=lat, lat_agnostic=lat_agn,
         z_star_idx=zi, z_star_idx_agnostic=zi_agn,
+    )
+
+
+def stack_instances(insts: Sequence[ProblemInstance]) -> StackedInstances:
+    """Stack instances into one padded batch for the sweep engine.
+
+    Instances must share the allocation grid (identical ``pool.levels``);
+    capacities/prices may differ per instance (multi-cell pools). Tasks are
+    padded to ``Tmax`` with never-feasible rows (lat=+inf, z*_idx=-1) so the
+    batched solver's masked rounds ignore them.
+    """
+    insts = tuple(insts)
+    if not insts:
+        raise ValueError("stack_instances needs at least one instance")
+    grid = insts[0].grid
+    for inst in insts[1:]:
+        if not np.array_equal(inst.grid, grid):
+            raise ValueError(
+                "all stacked instances must share one allocation grid "
+                "(identical pool.levels); stack per pool family instead")
+    B = len(insts)
+    A, m = grid.shape
+    n_tasks = np.array([inst.num_tasks for inst in insts], np.int64)
+    tmax = max(1, int(n_tasks.max()))
+
+    lat = np.full((B, tmax, A), np.inf)
+    lat_agn = np.full((B, tmax, A), np.inf)
+    zi = np.full((B, tmax), -1, np.int64)
+    zi_agn = np.full((B, tmax), -1, np.int64)
+    z_star = np.ones((B, tmax))
+    z_star_agn = np.ones((B, tmax))
+    app = np.zeros((B, tmax), np.int64)
+    min_acc = np.full((B, tmax), np.inf)
+    max_lat = np.zeros((B, tmax))
+    mask = np.zeros((B, tmax), bool)
+    cap = np.zeros((B, m))
+    price = np.zeros((B, m))
+    for b, inst in enumerate(insts):
+        t = inst.num_tasks
+        lat[b, :t] = inst.lat
+        lat_agn[b, :t] = inst.lat_agnostic
+        zi[b, :t] = inst.z_star_idx
+        zi_agn[b, :t] = inst.z_star_idx_agnostic
+        z_star[b, :t] = np.where(
+            inst.z_star_idx >= 0,
+            inst.z_grid[np.clip(inst.z_star_idx, 0, None)], 1.0)
+        z_star_agn[b, :t] = np.where(
+            inst.z_star_idx_agnostic >= 0,
+            inst.z_grid[np.clip(inst.z_star_idx_agnostic, 0, None)], 1.0)
+        app[b, :t] = inst.tasks.app_idx
+        min_acc[b, :t] = inst.tasks.min_accuracy
+        max_lat[b, :t] = inst.tasks.max_latency
+        mask[b, :t] = True
+        cap[b] = inst.pool.capacity
+        price[b] = inst.pool.price
+
+    return StackedInstances(
+        instances=insts, grid=grid, capacity=cap, price=price,
+        lat=lat, lat_agnostic=lat_agn,
+        z_star_idx=zi, z_star_idx_agnostic=zi_agn,
+        z_star=z_star, z_star_agnostic=z_star_agn,
+        app_idx=app, min_accuracy=min_acc,
+        max_latency=max_lat, task_mask=mask, num_tasks=n_tasks,
     )
 
 

@@ -25,6 +25,7 @@ __all__ = [
     "ResourcePool",
     "TaskSet",
     "ProblemInstance",
+    "StackedInstances",
     "Solution",
     "make_allocation_grid",
 ]
@@ -138,6 +139,59 @@ class ProblemInstance:
     @property
     def m(self) -> int:
         return self.pool.m
+
+
+@dataclasses.dataclass(frozen=True)
+class StackedInstances:
+    """A batch of SF-ESP instances padded to a common task count.
+
+    The batched sweep engine (``greedy.solve_greedy_batch``) solves all B
+    instances in ONE device program, so every per-task table is stacked with
+    leading dimension B and padded to ``Tmax = max_b T_b``:
+
+      * latency tables are padded with ``+inf`` (a padded row is never
+        feasible for any allocation),
+      * ``z_star_idx`` is padded with ``-1`` (padded tasks are pruned by the
+        Alg. 1 line-7 candidate filter),
+      * ``max_latency`` is padded with ``0`` and ``task_mask`` marks real rows.
+
+    All instances must share one enumerated allocation grid — i.e. identical
+    ``pool.levels`` — but capacities and prices MAY differ per instance
+    (multi-cell pools with heterogeneous loads are the intended use).
+    Build via :func:`repro.core.sfesp.stack_instances`.
+    """
+
+    instances: tuple[ProblemInstance, ...]
+    grid: np.ndarray                  # (A, m) — shared allocation grid
+    capacity: np.ndarray              # (B, m) — S_k per instance
+    price: np.ndarray                 # (B, m) — p_k per instance
+    lat: np.ndarray                   # (B, Tmax, A) — +inf padded
+    lat_agnostic: np.ndarray          # (B, Tmax, A) — +inf padded
+    z_star_idx: np.ndarray            # (B, Tmax) int — -1 padded
+    z_star_idx_agnostic: np.ndarray   # (B, Tmax) int — -1 padded
+    z_star: np.ndarray                # (B, Tmax) — z_grid[z*_idx], 1.0 padded
+    z_star_agnostic: np.ndarray       # (B, Tmax) — agnostic z*, 1.0 padded
+    app_idx: np.ndarray               # (B, Tmax) int — 0 padded
+    min_accuracy: np.ndarray          # (B, Tmax) — +inf padded
+    max_latency: np.ndarray           # (B, Tmax) — 0 padded
+    task_mask: np.ndarray             # (B, Tmax) bool — True on real tasks
+    num_tasks: np.ndarray             # (B,) int — T_b of each instance
+
+    @property
+    def batch_size(self) -> int:
+        return len(self.instances)
+
+    @property
+    def max_tasks(self) -> int:
+        return self.lat.shape[1]
+
+    @property
+    def num_allocs(self) -> int:
+        return self.grid.shape[0]
+
+    @property
+    def m(self) -> int:
+        return self.grid.shape[1]
 
 
 @dataclasses.dataclass(frozen=True)

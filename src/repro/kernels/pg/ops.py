@@ -8,7 +8,6 @@ vector (A·m work) is computed in plain jnp — the kernel fuses the expensive
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.core.greedy import primal_gradient

@@ -2,7 +2,6 @@
 
 from __future__ import annotations
 
-import numpy as np
 import jax.numpy as jnp
 
 from . import ref as resize_ref_mod

@@ -19,7 +19,6 @@ cross cache.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable
 
 import jax
@@ -28,7 +27,7 @@ import jax.numpy as jnp
 from repro.configs import ARCHS, get_config, long_context_ok
 from repro.distributed.sharding import (axis_rules, batch_axes,
                                         named_sharding_for, param_shardings)
-from repro.models import cache_specs, decode_step, loss_fn, param_specs, prefill
+from repro.models import cache_specs, decode_step, param_specs, prefill
 from repro.training.optimizer import OptConfig, make_train_step, opt_init
 
 __all__ = ["SHAPES", "CellSpec", "build_cell", "all_cells"]

@@ -11,7 +11,6 @@ from __future__ import annotations
 import argparse
 
 from repro.configs import get_config, get_smoke_config
-from repro.training.optimizer import OptConfig
 from repro.training.train_loop import TrainLoopConfig, train
 
 

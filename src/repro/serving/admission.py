@@ -11,9 +11,7 @@ from __future__ import annotations
 
 import dataclasses
 
-import numpy as np
-
-from repro.core import ResourcePool, check_solution, solve
+from repro.core import ResourcePool, check_solution, solve, solve_greedy_batch
 from .request import SliceRequest
 from .sdla import SDLA
 
@@ -45,6 +43,31 @@ class SESM:
         inst = self.sdla.build_instance(requests, self.pool)
         sol = solve(inst, backend=self.backend, inner=self.inner,
                     **self.algorithm)
+        return self._decisions(requests, inst, sol)
+
+    def solve_batch(self, request_sets: list[list[SliceRequest]]
+                    ) -> list[list[SliceDecision]]:
+        """Evaluate many candidate re-slice decisions in ONE device program.
+
+        Each element of ``request_sets`` is one hypothetical request mix —
+        e.g. the projected task sets over a re-slicing horizon, or the
+        alternatives of a what-if admission study. All sets share this SESM's
+        pool, so they stack onto one allocation grid and solve via the
+        batched sweep engine; decisions per set match calling :meth:`slice`
+        on it (up to the float32 gradient-tie caveat of the JAX backends vs
+        the numpy default — see ``solve_greedy_batch``).
+        """
+        filled = [(i, rs) for i, rs in enumerate(request_sets) if rs]
+        out: list[list[SliceDecision]] = [[] for _ in request_sets]
+        if not filled:
+            return out
+        insts = [self.sdla.build_instance(rs, self.pool) for _, rs in filled]
+        sols = solve_greedy_batch(insts, **self.algorithm)
+        for (i, rs), inst, sol in zip(filled, insts, sols):
+            out[i] = self._decisions(rs, inst, sol)
+        return out
+
+    def _decisions(self, requests, inst, sol) -> list[SliceDecision]:
         report = check_solution(inst, sol, lat_params=self.sdla.lat_params)
         out = []
         for i, r in enumerate(requests):

@@ -17,8 +17,9 @@ from .request import SliceRequest
 
 __all__ = ["SDLA"]
 
-_DEFAULT_BITS = {"detection": 0.8, "segmentation": 0.8, "lm": 0.02}
-_DEFAULT_GPU_TIME = {"detection": 0.125, "segmentation": 0.042, "lm": 0.060}
+# single source in core.semantics, shared with the scenario library
+_DEFAULT_BITS = semantics.SERVICE_BITS_PER_JOB
+_DEFAULT_GPU_TIME = semantics.SERVICE_GPU_TIME
 
 
 class SDLA:

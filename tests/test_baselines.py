@@ -1,6 +1,4 @@
 """Baseline algorithms reproduce the paper's qualitative comparison story."""
-import numpy as np
-
 from repro.core import build_instance, check_solution, run_algorithm, scenarios
 
 

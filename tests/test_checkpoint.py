@@ -1,7 +1,6 @@
 """Checkpointer: roundtrip, atomic manifest, crash-restart resume."""
 import os
 
-import jax
 import numpy as np
 import pytest
 
@@ -37,6 +36,22 @@ def test_incomplete_checkpoint_ignored(tmp_path):
     assert ck.restore_latest({"x": np.zeros(1)}) is None
 
 
+def test_inflight_save_visible_to_new_instance(tmp_path):
+    """A fresh Checkpointer on the same dir (the restart path) must drain the
+    previous instance's async writer before reading — otherwise a crash right
+    after a non-blocking save resumes from an older step."""
+    state = {"x": np.arange(1 << 16, dtype=np.float32)}
+    ck = Checkpointer(str(tmp_path))
+    ck.save(7, state, blocking=False)         # do NOT wait — commit in flight
+    fresh = Checkpointer(str(tmp_path))       # simulated restart
+    restored = fresh.restore_latest(state)
+    assert restored is not None
+    step, got = restored
+    assert step == 7
+    assert np.array_equal(got["x"], state["x"])
+
+
+@pytest.mark.slow
 def test_crash_restart_resumes_identically(tmp_path):
     """Train 8 steps; crash at 6 after a checkpoint at 4; restart must land on
     the same final loss as an uninterrupted run (deterministic pipeline)."""

@@ -7,6 +7,8 @@ import pytest
 from repro.configs import ARCHS, get_smoke_config
 from repro.models import decode_step, forward_train, init_params, prefill
 
+pytestmark = pytest.mark.slow
+
 
 @pytest.mark.parametrize("arch", list(ARCHS))
 def test_prefill_decode_matches_forward(arch):

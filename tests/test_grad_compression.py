@@ -2,7 +2,7 @@
 import numpy as np
 import jax.numpy as jnp
 
-from repro.distributed.grad_compression import compress, decompress, init_error
+from repro.distributed.grad_compression import compress, decompress
 
 
 def test_int8_range_and_scale(rng):

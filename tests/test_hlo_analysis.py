@@ -6,12 +6,13 @@ scanned compile must agree after trip-count multiplication.
 import dataclasses
 
 import jax
-import numpy as np
 import pytest
 
 from repro.configs import get_smoke_config
 from repro.launch.hlo_analysis import analyze_hlo
 from repro.models import init_params, loss_fn
+
+pytestmark = pytest.mark.slow
 
 
 def _flops(cfg_mod):

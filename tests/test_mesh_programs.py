@@ -13,6 +13,8 @@ import pytest
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
+pytestmark = pytest.mark.slow
+
 
 def _run(body: str):
     prog = textwrap.dedent("""

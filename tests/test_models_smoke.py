@@ -6,8 +6,10 @@ import numpy as np
 import pytest
 
 from repro.configs import ARCHS, get_config, get_smoke_config
-from repro.models import forward_train, init_params, loss_fn
+from repro.models import forward_train, init_params
 from repro.training.optimizer import OptConfig, make_train_step, opt_init
+
+pytestmark = pytest.mark.slow
 
 
 def _batch(cfg, b=2, t=32, seed=1):

@@ -1,9 +1,17 @@
-"""Hypothesis property tests on SF-ESP invariants."""
-import numpy as np
-from hypothesis import given, settings, strategies as st
+"""Hypothesis property tests on SF-ESP invariants.
 
-from repro.core import (ResourcePool, TaskSet, build_instance, check_solution,
-                        primal_gradient, semantics, solve_greedy)
+``hypothesis`` ships via the ``[test]`` extra (see pyproject.toml); skip
+cleanly instead of breaking collection where only runtime deps exist.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import (ResourcePool, TaskSet, build_instance,  # noqa: E402
+                        check_solution, primal_gradient, semantics,
+                        solve_greedy)
 
 N_APPS = len(semantics.APPS)
 

@@ -1,0 +1,73 @@
+"""Dynamic scenario library: traces, mixed workloads, multi-cell stacking."""
+import numpy as np
+
+from repro.core import scenarios, semantics, solve_greedy, solve_greedy_batch
+
+
+def test_fig6_sweep_covers_grid():
+    insts, meta = scenarios.fig6_sweep(2, n_tasks=(10, 20), seeds=(0, 1))
+    assert len(insts) == len(meta) == 2 * 3 * 2 * 2
+    cells = {(c["acc"], c["lat"], c["n"], c["seed"]) for c in meta}
+    assert len(cells) == len(meta)
+    assert all(i.grid.shape == insts[0].grid.shape for i in insts)
+
+
+def test_poisson_trace_reproducible_and_dynamic():
+    a, apps_a = scenarios.poisson_trace(8, seed=3)
+    b, _ = scenarios.poisson_trace(8, seed=3)
+    c, _ = scenarios.poisson_trace(8, seed=4)
+    assert [i.num_tasks for i in a] == [i.num_tasks for i in b]
+    assert [i.num_tasks for i in a] != [i.num_tasks for i in c]
+    # arrivals and departures both happen over the horizon
+    sizes = [i.num_tasks for i in a]
+    assert max(sizes) > sizes[0]
+    assert all(i.num_tasks == len(ap) for i, ap in zip(a, apps_a))
+
+
+def test_poisson_trace_lm_fraction():
+    insts, apps = scenarios.poisson_trace(10, seed=0, lm_fraction=0.5,
+                                          arrival_rate=6.0)
+    services = {semantics.APPS[i].service
+                for step in apps for i in step}
+    assert "lm" in services and services & {"detection", "segmentation"}
+
+
+def test_fps_trace_matches_fig7_default():
+    tr = scenarios.fps_trace()
+    assert tr.tolist() == [10.0, 7.0, 5.0, 3.0]
+    insts = scenarios.fps_trace_instances(tr)
+    assert [float(i.tasks.jobs_per_sec[0]) for i in insts] == tr.tolist()
+    assert all(i.num_tasks == 3 for i in insts)
+
+
+def test_fps_trace_seeded_sampling():
+    tr = scenarios.fps_trace(10, seed=1)
+    assert len(tr) == 10
+    assert set(tr).issubset({10.0, 7.0, 5.0, 3.0})
+
+
+def test_multi_cell_pools_share_grid_vary_capacity():
+    pools = scenarios.multi_cell_pools(4, seed=0)
+    assert len(pools) == 4
+    for p in pools:
+        for lv, lv0 in zip(p.levels, pools[0].levels):
+            assert np.array_equal(lv, lv0)
+    assert len({tuple(p.capacity) for p in pools}) > 1
+
+
+def test_mixed_workload_has_all_services():
+    ts = scenarios.mixed_workload_tasks(30, seed=2, lm_fraction=0.3)
+    services = {semantics.APPS[i].service for i in ts.app_idx}
+    assert services == {"detection", "segmentation", "lm"}
+    # LM jobs are small payloads with their own arrival rate
+    lm = np.array([semantics.APPS[i].service == "lm" for i in ts.app_idx])
+    assert (ts.bits_per_job[lm] < ts.bits_per_job[~lm].min()).all()
+
+
+def test_dynamic_trace_solves_as_one_batch():
+    insts, _ = scenarios.poisson_trace(6, seed=1, arrival_rate=5.0)
+    sols = solve_greedy_batch(insts)
+    for inst, sol in zip(insts, sols):
+        ref = solve_greedy(inst)
+        assert (sol.admitted == ref.admitted).all()
+        assert np.allclose(sol.alloc, ref.alloc)

@@ -62,6 +62,14 @@ def test_min_z_first_feasible():
 
 def test_agnostic_mapping():
     agn = S.agnostic_app(np.arange(len(S.APPS)))
+    alls = {"detection": "coco_all", "segmentation": "cityscapes_all",
+            "lm": "lm_all"}
     for i, a in enumerate(S.APPS):
-        want = "cityscapes_all" if a.service == "segmentation" else "coco_all"
-        assert agn[i] == S.APP_INDEX[want]
+        assert agn[i] == S.APP_INDEX[alls[a.service]]
+
+
+def test_lm_apps_registered_after_paper_apps():
+    # Fig. 6/7 scenario draws index into the first 10 (paper Tab. II) apps;
+    # the LM extension must not shift them.
+    assert S.APPS[:len(S.PAPER_APPS)] == S.PAPER_APPS
+    assert all(a.service == "lm" for a in S.LM_APPS)

@@ -1,8 +1,7 @@
 """Serving engine: admission, semantic compression, eviction, metrics."""
-import numpy as np
-
 from repro.core import scenarios
 from repro.serving import EdgeServingEngine, SliceRequest
+from repro.serving.admission import SESM
 
 
 def _req(app, acc=0.30, lat=0.7, fps=4.0):
@@ -43,6 +42,25 @@ def test_reslice_can_evict_running_tasks():
         eng.submit(_req("coco_person", acc=0.2, fps=10.0))
     eng.reslice()
     assert len(eng.tasks) >= 1   # engine stays consistent after re-slice
+
+
+def test_solve_batch_matches_slice():
+    """Horizon evaluation: batched decisions == per-set slice() decisions."""
+    sesm = SESM(scenarios.colosseum_pool())
+    sets = [
+        [_req("coco_bags"), _req("cityscapes_flat")],
+        [],                                             # empty set stays empty
+        [_req("coco_animals", acc=0.50, fps=f) for f in (10.0, 3.0)],
+        [_req("coco_person", acc=0.2, fps=10.0)] * 8,
+    ]
+    batched = sesm.solve_batch(sets)
+    assert [len(d) for d in batched] == [len(s) for s in sets]
+    for rs, got in zip(sets, batched):
+        want = sesm.slice(rs)
+        for w, g in zip(want, got):
+            assert g.admitted == w.admitted
+            assert g.z == w.z
+            assert g.alloc == w.alloc
 
 
 def test_process_and_metrics():

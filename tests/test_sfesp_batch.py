@@ -1,0 +1,123 @@
+"""Batched sweep engine vs the per-instance numpy oracle (Alg. 1)."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (build_instance, scenarios, solve_greedy,
+                        solve_greedy_batch, stack_instances)
+
+
+def _random_instances():
+    """>= 8 instances with heterogeneous T, thresholds and fps, one pool."""
+    pool = scenarios.numerical_pool(2)
+    rng = np.random.default_rng(7)
+    insts = []
+    for i in range(10):
+        n = int(rng.integers(1, 45))
+        acc = ("low", "med", "high")[i % 3]
+        lat = ("low", "high")[i % 2]
+        insts.append(build_instance(pool, scenarios.numerical_tasks(
+            n, acc, lat, seed=i, jobs_per_sec=float(rng.uniform(1.0, 10.0)))))
+    return insts
+
+
+def _assert_matches_oracle(insts, *, semantic=True, flexible=True):
+    sols = solve_greedy_batch(insts, semantic=semantic, flexible=flexible)
+    assert len(sols) == len(insts)
+    for inst, sol in zip(insts, sols):
+        ref = solve_greedy(inst, semantic=semantic, flexible=flexible)
+        assert sol.admitted.shape == (inst.num_tasks,)
+        assert (sol.admitted == ref.admitted).all()
+        assert np.allclose(sol.alloc, ref.alloc)
+        assert np.allclose(sol.z, ref.z)
+        assert sol.objective == pytest.approx(ref.objective)
+        assert (sol.satisfied == ref.satisfied).all()
+
+
+def test_batched_matches_oracle_randomized():
+    _assert_matches_oracle(_random_instances())
+
+
+@pytest.mark.parametrize("semantic", [True, False])
+@pytest.mark.parametrize("flexible", [True, False])
+def test_batched_matches_oracle_all_quadrants(semantic, flexible):
+    insts = _random_instances()[:6]
+    _assert_matches_oracle(insts, semantic=semantic, flexible=flexible)
+
+
+def test_batched_single_task_instances():
+    pool = scenarios.numerical_pool(2)
+    insts = [build_instance(pool, scenarios.numerical_tasks(1, a, l, seed=s))
+             for s, (a, l) in enumerate([("low", "high"), ("med", "low"),
+                                         ("high", "high")])]
+    _assert_matches_oracle(insts)
+    sols = solve_greedy_batch(insts)
+    assert all(s.admitted.shape == (1,) for s in sols)
+
+
+def test_batched_all_infeasible_instance():
+    pool = scenarios.numerical_pool(2)
+    # unreachable accuracy (z* = -1 for every task) → nothing admitted
+    tasks = scenarios.numerical_tasks(12, "med", "high", seed=0)
+    hopeless_acc = dataclasses.replace(
+        tasks, min_accuracy=np.full(12, 0.99))
+    # unreachable latency → lat_ok empty for every task
+    hopeless_lat = dataclasses.replace(
+        tasks, max_latency=np.full(12, 1e-4))
+    feasible = scenarios.numerical_tasks(20, "low", "high", seed=1)
+    insts = [build_instance(pool, t)
+             for t in (hopeless_acc, feasible, hopeless_lat)]
+    _assert_matches_oracle(insts)
+    sols = solve_greedy_batch(insts)
+    assert sols[0].num_allocated == 0
+    assert sols[2].num_allocated == 0
+    assert sols[1].num_allocated > 0
+
+
+def test_batched_heterogeneous_capacities():
+    """Multi-cell: same level grid, different capacities/prices per cell."""
+    insts, _ = scenarios.multi_cell_trace(3, 3, seed=5)
+    assert len({tuple(i.pool.capacity) for i in insts}) > 1
+    _assert_matches_oracle(insts)
+    _assert_matches_oracle(insts, flexible=False)
+
+
+def test_batched_four_resource_pool():
+    pool = scenarios.numerical_pool(4)
+    insts = [build_instance(pool, scenarios.numerical_tasks(n, "med", "high",
+                                                            seed=n))
+             for n in (5, 15, 30)]
+    _assert_matches_oracle(insts)
+
+
+def test_stack_rejects_mismatched_grids():
+    a = build_instance(scenarios.numerical_pool(2),
+                       scenarios.numerical_tasks(5, "med", "high"))
+    b = build_instance(scenarios.numerical_pool(4),
+                       scenarios.numerical_tasks(5, "med", "high"))
+    with pytest.raises(ValueError, match="allocation grid"):
+        stack_instances([a, b])
+
+
+def test_stack_padding_layout():
+    insts = _random_instances()[:4]
+    st = stack_instances(insts)
+    tmax = max(i.num_tasks for i in insts)
+    assert st.batch_size == 4 and st.max_tasks == tmax
+    for b, inst in enumerate(insts):
+        t = inst.num_tasks
+        assert st.task_mask[b, :t].all() and not st.task_mask[b, t:].any()
+        assert np.isinf(st.lat[b, t:]).all()
+        assert (st.z_star_idx[b, t:] == -1).all()
+    assert st.num_tasks.tolist() == [i.num_tasks for i in insts]
+
+
+def test_batched_one_jit_call_scales_to_64():
+    """The acceptance-criterion sweep: 64 Fig. 6-style instances, one batch."""
+    insts, _ = scenarios.fig6_sweep(
+        2, n_tasks=(10, 20, 30, 40), acc_levels=("low", "med", "high"),
+        lat_levels=("low", "high"), seeds=(0, 1, 2))
+    insts = insts[:64]
+    assert len(insts) == 64
+    _assert_matches_oracle(insts)
