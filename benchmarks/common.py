@@ -1,8 +1,13 @@
-"""Shared benchmark utilities: timing + CSV row emission."""
+"""Shared benchmark utilities: timing + CSV row emission + JSON capture."""
 
+import json
 import time
 
 import numpy as np
+
+# every row() call also lands here so benchmarks.run can dump a
+# machine-readable BENCH_sweep.json (perf trajectory tracked across PRs)
+RESULTS: list[dict] = []
 
 
 def time_fn(fn, *args, warmup=1, iters=5, **kw):
@@ -16,5 +21,28 @@ def time_fn(fn, *args, warmup=1, iters=5, **kw):
     return float(np.median(ts)) * 1e6      # µs
 
 
-def row(name: str, us: float, derived: str):
-    print(f"{name},{us:.1f},{derived}")
+def _plain(v):
+    return v.item() if hasattr(v, "item") else v
+
+
+def row(name: str, us: float, derived: str = "", **fields):
+    """Emit one benchmark row: CSV to stdout, structured dict to RESULTS.
+
+    ``fields`` are machine-readable extras (speedups, B/Tmax/A, ...); they are
+    appended to the CSV derived column as ``k=v`` pairs and stored typed in
+    the JSON record.
+    """
+    extra = ";".join(f"{k}={v}" for k, v in fields.items())
+    text = ";".join(x for x in (derived, extra) if x)
+    print(f"{name},{us:.1f},{text}")
+    rec = {"name": name, "us": round(float(us), 1)}
+    rec.update({k: _plain(v) for k, v in fields.items()})
+    if derived:
+        rec["derived"] = derived
+    RESULTS.append(rec)
+
+
+def dump_results(path: str):
+    with open(path, "w") as f:
+        json.dump({"rows": RESULTS}, f, indent=2, sort_keys=True)
+        f.write("\n")

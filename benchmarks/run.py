@@ -1,13 +1,15 @@
 """Benchmark harness entry: one section per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows (benchmark contract).
-Run: PYTHONPATH=src python -m benchmarks.run [section ...]
+Prints ``name,us_per_call,derived`` CSV rows (benchmark contract) and writes
+every row to ``BENCH_sweep.json`` (per-benchmark µs + typed extras such as
+speedups and B/Tmax/A) so the perf trajectory is tracked across PRs instead
+of lost in stdout. Run: PYTHONPATH=src python -m benchmarks.run [section ...]
 """
 
 import sys
 
-from . import (fig2_accuracy, fig2_latency, fig6_numerical, fig7_colosseum,
-               kernel_perf, roofline, solver_perf, sweep_perf)
+from . import (common, fig2_accuracy, fig2_latency, fig6_numerical,
+               fig7_colosseum, kernel_perf, roofline, solver_perf, sweep_perf)
 
 SECTIONS = {
     "fig2_accuracy": fig2_accuracy.main,     # paper Fig. 2-left
@@ -26,6 +28,9 @@ def main() -> None:
     print("name,us_per_call,derived")
     for name in picks:
         SECTIONS[name]()
+    common.dump_results("BENCH_sweep.json")
+    print(f"# wrote BENCH_sweep.json ({len(common.RESULTS)} rows)",
+          file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -1,23 +1,29 @@
 """Batched sweep engine vs sequential per-instance solving.
 
 The ROADMAP north star is "as many scenarios as you can imagine, as fast as
-the hardware allows": this benchmark times a Fig. 6-style 64-instance sweep
-(and a Poisson dynamic-traffic trace) through
+the hardware allows": this benchmark times Fig. 6-style sweeps, dynamic
+Poisson traces and multi-cell traces through
 
   * the sequential JAX path — ``solve_greedy_jax`` in a Python loop, one jit
     dispatch per instance (the pre-batching behaviour of fig6_numerical),
   * the batched path — ``stack_instances`` + ``solve_greedy_batch``, the whole
     sweep in ONE device program,
+  * the grouped path — ``solve_greedy_many`` dispatching a MIXED-grid trace
+    (per-cell ``pool.levels``) as a few bucketed device programs,
+  * the fused-kernel path — ``solve_greedy_batch(inner="pallas")``, the whole
+    admission round in one Pallas kernel (interpret mode off-TPU, so on CPU
+    this row measures the interpreter, not the hardware win),
 
-and reports per-instance solve time plus the batched speedup. The numpy
-reference is included for scale. Decisions are asserted identical across
-paths before timing (the engine is only fast if it is also right).
+plus the host-side stacking fast path (``stack_instances`` vs ``restack``).
+Decisions are asserted identical across paths before timing (the engine is
+only fast if it is also right).
 """
 
 import numpy as np
 
-from repro.core import (scenarios, solve_greedy, solve_greedy_batch,
-                        solve_greedy_jax, stack_instances)
+from repro.core import (restack, scenarios, solve_greedy, solve_greedy_batch,
+                        solve_greedy_jax, solve_greedy_many, stack_instances)
+from repro.core.greedy import _greedy_jax_batch
 from .common import row, time_fn
 
 
@@ -51,13 +57,63 @@ def _bench(name: str, insts):
     us_bat = time_fn(lambda: solve_greedy_batch(stacked), iters=3)
     us_np = time_fn(lambda: [solve_greedy(i) for i in insts], iters=1)
 
-    row(f"sweep/{name}/seq_jax", us_seq, f"per_instance_us={us_seq/n:.1f}")
-    row(f"sweep/{name}/numpy", us_np, f"per_instance_us={us_np/n:.1f}")
+    row(f"sweep/{name}/seq_jax", us_seq, per_instance_us=round(us_seq / n, 1))
+    row(f"sweep/{name}/numpy", us_np, per_instance_us=round(us_np / n, 1))
     row(f"sweep/{name}/batched", us_bat,
-        f"per_instance_us={us_bat/n:.1f}"
-        f";B={n};Tmax={stacked.max_tasks};A={stacked.num_allocs}"
-        f";speedup_vs_seq_jax={us_seq/us_bat:.1f}x")
+        per_instance_us=round(us_bat / n, 1), B=n, Tmax=stacked.max_tasks,
+        A=stacked.num_allocs, speedup_vs_seq_jax=round(us_seq / us_bat, 1))
     return us_seq / us_bat
+
+
+def _bench_mixed_grid():
+    """Heterogeneous per-cell grids → grouped dispatch via solve_greedy_many."""
+    insts, _ = scenarios.multi_cell_trace(4, 8, seed=1, n_grids=2)
+    n = len(insts)
+    n_grids = len({i.grid.tobytes() for i in insts})
+    _check_equivalence(insts, solve_greedy_many(insts))
+
+    us_seq = time_fn(lambda: [solve_greedy_jax(i) for i in insts], iters=3)
+    us_many = time_fn(lambda: solve_greedy_many(insts), iters=3)
+
+    # same-bucket program reuse: a fresh trace with the same grid/bucket
+    # shapes must not retrace the batched device program
+    cache_before = _greedy_jax_batch._cache_size()
+    insts2, _ = scenarios.multi_cell_trace(4, 8, seed=3, n_grids=2)
+    solve_greedy_many(insts2)
+    recompiles = _greedy_jax_batch._cache_size() - cache_before
+
+    row("sweep/multicell_mixed_grid_4x8/seq_jax", us_seq,
+        per_instance_us=round(us_seq / n, 1))
+    row("sweep/multicell_mixed_grid_4x8/grouped", us_many,
+        per_instance_us=round(us_many / n, 1), B=n, grids=n_grids,
+        speedup_vs_seq_jax=round(us_seq / us_many, 1),
+        recompiles_on_second_sweep=recompiles)
+    return us_seq / us_many
+
+
+def _bench_pallas_inner():
+    """Fused batch-round kernel path (interpret mode off-TPU)."""
+    insts = _sweep_64()[:16]
+    stacked = stack_instances(insts)
+    _check_equivalence(insts, solve_greedy_batch(stacked, inner="pallas"))
+    us_jnp = time_fn(lambda: solve_greedy_batch(stacked), iters=3)
+    us_pal = time_fn(lambda: solve_greedy_batch(stacked, inner="pallas"),
+                     iters=3)
+    row("sweep/fig6_16/batched_pallas_inner", us_pal, B=len(insts),
+        Tmax=stacked.max_tasks, A=stacked.num_allocs,
+        vs_jnp_inner=round(us_pal / us_jnp, 2))
+
+
+def _bench_restack():
+    """Host-side stacking fast path: fresh buffers vs buffer reuse."""
+    insts = _sweep_64()
+    st = stack_instances(insts)
+    us_stack = time_fn(lambda: stack_instances(insts), iters=5)
+    us_restack = time_fn(lambda: restack(st, insts), iters=5)
+    row("sweep/stack_64", us_stack, B=len(insts), Tmax=st.max_tasks,
+        A=st.num_allocs)
+    row("sweep/restack_64", us_restack,
+        speedup_vs_stack=round(us_stack / max(us_restack, 1e-9), 1))
 
 
 def main():
@@ -70,8 +126,14 @@ def main():
     cells, _ = scenarios.multi_cell_trace(4, 8, seed=1)
     _bench("multicell_4x8", cells)
 
+    mixed_speedup = _bench_mixed_grid()
+    _bench_pallas_inner()
+    _bench_restack()
+
     row("sweep/acceptance", 0.0,
-        f"batched_speedup_64={speedup:.1f}x (target >=5x)")
+        batched_speedup_64=round(speedup, 1),
+        mixed_grid_speedup=round(mixed_speedup, 1),
+        target=">=5x")
 
 
 if __name__ == "__main__":

@@ -2,10 +2,10 @@
 
 from .types import (ProblemInstance, ResourcePool, Solution, StackedInstances,
                     TaskSet, make_allocation_grid)
-from .sfesp import (build_instance, check_solution, default_z_grid,
-                    objective_value, stack_instances)
+from .sfesp import (build_instance, check_solution, default_z_grid, next_pow2,
+                    objective_value, restack, stack_instances)
 from .greedy import (primal_gradient, solve, solve_greedy, solve_greedy_batch,
-                     solve_greedy_jax)
+                     solve_greedy_jax, solve_greedy_many)
 from .exact import solve_exact
 from .baselines import ALGORITHMS, run_algorithm
 from . import latency, scenarios, semantics
@@ -13,8 +13,9 @@ from . import latency, scenarios, semantics
 __all__ = [
     "ProblemInstance", "ResourcePool", "Solution", "StackedInstances",
     "TaskSet", "make_allocation_grid", "build_instance", "check_solution",
-    "default_z_grid", "objective_value", "stack_instances", "primal_gradient",
-    "solve", "solve_greedy", "solve_greedy_batch", "solve_greedy_jax",
+    "default_z_grid", "next_pow2", "objective_value", "restack",
+    "stack_instances", "primal_gradient", "solve", "solve_greedy",
+    "solve_greedy_batch", "solve_greedy_jax", "solve_greedy_many",
     "solve_exact", "ALGORITHMS", "run_algorithm", "latency", "scenarios",
     "semantics",
 ]

@@ -25,11 +25,12 @@ import jax
 import jax.numpy as jnp
 
 from . import semantics
-from .sfesp import objective_value, stack_instances
+from .sfesp import next_pow2, objective_value, stack_instances
 from .types import ProblemInstance, Solution, StackedInstances
 
 __all__ = ["primal_gradient", "solve_greedy", "solve_greedy_jax",
-           "solve_greedy_batch", "solve", "lexicographic_cost"]
+           "solve_greedy_batch", "solve_greedy_many", "solve",
+           "lexicographic_cost"]
 
 _EPS_DEN = 1e-9
 
@@ -261,9 +262,9 @@ def _batch_pg(grid, price, cap, occupied):
     )(price, cap, occupied)
 
 
-@functools.partial(jax.jit, static_argnames=("flexible",))
+@functools.partial(jax.jit, static_argnames=("flexible", "inner"))
 def _greedy_jax_batch(lat_ok, grid, price, cap, alive0, cost,
-                      flexible: bool = True):
+                      flexible: bool = True, inner: str = "jnp"):
     """Solve B padded instances in ONE device program.
 
     ``lat_ok`` (B, Tmax, A), ``price``/``cap`` (B, m), ``alive0`` (B, Tmax);
@@ -281,9 +282,13 @@ def _greedy_jax_batch(lat_ok, grid, price, cap, alive0, cost,
       2. tau  = first alive task whose row intersects {PG == V},
       3. s*   = first-max PG allocation within tau's row (tiny (B, A) argmax),
 
-    which reproduces the sequential first-max tie-breaking bit-for-bit. The
-    MinRes path (flexible=False) needs each task's OWN min-cost allocation, so
-    it keeps the vmapped dense round.
+    which reproduces the sequential first-max tie-breaking bit-for-bit.
+    ``inner="pallas"`` serves steps 1-3 (plus cap-feasibility and the
+    gradient itself) from the fused ``kernels.pg.batch_round`` kernel so the
+    per-round intermediates live only in VMEM; ``inner="jnp"`` keeps the
+    bit-domain jnp round. The MinRes path (flexible=False) needs each task's
+    OWN min-cost allocation, so it keeps the vmapped dense round regardless
+    of ``inner``.
     """
     B, tmax, A = lat_ok.shape
     m = grid.shape[1]
@@ -306,34 +311,44 @@ def _greedy_jax_batch(lat_ok, grid, price, cap, alive0, cost,
 
     lat_bits = _pack_bits(lat_ok)                          # (B, T, W) u32
 
+    if inner == "pallas":
+        from repro.kernels.pg import pg as pg_kernel
+
+        def round_fn(occupied, alive):
+            return pg_kernel.batch_round(lat_bits, alive, grid, price, cap,
+                                         occupied)
+    else:
+        def round_fn(occupied, alive):
+            remaining = cap - occupied
+            cap_ok = (grid[None] <= remaining[:, None, :] + 1e-9).all(-1)
+            pg = _batch_pg(grid, price, cap, occupied)                 # (B, A)
+
+            # columns lat-feasible for at least one alive task (bit domain)
+            rows = jnp.where(alive[:, :, None], lat_bits, jnp.uint32(0))
+            col_bits = jax.lax.reduce(rows, np.uint32(0), jax.lax.bitwise_or,
+                                      (1,))                            # (B, W)
+            col_any = _unpack_bits(col_bits, A)                        # (B, A)
+
+            pgm = jnp.where(cap_ok & col_any, pg, -jnp.inf)
+            v = pgm.max(-1)                                            # (B,)
+
+            # first alive task whose feasible set attains V
+            hit_bits = _pack_bits(cap_ok & (pgm == v[:, None]))        # (B, W)
+            t_hit = ((lat_bits & hit_bits[:, None, :]) != 0).any(-1) & alive
+            tau = jnp.argmax(t_hit, axis=1)                            # (B,)
+
+            # tau's own first-max allocation (dense, but only (B, A))
+            lat_tau = _unpack_bits(
+                jnp.take_along_axis(lat_bits, tau[:, None, None],
+                                    axis=1)[:, 0], A)
+            cap_pgm = jnp.where(cap_ok, pg, -jnp.inf)
+            best_a = jnp.where(lat_tau, cap_pgm, -jnp.inf).argmax(-1)  # (B,)
+            return v, tau, best_a
+
     def body(state):
         admitted, alloc_idx, occupied, alive = state
-        remaining = cap - occupied
-        cap_ok = (grid[None] <= remaining[:, None, :] + 1e-9).all(-1)  # (B, A)
-        pg = _batch_pg(grid, price, cap, occupied)                     # (B, A)
-
-        # columns lat-feasible for at least one alive task (bit domain)
-        rows = jnp.where(alive[:, :, None], lat_bits, jnp.uint32(0))
-        col_bits = jax.lax.reduce(rows, np.uint32(0), jax.lax.bitwise_or,
-                                  (1,))                                # (B, W)
-        col_any = _unpack_bits(col_bits, A)                            # (B, A)
-
-        pgm = jnp.where(cap_ok & col_any, pg, -jnp.inf)
-        v = pgm.max(-1)                                                # (B,)
+        v, tau, best_a = round_fn(occupied, alive)
         admit = v > -jnp.inf
-
-        # first alive task whose feasible set attains V
-        hit_bits = _pack_bits(cap_ok & (pgm == v[:, None]))            # (B, W)
-        t_hit = ((lat_bits & hit_bits[:, None, :]) != 0).any(-1) & alive
-        tau = jnp.argmax(t_hit, axis=1)                                # (B,)
-
-        # tau's own first-max allocation (dense, but only (B, A))
-        lat_tau = _unpack_bits(
-            jnp.take_along_axis(lat_bits, tau[:, None, None], axis=1)[:, 0],
-            A)
-        cap_pgm = jnp.where(cap_ok, pg, -jnp.inf)
-        best_a = jnp.where(lat_tau, cap_pgm, -jnp.inf).argmax(-1)      # (B,)
-
         admitted = admitted.at[bidx, tau].set(admitted[bidx, tau] | admit)
         alloc_idx = alloc_idx.at[bidx, tau].set(
             jnp.where(admit, best_a.astype(jnp.int32), alloc_idx[bidx, tau]))
@@ -369,8 +384,9 @@ def solve_greedy_jax(inst: ProblemInstance, *, semantic: bool = True,
                           np.asarray(alloc_idx, np.int64), z_idx)
 
 
-def solve_greedy_batch(insts, *, semantic: bool = True,
-                       flexible: bool = True) -> list[Solution]:
+def solve_greedy_batch(insts, *, semantic: bool = True, flexible: bool = True,
+                       inner: str = "jnp",
+                       pad_batch_to: int | None = None) -> list[Solution]:
     """Batched sweep engine: solve many instances in one jit call.
 
     ``insts`` is a sequence of :class:`ProblemInstance` (stacked on the fly)
@@ -381,6 +397,12 @@ def solve_greedy_batch(insts, *, semantic: bool = True,
     so instances whose float64 gradient ordering hinges on sub-f32-ulp
     differences may break argmax ties differently. Returns one
     :class:`Solution` per instance in input order.
+
+    ``inner="pallas"`` serves the flexible round from the fused
+    ``kernels.pg.batch_round`` kernel (MinRes falls back to the dense vmapped
+    round). ``pad_batch_to`` pads the DEVICE batch with inert instances
+    (never-alive, unit capacity) so sweeps bucketed to a common (B, Tmax)
+    shape reuse one compiled program; outputs are sliced back to the real B.
     """
     stacked = insts if isinstance(insts, StackedInstances) \
         else stack_instances(insts)
@@ -393,12 +415,26 @@ def solve_greedy_batch(insts, *, semantic: bool = True,
     lat_ok = lat <= stacked.max_latency[:, :, None]       # padded rows: False
     alive0 = (z_idx >= 0) & lat_ok.any(axis=2) & stacked.task_mask
     cost = lexicographic_cost(stacked.grid)
+    B = stacked.batch_size
+    price_d, cap_d = stacked.price, stacked.capacity
+    if pad_batch_to is not None and pad_batch_to > B:
+        pad = pad_batch_to - B
+        m = stacked.m
+        lat_ok = np.concatenate(
+            [lat_ok, np.zeros((pad,) + lat_ok.shape[1:], bool)])
+        alive0 = np.concatenate(
+            [alive0, np.zeros((pad, alive0.shape[1]), bool)])
+        # unit capacity keeps the in-kernel gradient NaN-free; the padded
+        # instances start with no alive candidates, so they never admit
+        price_d = np.concatenate([price_d, np.zeros((pad, m))])
+        cap_d = np.concatenate([cap_d, np.ones((pad, m))])
     admitted, alloc_idx, _ = _greedy_jax_batch(
         jnp.asarray(lat_ok), jnp.asarray(stacked.grid),
-        jnp.asarray(stacked.price), jnp.asarray(stacked.capacity),
-        jnp.asarray(alive0), jnp.asarray(cost), flexible=flexible)
-    admitted = np.asarray(admitted)
-    alloc_idx = np.asarray(alloc_idx, np.int64)
+        jnp.asarray(price_d), jnp.asarray(cap_d),
+        jnp.asarray(alive0), jnp.asarray(cost), flexible=flexible,
+        inner=inner)
+    admitted = np.asarray(admitted)[:B]
+    alloc_idx = np.asarray(alloc_idx, np.int64)[:B]
 
     # vectorized _pack_solution over the whole batch (per-instance Python
     # packing would dwarf the device solve at sweep sizes)
@@ -421,6 +457,41 @@ def solve_greedy_batch(insts, *, semantic: bool = True,
         out.append(Solution(
             admitted=admitted[b, :t], alloc=alloc[b, :t], z=z[b, :t],
             objective=float(objective[b]), satisfied=satisfied[b, :t]))
+    return out
+
+
+def solve_greedy_many(insts, *, semantic: bool = True, flexible: bool = True,
+                      inner: str = "jnp") -> list[Solution]:
+    """Grid-grouped sweep dispatcher: batch-solve instances with MIXED grids.
+
+    :func:`stack_instances` requires one shared allocation grid;
+    heterogeneous multi-cell traces (per-cell ``pool.levels``) previously
+    fell back to a per-instance Python loop. This front door groups the
+    instances by grid identity and solves each group through the batched
+    engine, padding ``Tmax`` and the device batch to power-of-two buckets so
+    repeated sweeps with fluctuating task counts / group sizes land on a
+    handful of cached device programs instead of recompiling.
+
+    Returns one :class:`Solution` per instance, in input order. Decisions are
+    exactly those of :func:`solve_greedy_batch` on each group (hence the same
+    f32 tie-break caveat vs the numpy oracle).
+    """
+    insts = list(insts)
+    groups: dict[bytes, list[int]] = {}
+    for i, inst in enumerate(insts):
+        key = np.ascontiguousarray(inst.grid).tobytes() \
+            + repr(inst.grid.shape).encode()
+        groups.setdefault(key, []).append(i)
+    out: list[Solution | None] = [None] * len(insts)
+    for idxs in groups.values():
+        sub = [insts[i] for i in idxs]
+        tmax = next_pow2(max(inst.num_tasks for inst in sub))
+        stacked = stack_instances(sub, tmax=tmax)
+        sols = solve_greedy_batch(stacked, semantic=semantic,
+                                  flexible=flexible, inner=inner,
+                                  pad_batch_to=next_pow2(len(sub)))
+        for i, sol in zip(idxs, sols):
+            out[i] = sol
     return out
 
 

@@ -34,7 +34,8 @@ import numpy as np
 
 from . import latency as lat_mod
 from . import semantics
-from .sfesp import build_instance
+from .greedy import solve_greedy_batch
+from .sfesp import build_instance, next_pow2, restack, stack_instances
 from .types import ProblemInstance, ResourcePool, TaskSet
 
 __all__ = [
@@ -42,6 +43,7 @@ __all__ = [
     "numerical_pool", "numerical_tasks", "colosseum_pool", "colosseum_tasks",
     "fig6_sweep", "poisson_trace", "fps_trace", "fps_trace_instances",
     "multi_cell_pools", "multi_cell_trace", "mixed_workload_tasks",
+    "closed_loop_trace",
 ]
 
 # paper Section V-B threshold definitions ("lm" extends them to the
@@ -254,37 +256,45 @@ def fps_trace_instances(trace: np.ndarray, *, min_acc: float = 0.30,
             for fps in np.asarray(trace)]
 
 
-def multi_cell_pools(n_cells: int, m: int = 2,
-                     seed: int = 0) -> list[ResourcePool]:
-    """Heterogeneous-capacity cells sharing one allocation grid.
+def multi_cell_pools(n_cells: int, m: int = 2, seed: int = 0,
+                     n_grids: int = 1) -> list[ResourcePool]:
+    """Heterogeneous-capacity cells, optionally with heterogeneous grids.
 
-    Every cell keeps the canonical level sets (so instances stack), but
-    capacity varies ±40 % around the numerical pool — a small O-RAN
+    Capacity varies ±40 % around the numerical pool — a small O-RAN
     deployment where each cell's RIC solves its own SF-ESP yet the operator
-    sweeps all cells in one device program.
+    sweeps all cells in one device program. With ``n_grids == 1`` (default)
+    every cell keeps the canonical level sets, so instances stack into ONE
+    batch; ``n_grids > 1`` cycles cells through coarsened ``pool.levels``
+    (cell c keeps every ``(c % n_grids) + 1``-th level) — macro vs small
+    cells exposing different allocation granularities. Mixed-grid traces
+    dispatch through :func:`repro.core.solve_greedy_many`.
     """
     rng = np.random.default_rng(seed)
     base = numerical_pool(m)
     pools = []
-    for _ in range(n_cells):
+    for c in range(n_cells):
         scale = rng.uniform(0.6, 1.4, size=base.m)
         cap = np.maximum(np.round(base.capacity * scale), 2.0)
+        stride = (c % n_grids) + 1
+        levels = tuple(np.asarray(lv)[::stride] for lv in base.levels)
         pools.append(dataclasses.replace(
-            base, capacity=cap, price=1.0 / cap))
+            base, capacity=cap, price=1.0 / cap, levels=levels))
     return pools
 
 
 def multi_cell_trace(n_cells: int, horizon: int, *, m: int = 2,
                      acc: str = "med", lat: str = "high", seed: int = 0,
                      arrival_rate: float = 4.0, mean_holding: float = 5.0,
+                     n_grids: int = 1,
                      ) -> tuple[list[ProblemInstance], list[dict]]:
     """Per-cell Poisson traffic over a horizon, flattened time-major.
 
     Returns ``horizon * n_cells`` instances (cell-adjacent within a step) and
-    matching ``{"step", "cell"}`` metadata; the full trace stacks into one
-    batch because all cells share the level grid.
+    matching ``{"step", "cell"}`` metadata. With the default ``n_grids=1``
+    the full trace stacks into one batch (shared level grid); ``n_grids > 1``
+    yields per-cell allocation grids — solve via ``solve_greedy_many``.
     """
-    pools = multi_cell_pools(n_cells, m=m, seed=seed)
+    pools = multi_cell_pools(n_cells, m=m, seed=seed, n_grids=n_grids)
     insts, meta = [], []
     per_cell = [poisson_trace(horizon, pool=p, acc=acc, lat=lat,
                               seed=seed + 1000 * c,
@@ -296,3 +306,68 @@ def multi_cell_trace(n_cells: int, horizon: int, *, m: int = 2,
             insts.append(per_cell[cell][step])
             meta.append(dict(step=step, cell=cell))
     return insts, meta
+
+
+def closed_loop_trace(n_cells: int, horizon: int, *, m: int = 2,
+                      acc: str = "med", lat: str = "high", seed: int = 0,
+                      arrival_rate: float = 4.0, mean_holding: float = 5.0,
+                      max_retries: int = 2, semantic: bool = True,
+                      flexible: bool = True) -> list[dict]:
+    """Closed-loop multi-cell admission: decisions feed back into the trace.
+
+    Unlike :func:`multi_cell_trace` (open loop — every step's task set is
+    exogenous), each step's candidate set per cell is (i) tasks admitted last
+    step that have not yet departed, plus (ii) fresh Poisson arrivals, plus
+    (iii) rejected tasks retrying up to ``max_retries`` times before leaving
+    (the ROADMAP closed-loop case: admitted tasks persist, evicted ones
+    retry). Every step solves one batch (one instance per cell) through the
+    batched sweep engine; :func:`repro.core.sfesp.restack` reuses ONE set of
+    padded host buffers across the whole horizon, re-stacking only when a
+    step outgrows the current power-of-two ``Tmax`` bucket.
+
+    Returns one record per (step, cell):
+    ``{"step", "cell", "offered", "admitted", "objective", "restacked"}``
+    where ``restacked`` flags steps that had to allocate fresh buffers.
+    """
+    pools = multi_cell_pools(n_cells, m=m, seed=seed)
+    rng = np.random.default_rng(seed + 17)
+    n_paper = len(semantics.PAPER_APPS)
+    # per-cell live tasks: (app_idx, departure_step, retries_left)
+    active: list[list[dict]] = [[] for _ in range(n_cells)]
+    stacked = None
+    records = []
+    for step in range(horizon):
+        for c in range(n_cells):
+            active[c] = [t for t in active[c] if t["depart"] > step]
+            for _ in range(rng.poisson(arrival_rate)):
+                active[c].append(dict(
+                    app=int(rng.integers(0, n_paper)),
+                    depart=step + rng.exponential(mean_holding),
+                    retries=max_retries))
+        insts = [build_instance(pools[c], _tasks_from_apps(
+            np.array([t["app"] for t in active[c]], np.int64), acc, lat,
+            np.full(len(active[c]), 5.0))) for c in range(n_cells)]
+        tneed = max(len(a) for a in active)
+        fresh = stacked is None or tneed > stacked.max_tasks
+        if fresh:
+            stacked = stack_instances(insts, tmax=next_pow2(tneed))
+        else:
+            stacked = restack(stacked, insts)
+        sols = solve_greedy_batch(stacked, semantic=semantic,
+                                  flexible=flexible)
+        for c, sol in enumerate(sols):
+            keep = []
+            for t, task in enumerate(active[c]):
+                if sol.admitted[t]:
+                    keep.append(task)
+                else:
+                    task["retries"] -= 1
+                    if task["retries"] >= 0:   # max_retries re-offers total
+                        keep.append(task)
+            offered = len(active[c])
+            active[c] = keep
+            records.append(dict(step=step, cell=c, offered=offered,
+                                admitted=int(sol.num_allocated),
+                                objective=sol.objective,
+                                restacked=bool(fresh)))
+    return records

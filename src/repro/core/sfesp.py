@@ -9,6 +9,7 @@ by every solver, the property tests, and the serving admission controller.
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Sequence
 
 import numpy as np
@@ -19,7 +20,15 @@ from .types import (ProblemInstance, ResourcePool, Solution, StackedInstances,
                     TaskSet, make_allocation_grid)
 
 __all__ = ["build_instance", "check_solution", "objective_value",
-           "default_z_grid", "stack_instances"]
+           "default_z_grid", "stack_instances", "restack", "next_pow2"]
+
+
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= n (and >= 1) — the sweep engine's padding
+    buckets: padding Tmax/B to buckets means fluctuating trace sizes hit a
+    handful of cached device programs instead of recompiling per shape."""
+    n = int(n)
+    return 1 if n <= 1 else 1 << (n - 1).bit_length()
 
 
 def default_z_grid(n: int = 64) -> np.ndarray:
@@ -57,67 +66,134 @@ def build_instance(pool: ResourcePool, tasks: TaskSet,
     )
 
 
-def stack_instances(insts: Sequence[ProblemInstance]) -> StackedInstances:
+def _check_shared_grid(insts: Sequence[ProblemInstance], grid: np.ndarray,
+                       what: str):
+    for inst in insts:
+        if not np.array_equal(inst.grid, grid):
+            raise ValueError(
+                f"all {what} instances must share one allocation grid "
+                "(identical pool.levels); use solve_greedy_many to dispatch "
+                "mixed-grid sets per grid group")
+
+
+def _z_star_of(z_grid: np.ndarray, z_idx: np.ndarray) -> np.ndarray:
+    return np.where(z_idx >= 0, z_grid[np.clip(z_idx, 0, None)], 1.0)
+
+
+def _fill_stacked(st: StackedInstances, insts: tuple[ProblemInstance, ...],
+                  n_tasks: np.ndarray):
+    """Vectorized scatter of per-instance fields into the padded buffers.
+
+    One concatenate + one fancy-index store per field instead of a B-fold
+    Python copy loop — the stacking cost is dominated by the two (ΣT, A)
+    latency-table writes, which run at memcpy speed.
+    """
+    B = len(insts)
+    total = int(n_tasks.sum())
+    rows = np.repeat(np.arange(B), n_tasks)
+    starts = np.concatenate([[0], np.cumsum(n_tasks)[:-1]]).astype(np.int64)
+    cols = np.arange(total) - np.repeat(starts, n_tasks)
+
+    def cat(get):
+        return np.concatenate([np.asarray(get(i)) for i in insts], axis=0)
+
+    st.lat[rows, cols] = cat(lambda i: i.lat)
+    st.lat_agnostic[rows, cols] = cat(lambda i: i.lat_agnostic)
+    st.z_star_idx[rows, cols] = cat(lambda i: i.z_star_idx)
+    st.z_star_idx_agnostic[rows, cols] = cat(lambda i: i.z_star_idx_agnostic)
+    st.z_star[rows, cols] = cat(lambda i: _z_star_of(i.z_grid, i.z_star_idx))
+    st.z_star_agnostic[rows, cols] = cat(
+        lambda i: _z_star_of(i.z_grid, i.z_star_idx_agnostic))
+    st.app_idx[rows, cols] = cat(lambda i: i.tasks.app_idx)
+    st.min_accuracy[rows, cols] = cat(lambda i: i.tasks.min_accuracy)
+    st.max_latency[rows, cols] = cat(lambda i: i.tasks.max_latency)
+    st.task_mask[rows, cols] = True
+    st.capacity[:] = [i.pool.capacity for i in insts]
+    st.price[:] = [i.pool.price for i in insts]
+
+
+def stack_instances(insts: Sequence[ProblemInstance], *,
+                    tmax: int | None = None) -> StackedInstances:
     """Stack instances into one padded batch for the sweep engine.
 
     Instances must share the allocation grid (identical ``pool.levels``);
     capacities/prices may differ per instance (multi-cell pools). Tasks are
     padded to ``Tmax`` with never-feasible rows (lat=+inf, z*_idx=-1) so the
-    batched solver's masked rounds ignore them.
+    batched solver's masked rounds ignore them. ``tmax`` overrides the
+    natural padding target (must be >= the largest task count) — the grouped
+    dispatcher passes power-of-two buckets so repeated sweeps share device
+    programs.
     """
     insts = tuple(insts)
     if not insts:
         raise ValueError("stack_instances needs at least one instance")
     grid = insts[0].grid
-    for inst in insts[1:]:
-        if not np.array_equal(inst.grid, grid):
-            raise ValueError(
-                "all stacked instances must share one allocation grid "
-                "(identical pool.levels); stack per pool family instead")
+    _check_shared_grid(insts[1:], grid, "stacked")
     B = len(insts)
     A, m = grid.shape
     n_tasks = np.array([inst.num_tasks for inst in insts], np.int64)
-    tmax = max(1, int(n_tasks.max()))
+    natural = max(1, int(n_tasks.max()))
+    tmax = natural if tmax is None else int(tmax)
+    if tmax < natural:
+        raise ValueError(f"tmax={tmax} < largest task count {natural}")
 
-    lat = np.full((B, tmax, A), np.inf)
-    lat_agn = np.full((B, tmax, A), np.inf)
-    zi = np.full((B, tmax), -1, np.int64)
-    zi_agn = np.full((B, tmax), -1, np.int64)
-    z_star = np.ones((B, tmax))
-    z_star_agn = np.ones((B, tmax))
-    app = np.zeros((B, tmax), np.int64)
-    min_acc = np.full((B, tmax), np.inf)
-    max_lat = np.zeros((B, tmax))
-    mask = np.zeros((B, tmax), bool)
-    cap = np.zeros((B, m))
-    price = np.zeros((B, m))
-    for b, inst in enumerate(insts):
-        t = inst.num_tasks
-        lat[b, :t] = inst.lat
-        lat_agn[b, :t] = inst.lat_agnostic
-        zi[b, :t] = inst.z_star_idx
-        zi_agn[b, :t] = inst.z_star_idx_agnostic
-        z_star[b, :t] = np.where(
-            inst.z_star_idx >= 0,
-            inst.z_grid[np.clip(inst.z_star_idx, 0, None)], 1.0)
-        z_star_agn[b, :t] = np.where(
-            inst.z_star_idx_agnostic >= 0,
-            inst.z_grid[np.clip(inst.z_star_idx_agnostic, 0, None)], 1.0)
-        app[b, :t] = inst.tasks.app_idx
-        min_acc[b, :t] = inst.tasks.min_accuracy
-        max_lat[b, :t] = inst.tasks.max_latency
-        mask[b, :t] = True
-        cap[b] = inst.pool.capacity
-        price[b] = inst.pool.price
-
-    return StackedInstances(
-        instances=insts, grid=grid, capacity=cap, price=price,
-        lat=lat, lat_agnostic=lat_agn,
-        z_star_idx=zi, z_star_idx_agnostic=zi_agn,
-        z_star=z_star, z_star_agnostic=z_star_agn,
-        app_idx=app, min_accuracy=min_acc,
-        max_latency=max_lat, task_mask=mask, num_tasks=n_tasks,
+    st = StackedInstances(
+        instances=insts, grid=grid,
+        capacity=np.zeros((B, m)), price=np.zeros((B, m)),
+        lat=np.full((B, tmax, A), np.inf),
+        lat_agnostic=np.full((B, tmax, A), np.inf),
+        z_star_idx=np.full((B, tmax), -1, np.int64),
+        z_star_idx_agnostic=np.full((B, tmax), -1, np.int64),
+        z_star=np.ones((B, tmax)), z_star_agnostic=np.ones((B, tmax)),
+        app_idx=np.zeros((B, tmax), np.int64),
+        min_accuracy=np.full((B, tmax), np.inf),
+        max_latency=np.zeros((B, tmax)),
+        task_mask=np.zeros((B, tmax), bool), num_tasks=n_tasks,
     )
+    _fill_stacked(st, insts, n_tasks)
+    return st
+
+
+def restack(stacked: StackedInstances,
+            insts: Sequence[ProblemInstance]) -> StackedInstances:
+    """Refill a stacked batch with new instances, REUSING the padded buffers.
+
+    The closed-loop trace case: every step re-solves an admission problem
+    whose grid and batch size are fixed while tasks and capacities change;
+    reallocating the (B, Tmax, A) latency tables each step dominates the
+    host-side cost. Contract: same allocation grid, same batch size, and
+    every new instance's task count must fit the existing ``Tmax``
+    (otherwise a ValueError asks the caller to re-stack at a larger bucket).
+
+    The returned :class:`StackedInstances` SHARES the buffers of ``stacked``,
+    which must not be used afterwards.
+    """
+    insts = tuple(insts)
+    if len(insts) != stacked.batch_size:
+        raise ValueError(
+            f"restack needs the original batch size {stacked.batch_size}, "
+            f"got {len(insts)} instances; re-stack instead")
+    _check_shared_grid(insts, stacked.grid, "restacked")
+    n_tasks = np.array([inst.num_tasks for inst in insts], np.int64)
+    if n_tasks.max(initial=0) > stacked.max_tasks:
+        raise ValueError(
+            f"instance with {int(n_tasks.max())} tasks does not fit the "
+            f"stacked Tmax={stacked.max_tasks}; re-stack at a larger bucket")
+
+    # reset padding values, then vectorized refill
+    stacked.lat.fill(np.inf)
+    stacked.lat_agnostic.fill(np.inf)
+    stacked.z_star_idx.fill(-1)
+    stacked.z_star_idx_agnostic.fill(-1)
+    stacked.z_star.fill(1.0)
+    stacked.z_star_agnostic.fill(1.0)
+    stacked.app_idx.fill(0)
+    stacked.min_accuracy.fill(np.inf)
+    stacked.max_latency.fill(0.0)
+    stacked.task_mask.fill(False)
+    st = dataclasses.replace(stacked, instances=insts, num_tasks=n_tasks)
+    _fill_stacked(st, insts, n_tasks)
+    return st
 
 
 def objective_value(inst: ProblemInstance, admitted: np.ndarray,

@@ -157,8 +157,12 @@ class StackedInstances:
 
     All instances must share one enumerated allocation grid — i.e. identical
     ``pool.levels`` — but capacities and prices MAY differ per instance
-    (multi-cell pools with heterogeneous loads are the intended use).
-    Build via :func:`repro.core.sfesp.stack_instances`.
+    (multi-cell pools with heterogeneous loads are the intended use); sets
+    with mixed grids dispatch per group via ``greedy.solve_greedy_many``.
+    Build via :func:`repro.core.sfesp.stack_instances`; refill in place with
+    :func:`repro.core.sfesp.restack` (same grid/batch size, task counts
+    within ``Tmax`` — the refilled batch shares these buffers and the old
+    object must not be used afterwards).
     """
 
     instances: tuple[ProblemInstance, ...]

@@ -17,7 +17,7 @@ __all__ = ["pg_argmax"]
 
 
 def pg_argmax(grid, price, cap, occupied, remaining, lat_ok, alive, cost,
-              *, flexible: bool = True, interpret: bool = True,
+              *, flexible: bool = True, interpret: bool | None = None,
               block_t: int = 256, block_a: int = 512):
     """Returns (G (T,), best_a (T,), has_feasible (T,)) for one round."""
     cap_ok = (grid <= remaining[None, :] + 1e-9).all(axis=1)        # (A,)

@@ -1,10 +1,20 @@
-"""Pallas TPU kernel: fused feasibility-masked row max/argmax.
+"""Pallas TPU kernels: fused feasibility-masked reductions for the greedy.
 
 The SF-ESP greedy re-evaluates, every admission round, the best allocation per
 candidate task over the enumerated grid — a (T × A) masked argmax against a
 shared per-allocation score vector. At production scale (T = 4096 tasks,
 A = 16k allocations) the score matrix is 256 MB/round in f32; materializing it
 in HBM each of up to T rounds is the solver's dominant memory-bandwidth cost.
+
+Two kernels:
+
+* :func:`masked_argmax` — the single-instance inner step (per-task row
+  max/argmax) used by ``solve_greedy_jax(inner="pallas")``.
+* :func:`batch_round` — ONE fused round of the batched sweep engine
+  (``solve_greedy_batch(inner="pallas")``): cap-feasibility, primal-gradient
+  scoring, the global-max ``V`` reduction and the ``tau``/``best_a`` selection
+  over bit-packed (B, T, A) tiles, so no per-round (T, A)-sized intermediate
+  ever leaves VMEM.
 
 TPU adaptation (vs. a CUDA warp-shuffle argmax): tile (T, A) into
 (BT × BA) VMEM blocks with BA a multiple of 128 lanes, keep a running
@@ -24,9 +34,13 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["masked_argmax"]
+from .. import resolve_interpret
+
+__all__ = ["masked_argmax", "batch_round"]
 
 NEG_INF = float("-inf")
+# mirrors repro.core.greedy._EPS_DEN (primal-gradient denominator clamp)
+_EPS_DEN = 1e-9
 
 
 def _kernel(sel_ref, lat_ref, cap_ref, alive_ref, g_ref, idx_ref, *, ba: int):
@@ -57,7 +71,7 @@ def _kernel(sel_ref, lat_ref, cap_ref, alive_ref, g_ref, idx_ref, *, ba: int):
 @functools.partial(jax.jit,
                    static_argnames=("block_t", "block_a", "interpret"))
 def masked_argmax(sel, lat_ok, cap_ok, alive, *, block_t: int = 256,
-                  block_a: int = 512, interpret: bool = True):
+                  block_a: int = 512, interpret: bool | None = None):
     """Fused masked row max/argmax. See ``ref.masked_argmax_ref`` for
     semantics. Masks are int8 (0/1) on the wire for TPU-friendly layout.
 
@@ -66,7 +80,10 @@ def masked_argmax(sel, lat_ok, cap_ok, alive, *, block_t: int = 256,
       lat_ok: (T, A) bool/int8 — per-task latency feasibility (static).
       cap_ok: (A,) bool/int8 — allocation fits remaining capacity (per round).
       alive: (T,) bool/int8 — candidate mask (per round).
+      interpret: None → interpreter unless a compiled Pallas backend
+        (TPU/GPU) is the default device; explicit bools force a mode.
     """
+    interpret = resolve_interpret(interpret)
     t, a = lat_ok.shape
     bt = min(block_t, max(t, 1))
     ba = min(block_a, max(a, 1))
@@ -101,3 +118,130 @@ def masked_argmax(sel, lat_ok, cap_ok, alive, *, block_t: int = 256,
         interpret=interpret,
     )(sel_p, lat_p, cap_p, alive_p)
     return g[:t], idx[:t]
+
+
+# ---------------------------------------------------------------------------
+# Fused batched admission round (sweep engine inner step)
+# ---------------------------------------------------------------------------
+
+def _round_kernel(bits_ref, alive_ref, grid_ref, price_ref, cap_ref, occ_ref,
+                  v_ref, tau_ref, a_ref, *, bt: int, ap: int):
+    ti = pl.program_id(1)
+
+    @pl.when(ti == 0)
+    def _init():
+        v_ref[:] = jnp.full_like(v_ref, NEG_INF)
+        tau_ref[:] = jnp.zeros_like(tau_ref)
+        a_ref[:] = jnp.zeros_like(a_ref)
+
+    m = grid_ref.shape[0]
+    gridt = grid_ref[...]                                   # (m, AP) f32
+    price = price_ref[0, :]                                 # (m,)
+    cap = cap_ref[0, :]
+    occ = occ_ref[0, :]
+
+    # fused cap-feasibility + primal gradient (mirrors greedy.primal_gradient
+    # in f32; padded lanes carry grid=+inf and are never latency-feasible, so
+    # the NaNs they produce below are always masked out by `score`)
+    remaining = cap - occ
+    cap_ok = (gridt <= remaining[:, None] + 1e-9).all(axis=0)        # (AP,)
+    value = (price[:, None] * (cap[:, None] - gridt)).sum(axis=0)    # (AP,)
+    norm_use = (gridt / cap[:, None]).sum(axis=0)
+    pg_uni = value * jnp.sqrt(float(m)) / jnp.maximum(norm_use, _EPS_DEN)
+    o_norm = jnp.sqrt((occ * occ).sum())
+    weighted = (gridt * (occ / cap)[:, None]).sum(axis=0)
+    pg_occ = value * o_norm / jnp.maximum(weighted, _EPS_DEN)
+    pg = jnp.where((occ > 0.0).any(), pg_occ, pg_uni)                # (AP,)
+
+    # unpack the bit-packed latency tile: (BT, W) u32 → (BT, W·32) bool, the
+    # exact inverse of greedy._pack_bits (bit k of word w is column 32·w + k)
+    bits = bits_ref[0]                                      # (BT, W) u32
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (1, 1, 32), 2)
+    lat = ((bits[:, :, None] >> shifts) & 1).reshape(bt, ap) != 0
+    alive = alive_ref[0, :] != 0                            # (BT,)
+
+    score = jnp.where(lat & cap_ok[None, :] & alive[:, None],
+                      pg[None, :], NEG_INF)                 # (BT, AP)
+    row_max = score.max(axis=1)                             # (BT,)
+    blk_v = row_max.max()
+    t_loc = jnp.argmax(row_max).astype(jnp.int32)           # first row at blk_v
+    tids = jax.lax.broadcasted_iota(jnp.int32, (bt, 1), 0)
+    sel_row = jnp.where(tids == t_loc, score, NEG_INF).max(axis=0)   # (AP,)
+    a_loc = jnp.argmax(sel_row).astype(jnp.int32)           # first-max alloc
+
+    # strict > keeps the FIRST T-block attaining the global max — together
+    # with the in-block first-max argmaxes this reproduces the sequential
+    # first-max tie-breaking of the jnp round bit-for-bit.
+    better = blk_v > v_ref[0]
+    v_ref[0] = jnp.where(better, blk_v, v_ref[0])
+    tau_ref[0] = jnp.where(better, ti * bt + t_loc, tau_ref[0])
+    a_ref[0] = jnp.where(better, a_loc, a_ref[0])
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
+def batch_round(lat_bits, alive, grid, price, cap, occupied, *,
+                block_t: int = 128, interpret: bool | None = None):
+    """One fused admission round for a stacked batch (flexible mode).
+
+    Computes, per instance ``b``, the full decision of one
+    ``greedy._greedy_jax_batch`` round in a single ``pallas_call`` over
+    (B, T-blocks) tiles: the global best feasible gradient ``V``, the first
+    alive task attaining it, and that task's first-max allocation. The
+    (BT × A) score tile, the unpacked feasibility bits and the per-lane
+    gradient all live only in VMEM; HBM traffic per round is the packed
+    latency bits plus O(B·m) pool state.
+
+    See ``ref.batch_round_ref`` for the dense oracle.
+
+    Args:
+      lat_bits: (B, T, W) uint32 — bit-packed static latency feasibility
+        (W = ceil(A / 32), ``greedy._pack_bits`` layout).
+      alive: (B, T) bool/int8 — per-round candidate mask.
+      grid: (A, m) f32 — shared allocation grid.
+      price, cap, occupied: (B, m) f32 — per-instance pool state.
+
+    Returns:
+      v: (B,) f32 — best feasible gradient (-inf ⇒ nothing admissible),
+      tau: (B,) i32 — first alive task whose feasible set attains ``v``,
+      best_a: (B,) i32 — ``tau``'s first-max allocation index.
+    """
+    interpret = resolve_interpret(interpret)
+    b, t, w = lat_bits.shape
+    a, m = grid.shape
+    ap = w * 32
+    bt = min(block_t, max(t, 1))
+    tp = -(-t // bt) * bt
+
+    bits_p = jnp.zeros((b, tp, w), jnp.uint32).at[:, :t].set(lat_bits)
+    alive_p = jnp.zeros((b, tp), jnp.int8).at[:, :t].set(
+        alive.astype(jnp.int8))
+    # pad lanes beyond A with +inf so they can never be cap-feasible (their
+    # packed latency bits are zero anyway, so no padded lane is selectable)
+    grid_p = jnp.full((m, ap), jnp.inf, jnp.float32).at[:, :a].set(
+        grid.T.astype(jnp.float32))
+    as_f32 = lambda x: jnp.asarray(x, jnp.float32)
+
+    v, tau, best_a = pl.pallas_call(
+        functools.partial(_round_kernel, bt=bt, ap=ap),
+        grid=(b, tp // bt),
+        in_specs=[
+            pl.BlockSpec((1, bt, w), lambda bi, ti: (bi, ti, 0)),
+            pl.BlockSpec((1, bt), lambda bi, ti: (bi, ti)),
+            pl.BlockSpec((m, ap), lambda bi, ti: (0, 0)),
+            pl.BlockSpec((1, m), lambda bi, ti: (bi, 0)),
+            pl.BlockSpec((1, m), lambda bi, ti: (bi, 0)),
+            pl.BlockSpec((1, m), lambda bi, ti: (bi, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1,), lambda bi, ti: (bi,)),
+            pl.BlockSpec((1,), lambda bi, ti: (bi,)),
+            pl.BlockSpec((1,), lambda bi, ti: (bi,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(bits_p, alive_p, grid_p, as_f32(price), as_f32(cap), as_f32(occupied))
+    return v, tau, best_a

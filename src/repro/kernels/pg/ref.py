@@ -15,9 +15,10 @@ matrix; the Pallas kernel streams it through VMEM tiles instead.
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
-__all__ = ["masked_argmax_ref"]
+__all__ = ["masked_argmax_ref", "batch_round_ref"]
 
 
 def masked_argmax_ref(sel, lat_ok, cap_ok, alive):
@@ -29,3 +30,34 @@ def masked_argmax_ref(sel, lat_ok, cap_ok, alive):
     feas = lat_ok & cap_ok[None, :] & alive[:, None]
     score = jnp.where(feas, sel[None, :].astype(jnp.float32), -jnp.inf)
     return score.max(axis=1), score.argmax(axis=1).astype(jnp.int32)
+
+
+def batch_round_ref(lat_ok, alive, grid, price, cap, occupied):
+    """Dense oracle for the fused batched round (``pg.batch_round``).
+
+    lat_ok (B, T, A) bool; alive (B, T) bool; grid (A, m) f32;
+    price/cap/occupied (B, m) f32. Materializes the full (B, T, A) score
+    tensor and reduces it with plain jnp ops:
+
+        V      = max feasible primal gradient of each instance,
+        tau    = first alive task whose feasible set attains V,
+        best_a = tau's first-max allocation (jnp.argmax ordering),
+
+    exactly the contract of one flexible ``_greedy_jax_batch`` round.
+    Instances with nothing feasible get V = -inf (tau = best_a = 0).
+    """
+    from repro.core.greedy import primal_gradient
+
+    remaining = cap - occupied
+    cap_ok = (grid[None] <= remaining[:, None, :] + 1e-9).all(-1)    # (B, A)
+    pg = jax.vmap(
+        lambda p, c, o: primal_gradient(grid, p, c, o, xp=jnp)
+    )(price, cap, occupied)                                          # (B, A)
+    feas = lat_ok & cap_ok[:, None, :] & alive[:, :, None]           # (B, T, A)
+    score = jnp.where(feas, pg[:, None, :].astype(jnp.float32), -jnp.inf)
+    row_max = score.max(axis=2)                                      # (B, T)
+    v = row_max.max(axis=1)                                          # (B,)
+    tau = jnp.argmax(row_max, axis=1).astype(jnp.int32)
+    sel = jnp.take_along_axis(score, tau[:, None, None], axis=1)[:, 0]
+    best_a = jnp.argmax(sel, axis=1).astype(jnp.int32)
+    return v, tau, best_a

@@ -11,7 +11,7 @@ __all__ = ["compress_frames"]
 
 
 def compress_frames(img, z: float, *, use_kernel: bool = True,
-                    interpret: bool = True):
+                    interpret: bool | None = None):
     """Resize (B, H, W, C) frames to the resolution implied by compression
     factor ``z`` (output pixel count = z · input pixel count).
 

@@ -22,6 +22,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .. import resolve_interpret
+
 __all__ = ["resize_bilinear"]
 
 
@@ -35,8 +37,13 @@ def _kernel(img_ref, rh_ref, rw_ref, out_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def resize_bilinear(img, r_h, r_w, *, interpret: bool = True):
-    """img (B, H, W, C); r_h (h, H) f32; r_w (w, W) f32 → (B, h, w, C)."""
+def resize_bilinear(img, r_h, r_w, *, interpret: bool | None = None):
+    """img (B, H, W, C); r_h (h, H) f32; r_w (w, W) f32 → (B, h, w, C).
+
+    ``interpret=None`` → interpreter unless a compiled Pallas backend
+    (TPU/GPU) is the default device.
+    """
+    interpret = resolve_interpret(interpret)
     b, hin, win, c = img.shape
     hout = r_h.shape[0]
     wout = r_w.shape[0]

@@ -11,7 +11,10 @@ from __future__ import annotations
 
 import dataclasses
 
-from repro.core import ResourcePool, check_solution, solve, solve_greedy_batch
+import numpy as np
+
+from repro.core import (ResourcePool, check_solution, next_pow2, restack,
+                        solve, solve_greedy_batch, stack_instances)
 from .request import SliceRequest
 from .sdla import SDLA
 
@@ -36,6 +39,9 @@ class SESM:
         self.backend = backend
         self.inner = inner
         self.algorithm = {"semantic": True, "flexible": True}
+        # padded stacking buffers reused across solve_batch calls (the
+        # closed-loop re-slice case: only tasks/capacities change per call)
+        self._batch_cache = None
 
     def slice(self, requests: list[SliceRequest]) -> list[SliceDecision]:
         if not requests:
@@ -56,13 +62,27 @@ class SESM:
         batched sweep engine; decisions per set match calling :meth:`slice`
         on it (up to the float32 gradient-tie caveat of the JAX backends vs
         the numpy default — see ``solve_greedy_batch``).
+
+        Stacking buffers are padded to a power-of-two ``Tmax`` bucket and
+        reused (``restack``) across calls with the same number of request
+        sets, so a closed-loop horizon evaluation neither reallocates the
+        (B, Tmax, A) host tables nor recompiles the device program per step.
         """
         filled = [(i, rs) for i, rs in enumerate(request_sets) if rs]
         out: list[list[SliceDecision]] = [[] for _ in request_sets]
         if not filled:
             return out
         insts = [self.sdla.build_instance(rs, self.pool) for _, rs in filled]
-        sols = solve_greedy_batch(insts, **self.algorithm)
+        cache = self._batch_cache
+        tneed = max(inst.num_tasks for inst in insts)
+        if (cache is not None and cache.batch_size == len(insts)
+                and cache.max_tasks >= tneed
+                and np.array_equal(cache.grid, insts[0].grid)):
+            stacked = restack(cache, insts)
+        else:
+            stacked = stack_instances(insts, tmax=next_pow2(tneed))
+        self._batch_cache = stacked
+        sols = solve_greedy_batch(stacked, **self.algorithm)
         for (i, rs), inst, sol in zip(filled, insts, sols):
             out[i] = self._decisions(rs, inst, sol)
         return out

@@ -1,11 +1,13 @@
-"""Pallas PG masked-argmax kernel vs pure-jnp oracle: shape/dtype sweep."""
+"""Pallas PG kernels (masked argmax + fused batch round) vs jnp oracles."""
 import numpy as np
 import jax.numpy as jnp
 import pytest
 
-from repro.core import build_instance, scenarios, solve_greedy, solve_greedy_jax
+from repro.core import (build_instance, scenarios, solve_greedy,
+                        solve_greedy_batch, solve_greedy_jax)
+from repro.core.greedy import _pack_bits
 from repro.kernels.pg import pg as K
-from repro.kernels.pg.ref import masked_argmax_ref
+from repro.kernels.pg.ref import batch_round_ref, masked_argmax_ref
 
 
 @pytest.mark.parametrize("t,a", [(1, 1), (3, 7), (17, 129), (64, 512),
@@ -47,3 +49,86 @@ def test_greedy_solver_with_kernel_inner():
     b = solve_greedy_jax(inst, inner="pallas")
     assert (a.admitted == b.admitted).all()
     assert np.allclose(a.alloc, b.alloc)
+
+
+# ---------------------------------------------------------------------------
+# fused batched round (batch_round)
+# ---------------------------------------------------------------------------
+
+def _random_round(rng, b, t, a, m, occupied_frac=0.5):
+    grid = jnp.asarray(rng.uniform(1, 5, (a, m)), jnp.float32)
+    price = jnp.asarray(rng.uniform(0.1, 1, (b, m)), jnp.float32)
+    cap = jnp.asarray(rng.uniform(20, 40, (b, m)), jnp.float32)
+    occ = jnp.asarray(rng.uniform(0, 5, (b, m))
+                      * (rng.random((b, m)) < occupied_frac), jnp.float32)
+    lat = jnp.asarray(rng.random((b, t, a)) < 0.3)
+    alive = jnp.asarray(rng.random((b, t)) < 0.7)
+    return lat, alive, grid, price, cap, occ
+
+
+def _assert_round_matches(lat, alive, grid, price, cap, occ, **kw):
+    v0, tau0, a0 = batch_round_ref(lat, alive, grid, price, cap, occ)
+    v1, tau1, a1 = K.batch_round(_pack_bits(lat), alive, grid, price, cap,
+                                 occ, **kw)
+    assert np.allclose(np.asarray(v0), np.asarray(v1), equal_nan=True)
+    assert (np.asarray(tau0) == np.asarray(tau1)).all()
+    assert (np.asarray(a0) == np.asarray(a1)).all()
+
+
+@pytest.mark.parametrize("b,t,a,m", [(1, 1, 1, 2), (3, 7, 33, 2),
+                                     (5, 37, 97, 2), (4, 26, 129, 4)])
+@pytest.mark.parametrize("bt", [8, 64])
+def test_batch_round_matches_dense_ref(b, t, a, m, bt, rng):
+    _assert_round_matches(*_random_round(rng, b, t, a, m), block_t=bt)
+
+
+def test_batch_round_no_occupancy_branch(rng):
+    """occupied == 0 exercises the uniform-penalty PG branch (Alg. 1 l.23)."""
+    _assert_round_matches(*_random_round(rng, 4, 20, 65, 2, occupied_frac=0.0))
+
+
+def test_batch_round_tie_breaking_first_max(rng):
+    """price = 0 makes every gradient 0 → all-tie selection must match the
+    jnp first-max ordering across T-blocks and lanes."""
+    lat, alive, grid, _, cap, occ = _random_round(rng, 4, 33, 70, 2)
+    price = jnp.zeros((4, 2), jnp.float32)
+    occ = jnp.zeros_like(occ)
+    _assert_round_matches(lat, alive, grid, price, cap, occ, block_t=8)
+
+
+def test_batch_round_all_infeasible(rng):
+    lat = jnp.zeros((3, 9, 40), bool)
+    alive = jnp.ones((3, 9), bool)
+    grid = jnp.asarray(rng.uniform(1, 5, (40, 2)), jnp.float32)
+    pool = jnp.ones((3, 2), jnp.float32) * 10
+    v, tau, best_a = K.batch_round(_pack_bits(lat), alive, grid,
+                                   pool / 10, pool, jnp.zeros((3, 2)))
+    assert np.isneginf(np.asarray(v)).all()
+    assert (np.asarray(tau) == 0).all() and (np.asarray(best_a) == 0).all()
+
+
+def test_batched_solver_with_pallas_inner_matches_oracle():
+    """solve_greedy_batch(inner="pallas") == numpy oracle (canonical cells)."""
+    pool = scenarios.numerical_pool(2)
+    insts = [build_instance(pool, scenarios.numerical_tasks(n, acc, lat,
+                                                            seed=s))
+             for s, (n, acc, lat) in enumerate(
+                 [(8, "low", "high"), (20, "med", "low"),
+                  (33, "high", "high")])]
+    for inst, sol in zip(insts, solve_greedy_batch(insts, inner="pallas")):
+        ref = solve_greedy(inst)
+        assert (sol.admitted == ref.admitted).all()
+        assert np.allclose(sol.alloc, ref.alloc)
+
+
+@pytest.mark.slow
+def test_batched_pallas_inner_poisson_and_multicell():
+    """Fused-kernel rounds across dynamic traces + heterogeneous capacities."""
+    trace, _ = scenarios.poisson_trace(8, seed=2, arrival_rate=5.0)
+    cells, _ = scenarios.multi_cell_trace(3, 3, seed=4)
+    for insts in (trace, cells):
+        for inst, sol in zip(insts,
+                             solve_greedy_batch(insts, inner="pallas")):
+            ref = solve_greedy(inst)
+            assert (sol.admitted == ref.admitted).all()
+            assert np.allclose(sol.alloc, ref.alloc)

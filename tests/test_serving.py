@@ -63,6 +63,26 @@ def test_solve_batch_matches_slice():
             assert g.alloc == w.alloc
 
 
+def test_solve_batch_reuses_stacking_buffers():
+    """Repeated horizon evaluations restack into the same padded buffers."""
+    sesm = SESM(scenarios.colosseum_pool())
+    sets = [[_req("coco_bags"), _req("cityscapes_flat")],
+            [_req("coco_animals", acc=0.50)]]
+    first = sesm.solve_batch(sets)
+    cache = sesm._batch_cache
+    assert cache is not None and cache.max_tasks == 2   # pow2 bucket
+    again = sesm.solve_batch(sets)
+    assert sesm._batch_cache.lat is cache.lat           # buffers reused
+    for a, b in zip(first, again):
+        assert [d.admitted for d in a] == [d.admitted for d in b]
+        assert [d.alloc for d in a] == [d.alloc for d in b]
+    # a wider horizon outgrows the bucket → fresh buffers, same decisions
+    wide = sesm.solve_batch(sets + [[_req("coco_person", acc=0.2)] * 5])
+    assert sesm._batch_cache.lat is not cache.lat
+    assert sesm._batch_cache.max_tasks == 8
+    assert [d.admitted for d in wide[0]] == [d.admitted for d in first[0]]
+
+
 def test_process_and_metrics():
     eng = EdgeServingEngine(scenarios.colosseum_pool(), max_batch=4)
     eng.submit(_req("cityscapes_flat", acc=0.30, fps=3.0))

@@ -4,8 +4,9 @@ import dataclasses
 import numpy as np
 import pytest
 
-from repro.core import (build_instance, scenarios, solve_greedy,
-                        solve_greedy_batch, stack_instances)
+from repro.core import (build_instance, next_pow2, restack, scenarios,
+                        solve_greedy, solve_greedy_batch, solve_greedy_jax,
+                        solve_greedy_many, stack_instances)
 
 
 def _random_instances():
@@ -111,6 +112,162 @@ def test_stack_padding_layout():
         assert np.isinf(st.lat[b, t:]).all()
         assert (st.z_star_idx[b, t:] == -1).all()
     assert st.num_tasks.tolist() == [i.num_tasks for i in insts]
+
+
+def test_stack_tmax_bucket_padding():
+    insts = _random_instances()[:4]
+    st = stack_instances(insts, tmax=64)
+    assert st.max_tasks == 64
+    for b, inst in enumerate(insts):
+        t = inst.num_tasks
+        assert st.task_mask[b, :t].all() and not st.task_mask[b, t:].any()
+        assert np.isinf(st.lat[b, t:]).all()
+    _assert_matches_oracle(st.instances)
+    sols = solve_greedy_batch(st)
+    for inst, sol in zip(insts, sols):
+        ref = solve_greedy(inst)
+        assert (sol.admitted == ref.admitted).all()
+    with pytest.raises(ValueError, match="tmax"):
+        stack_instances(insts, tmax=2)
+
+
+def test_pad_batch_to_is_inert():
+    insts = _random_instances()[:3]
+    st = stack_instances(insts)
+    plain = solve_greedy_batch(st)
+    padded = solve_greedy_batch(st, pad_batch_to=8)
+    assert len(padded) == len(insts)
+    for a, b in zip(plain, padded):
+        assert (a.admitted == b.admitted).all()
+        assert np.allclose(a.alloc, b.alloc)
+        assert a.objective == pytest.approx(b.objective)
+
+
+def test_next_pow2():
+    assert [next_pow2(n) for n in (0, 1, 2, 3, 17, 64)] == [1, 1, 2, 4, 32, 64]
+
+
+# ---------------------------------------------------------------------------
+# restack: buffer-reusing host fast path
+# ---------------------------------------------------------------------------
+
+def test_restack_reuses_buffers_and_matches_oracle():
+    insts = _random_instances()
+    first, second = insts[:5], insts[5:]
+    st = stack_instances(first, tmax=64)
+    st2 = restack(st, second[:5])
+    assert st2.lat is st.lat and st2.task_mask is st.task_mask
+    assert st2.capacity is st.capacity
+    for inst, sol in zip(second[:5], solve_greedy_batch(st2)):
+        ref = solve_greedy(inst)
+        assert (sol.admitted == ref.admitted).all()
+        assert np.allclose(sol.alloc, ref.alloc)
+    # rows of the longest first-batch instance must have been fully cleared
+    for b, inst in enumerate(second[:5]):
+        t = inst.num_tasks
+        assert not st2.task_mask[b, t:].any()
+        assert np.isinf(st2.lat[b, t:]).all()
+        assert (st2.z_star_idx[b, t:] == -1).all()
+
+
+def test_restack_validates_contract():
+    pool2, pool4 = scenarios.numerical_pool(2), scenarios.numerical_pool(4)
+    insts = [build_instance(pool2, scenarios.numerical_tasks(6, "med", "high",
+                                                             seed=s))
+             for s in range(3)]
+    st = stack_instances(insts)
+    with pytest.raises(ValueError, match="batch size"):
+        restack(st, insts[:2])
+    with pytest.raises(ValueError, match="allocation grid"):
+        restack(st, [build_instance(pool4, scenarios.numerical_tasks(
+            6, "med", "high", seed=s)) for s in range(3)])
+    with pytest.raises(ValueError, match="does not fit"):
+        restack(st, [build_instance(pool2, scenarios.numerical_tasks(
+            12, "med", "high", seed=s)) for s in range(3)])
+
+
+# ---------------------------------------------------------------------------
+# solve_greedy_many: grid-grouped dispatcher
+# ---------------------------------------------------------------------------
+
+def _mixed_grid_instances():
+    """Instances over three distinct allocation grids, interleaved."""
+    pools = [scenarios.numerical_pool(2), scenarios.numerical_pool(4)]
+    pools += scenarios.multi_cell_pools(2, seed=3, n_grids=2)[1:]  # coarse grid
+    insts = []
+    for s in range(9):
+        pool = pools[s % len(pools)]
+        insts.append(build_instance(pool, scenarios.numerical_tasks(
+            4 + 5 * (s % 3), ("low", "med", "high")[s % 3], "high", seed=s)))
+    assert len({i.grid.tobytes() for i in insts}) == 3
+    return insts
+
+
+def test_many_mixed_grids_matches_oracle_in_order():
+    insts = _mixed_grid_instances()
+    sols = solve_greedy_many(insts)
+    assert len(sols) == len(insts)
+    for inst, sol in zip(insts, sols):
+        ref = solve_greedy(inst)
+        assert sol.admitted.shape == (inst.num_tasks,)
+        assert (sol.admitted == ref.admitted).all()
+        assert np.allclose(sol.alloc, ref.alloc)
+        assert sol.objective == pytest.approx(ref.objective)
+
+
+@pytest.mark.parametrize("semantic", [True, False])
+@pytest.mark.parametrize("flexible", [True, False])
+def test_many_mixed_grids_all_quadrants(semantic, flexible):
+    insts = _mixed_grid_instances()[:6]
+    sols = solve_greedy_many(insts, semantic=semantic, flexible=flexible)
+    for inst, sol in zip(insts, sols):
+        ref = solve_greedy(inst, semantic=semantic, flexible=flexible)
+        assert (sol.admitted == ref.admitted).all()
+        assert np.allclose(sol.alloc, ref.alloc)
+
+
+def test_many_single_grid_degenerates_to_batch():
+    insts = _random_instances()[:6]
+    many = solve_greedy_many(insts)
+    batch = solve_greedy_batch(insts)
+    for a, b in zip(many, batch):
+        assert (a.admitted == b.admitted).all()
+        assert np.allclose(a.alloc, b.alloc)
+
+
+def test_many_all_infeasible_instances():
+    insts = _mixed_grid_instances()[:4]
+    hopeless = [build_instance(
+        i.pool, dataclasses.replace(i.tasks,
+                                    min_accuracy=np.full(i.num_tasks, 0.99)))
+        for i in insts]
+    sols = solve_greedy_many(hopeless)
+    assert all(s.num_allocated == 0 for s in sols)
+    # mixed feasible + infeasible across grids keeps per-instance results
+    combo = [insts[0], hopeless[1], insts[2], hopeless[3]]
+    sols = solve_greedy_many(combo)
+    for inst, sol in zip(combo, sols):
+        ref = solve_greedy(inst)
+        assert (sol.admitted == ref.admitted).all()
+
+
+@pytest.mark.slow
+def test_many_heterogeneous_multi_cell_trace():
+    insts, _ = scenarios.multi_cell_trace(4, 4, seed=2, n_grids=3)
+    assert len({i.grid.tobytes() for i in insts}) == 3
+    for inst, sol in zip(insts, solve_greedy_many(insts)):
+        ref = solve_greedy(inst)
+        assert (sol.admitted == ref.admitted).all()
+        assert np.allclose(sol.alloc, ref.alloc)
+
+
+def test_many_matches_sequential_jax():
+    """Grouped dispatch == the sequential JAX loop it replaces."""
+    insts = _mixed_grid_instances()[:5]
+    for inst, sol in zip(insts, solve_greedy_many(insts)):
+        ref = solve_greedy_jax(inst)
+        assert (sol.admitted == ref.admitted).all()
+        assert np.allclose(sol.alloc, ref.alloc)
 
 
 def test_batched_one_jit_call_scales_to_64():
