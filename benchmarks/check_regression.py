@@ -1,0 +1,125 @@
+"""CI perf-regression gate: fresh ``BENCH_sweep.json`` vs committed baseline.
+
+Compares the per-instance timings of the sweep-engine benchmark rows against
+``BENCH_baseline.json`` (committed at the repo root) and FAILS when any
+matched row slowed down by more than the tolerance (default 30 %, override
+via ``BENCH_REGRESSION_TOLERANCE=0.5`` etc.). A markdown delta table is
+printed to stdout and, when running in GitHub Actions, appended to the job
+summary (``$GITHUB_STEP_SUMMARY``).
+
+Only rows present in BOTH files with a positive per-instance time are gated —
+new benchmarks land ungated until the baseline is refreshed, and metric-only
+rows (e.g. ``sweep/acceptance``) are reported but never gated. Run noise on
+shared CI runners is absorbed by the generous tolerance plus the per-instance
+normalization (per_instance_us), which is a median over iterations.
+
+Refreshing the baseline (after an intentional perf change, on a quiet
+machine):
+
+    PYTHONPATH=src python -m benchmarks.run sweep
+    cp BENCH_sweep.json BENCH_baseline.json
+    git add BENCH_baseline.json
+
+Usage: python -m benchmarks.check_regression [fresh.json [baseline.json]]
+"""
+
+import json
+import os
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+DEFAULT_TOLERANCE = 0.30
+
+
+def _load_rows(path: pathlib.Path) -> dict[str, dict]:
+    with open(path) as f:
+        return {r["name"]: r for r in json.load(f)["rows"]}
+
+
+def _metric(rec: dict) -> float | None:
+    """The gated quantity: per-instance µs when present, else raw µs."""
+    us = rec.get("per_instance_us", rec.get("us"))
+    return float(us) if us else None      # 0/None → metric-only row
+
+
+def compare(fresh: dict[str, dict], base: dict[str, dict],
+            tolerance: float) -> tuple[list[dict], list[str]]:
+    """Per-row deltas + failure messages for rows beyond the tolerance."""
+    deltas, failures = [], []
+    for name in sorted(set(fresh) | set(base)):
+        f_rec, b_rec = fresh.get(name), base.get(name)
+        f_us = _metric(f_rec) if f_rec else None
+        b_us = _metric(b_rec) if b_rec else None
+        if f_us is None or b_us is None:
+            status = "new" if b_rec is None else \
+                "removed" if f_rec is None else "untimed"
+            deltas.append(dict(name=name, base=b_us, fresh=f_us,
+                               delta=None, status=status))
+            continue
+        ratio = f_us / b_us - 1.0
+        gated = ratio > tolerance
+        deltas.append(dict(name=name, base=b_us, fresh=f_us, delta=ratio,
+                           status="FAIL" if gated else "ok"))
+        if gated:
+            failures.append(
+                f"{name}: {b_us:.1f} -> {f_us:.1f} us/instance "
+                f"(+{ratio:.0%} > +{tolerance:.0%} tolerance)")
+    return deltas, failures
+
+
+def markdown_table(deltas: list[dict], tolerance: float) -> str:
+    lines = [
+        f"### Sweep perf vs baseline (gate: +{tolerance:.0%} per instance)",
+        "", "| benchmark | baseline µs | fresh µs | delta | status |",
+        "|---|---:|---:|---:|---|",
+    ]
+    for d in deltas:
+        base = "—" if d["base"] is None else f"{d['base']:.1f}"
+        fresh = "—" if d["fresh"] is None else f"{d['fresh']:.1f}"
+        delta = "—" if d["delta"] is None else f"{d['delta']:+.0%}"
+        lines.append(f"| {d['name']} | {base} | {fresh} | {delta} "
+                     f"| {d['status']} |")
+    return "\n".join(lines) + "\n"
+
+
+def main(argv: list[str]) -> int:
+    fresh_path = pathlib.Path(argv[1]) if len(argv) > 1 \
+        else ROOT / "BENCH_sweep.json"
+    base_path = pathlib.Path(argv[2]) if len(argv) > 2 \
+        else ROOT / "BENCH_baseline.json"
+    tolerance = float(os.environ.get("BENCH_REGRESSION_TOLERANCE",
+                                     DEFAULT_TOLERANCE))
+    if not fresh_path.exists():
+        print(f"error: fresh results not found at {fresh_path} — run "
+              "`python -m benchmarks.run sweep` first", file=sys.stderr)
+        return 2
+    if not base_path.exists():
+        print(f"error: baseline not found at {base_path} — commit one via "
+              "`cp BENCH_sweep.json BENCH_baseline.json`", file=sys.stderr)
+        return 2
+
+    deltas, failures = compare(_load_rows(fresh_path), _load_rows(base_path),
+                               tolerance)
+    table = markdown_table(deltas, tolerance)
+    print(table)
+    summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary:
+        with open(summary, "a") as f:
+            f.write(table + "\n")
+
+    if failures:
+        print("PERF REGRESSION:", file=sys.stderr)
+        for msg in failures:
+            print(f"  {msg}", file=sys.stderr)
+        print("(intentional? refresh the baseline — see "
+              "benchmarks/check_regression.py docstring)", file=sys.stderr)
+        return 1
+    timed = sum(1 for d in deltas if d["delta"] is not None)
+    print(f"# regression gate green: {timed} timed rows within "
+          f"+{tolerance:.0%}", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

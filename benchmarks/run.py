@@ -1,11 +1,15 @@
 """Benchmark harness entry: one section per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows (benchmark contract) and writes
-every row to ``BENCH_sweep.json`` (per-benchmark µs + typed extras such as
-speedups and B/Tmax/A) so the perf trajectory is tracked across PRs instead
-of lost in stdout. Run: PYTHONPATH=src python -m benchmarks.run [section ...]
+every row to ``BENCH_sweep.json`` at the REPO ROOT (per-benchmark µs + typed
+extras such as speedups and B/Tmax/A) so the perf trajectory is tracked
+across PRs instead of lost in stdout — anchoring to the repo root rather
+than the cwd keeps the CI artifact upload (and the regression gate's
+baseline diff) working for out-of-tree invocations.
+Run: PYTHONPATH=src python -m benchmarks.run [section ...]
 """
 
+import pathlib
 import sys
 
 from . import (common, fig2_accuracy, fig2_latency, fig6_numerical,
@@ -28,9 +32,9 @@ def main() -> None:
     print("name,us_per_call,derived")
     for name in picks:
         SECTIONS[name]()
-    common.dump_results("BENCH_sweep.json")
-    print(f"# wrote BENCH_sweep.json ({len(common.RESULTS)} rows)",
-          file=sys.stderr)
+    out = pathlib.Path(__file__).resolve().parent.parent / "BENCH_sweep.json"
+    common.dump_results(str(out))
+    print(f"# wrote {out} ({len(common.RESULTS)} rows)", file=sys.stderr)
 
 
 if __name__ == "__main__":

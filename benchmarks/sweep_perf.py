@@ -10,6 +10,9 @@ Poisson traces and multi-cell traces through
     sweep in ONE device program,
   * the grouped path — ``solve_greedy_many`` dispatching a MIXED-grid trace
     (per-cell ``pool.levels``) as a few bucketed device programs,
+  * the coupled path — a 4-cell trace with per-step shared backhaul links
+    (``multi_cell_trace(shared_backhaul=...)``) through the cell-coupled
+    engine, vs the numpy coupled oracle,
   * the fused-kernel path — ``solve_greedy_batch(inner="pallas")``, the whole
     admission round in one Pallas kernel (interpret mode off-TPU, so on CPU
     this row measures the interpreter, not the hardware win),
@@ -19,10 +22,13 @@ Decisions are asserted identical across paths before timing (the engine is
 only fast if it is also right).
 """
 
+import dataclasses
+
 import numpy as np
 
-from repro.core import (restack, scenarios, solve_greedy, solve_greedy_batch,
-                        solve_greedy_jax, solve_greedy_many, stack_instances)
+from repro.core import (restack, scenarios, solve_coupled_ref, solve_greedy,
+                        solve_greedy_batch, solve_greedy_jax,
+                        solve_greedy_many, stack_instances, task_link_load)
 from repro.core.greedy import _greedy_jax_batch
 from .common import row, time_fn
 
@@ -55,7 +61,10 @@ def _bench(name: str, insts):
 
     us_seq = time_fn(lambda: [solve_greedy_jax(i) for i in insts], iters=3)
     us_bat = time_fn(lambda: solve_greedy_batch(stacked), iters=3)
-    us_np = time_fn(lambda: [solve_greedy(i) for i in insts], iters=1)
+    # 3 iterations even on the slow numpy rows: every timed row feeds the CI
+    # regression gate, and a single wall-clock sample on a shared runner is
+    # too noisy to gate on
+    us_np = time_fn(lambda: [solve_greedy(i) for i in insts], iters=3)
 
     row(f"sweep/{name}/seq_jax", us_seq, per_instance_us=round(us_seq / n, 1))
     row(f"sweep/{name}/numpy", us_np, per_instance_us=round(us_np / n, 1))
@@ -104,6 +113,50 @@ def _bench_pallas_inner():
         vs_jnp_inner=round(us_pal / us_jnp, 2))
 
 
+def _bench_coupled():
+    """Cell-coupled 4-cell trace: shared per-step backhaul links.
+
+    The coupled engine solves the whole trace in one device program with one
+    coupling group per step; decisions are asserted against the numpy
+    coupled oracle (and the budget binds — the uncoupled engine admits
+    strictly more shared-link load).
+    """
+    budget = 6.0
+    insts, meta = scenarios.multi_cell_trace(4, 8, seed=1,
+                                             shared_backhaul=budget)
+    n = len(insts)
+    stacked = stack_instances(insts)
+    sols = solve_greedy_batch(stacked)
+    refs = solve_coupled_ref(insts)
+    for sol, ref in zip(sols, refs):
+        assert (sol.admitted == ref.admitted).all()
+        assert np.allclose(sol.alloc, ref.alloc)
+    loads = [task_link_load(i) for i in insts]
+    per_link = np.zeros(stacked.coupling.num_links)
+    for m, sol, load in zip(meta, sols, loads):
+        per_link[m["link"]] += float((load * sol.admitted).sum())
+    assert (per_link <= budget + 1e-6).all()
+    unc = solve_greedy_batch(stack_instances(
+        [dataclasses.replace(i, coupling=None) for i in insts]))
+    load_unc = sum(float((load * s.admitted).sum())
+                   for s, load in zip(unc, loads))
+    # the scenario must exercise the constraint: uncoupled admission carries
+    # strictly more shared-link load than the budgeted coupled run
+    assert load_unc > float(per_link.sum())
+
+    us_cpl = time_fn(lambda: solve_greedy_batch(stacked), iters=3)
+    us_np = time_fn(lambda: solve_coupled_ref(insts), iters=3)
+    row("sweep/multicell_coupled_4x8/batched", us_cpl,
+        per_instance_us=round(us_cpl / n, 1), B=n,
+        Tmax=stacked.max_tasks, A=stacked.num_allocs,
+        links=stacked.coupling.num_links,
+        link_load=round(float(per_link.sum()), 2),
+        link_load_uncoupled=round(load_unc, 2))
+    row("sweep/multicell_coupled_4x8/numpy_oracle", us_np,
+        per_instance_us=round(us_np / n, 1),
+        batched_speedup=round(us_np / us_cpl, 1))
+
+
 def _bench_restack():
     """Host-side stacking fast path: fresh buffers vs buffer reuse."""
     insts = _sweep_64()
@@ -127,6 +180,7 @@ def main():
     _bench("multicell_4x8", cells)
 
     mixed_speedup = _bench_mixed_grid()
+    _bench_coupled()
     _bench_pallas_inner()
     _bench_restack()
 

@@ -21,11 +21,12 @@ import numpy as np
 
 from . import latency as lat_mod
 from . import semantics
-from .greedy import solve_greedy, solve_greedy_jax
-from .sfesp import objective_value
-from .types import ProblemInstance, Solution
+from .greedy import (_pack_solution, _select_tables, lexicographic_cost,
+                     primal_gradient, solve_greedy, solve_greedy_jax)
+from .sfesp import merge_coupling, objective_value, task_link_load
+from .types import CouplingSpec, ProblemInstance, Solution
 
-__all__ = ["ALGORITHMS", "run_algorithm"]
+__all__ = ["ALGORITHMS", "run_algorithm", "solve_coupled_ref"]
 
 
 def _sem_o_ran(inst, backend="numpy"):
@@ -109,6 +110,97 @@ def _high_res(inst: ProblemInstance, backend="numpy") -> Solution:
             alloc[tau] = slice_
             remaining -= slice_
     return _fixed_z_solution(inst, np.ones(T), alloc, admitted)
+
+
+def solve_coupled_ref(insts, coupling: CouplingSpec | None = None, *,
+                      semantic: bool = True, flexible: bool = True
+                      ) -> list[Solution]:
+    """Numpy oracle for backhaul-coupled multi-cell greedy admission.
+
+    The reference semantics that ``solve_greedy_batch`` reproduces on a
+    coupled batch (same float-precision tie-break caveat as every JAX
+    backend): Alg. 1 run jointly over all cells of each coupling group —
+    per round every cell scores its candidates with its OWN pool gradient,
+    tasks whose network load ``b_τ·λ_τ·z*_τ`` no longer fits the remaining
+    budget of every shared link their cell traverses are filtered, and only
+    the first (cell-major) candidate attaining the group-wide best gradient
+    is admitted, charging its load to the links of its cell. ``coupling``
+    defaults to the merged per-instance specs; cells with all-zero incidence
+    rows (or a ``None`` batch spec) degrade to independent per-cell greedy,
+    bit-matching :func:`~repro.core.greedy.solve_greedy` per instance.
+    """
+    insts = list(insts)
+    coupling = merge_coupling(insts) if coupling is None else coupling
+    B = len(insts)
+    if coupling is None:
+        coupling = CouplingSpec(np.zeros(0), np.zeros((B, 0), bool))
+    assert coupling.num_cells == B
+    group = coupling.groups()
+    inc = coupling.incidence
+
+    tables = [_select_tables(i, semantic) for i in insts]
+    lat_ok = [lat <= i.tasks.max_latency[:, None]
+              for i, (lat, _) in zip(insts, tables)]
+    load = [task_link_load(i, semantic=semantic) for i in insts]
+    cost = [lexicographic_cost(i.grid) for i in insts]
+    alive = [(z_idx >= 0) & ok.any(axis=1)
+             for (_, z_idx), ok in zip(tables, lat_ok)]
+    admitted = [np.zeros(i.num_tasks, bool) for i in insts]
+    alloc_idx = [np.full(i.num_tasks, -1, np.int64) for i in insts]
+    occupied = [np.zeros(i.m) for i in insts]
+    link_used = np.zeros(coupling.num_links)
+
+    while any(a.any() for a in alive):
+        rem_link = coupling.link_capacity - link_used
+        # per-cell best candidate (V_b, tau_b, s*_b) under grid + link budgets
+        best: dict[int, tuple[float, int, int]] = {}
+        for b, inst in enumerate(insts):
+            if not alive[b].any():
+                continue
+            headroom = rem_link[inc[b]].min() if inc[b].any() else np.inf
+            link_ok = load[b] <= headroom + 1e-9
+            S, p = inst.pool.capacity, inst.pool.price
+            cap_ok = (inst.grid <= (S - occupied[b]) + 1e-9).all(axis=1)
+            pg = primal_gradient(inst.grid, p, S, occupied[b])
+            feas = lat_ok[b] & cap_ok[None, :] \
+                & (alive[b] & link_ok)[:, None]
+            has = feas.any(axis=1)
+            # line 15: a task infeasible now is infeasible forever (grid and
+            # link budgets only shrink), so drop it from the candidate set
+            alive[b] &= has
+            if not alive[b].any():
+                continue
+            sel = pg if flexible else -cost[b]
+            score = np.where(feas, sel[None, :], -np.inf)
+            best_a = score.argmax(axis=1)
+            G = np.where(alive[b], pg[best_a], -np.inf)
+            tau = int(G.argmax())
+            best[b] = (float(G[tau]), tau, int(best_a[tau]))
+        # joint selection: first cell-major candidate at each group's max.
+        # Cross-cell V comparisons use a relative tolerance: mathematically
+        # equal gradients (e.g. identical pools whose occupancy is
+        # proportional to capacity, where pg_occ ≡ pg_uniform) differ by
+        # O(1e-15) rounding in f64 and would otherwise flip the winner on
+        # noise the f32 engine correctly treats as a tie.
+        winners: dict[int, int] = {}
+        for b in sorted(best):
+            g = int(group[b])
+            if g not in winners:
+                winners[g] = b
+                continue
+            vw = best[winners[g]][0]
+            if best[b][0] > vw + 1e-9 * max(1.0, abs(vw)):
+                winners[g] = b
+        for b in winners.values():
+            _, tau, a = best[b]
+            admitted[b][tau] = True
+            alloc_idx[b][tau] = a
+            occupied[b] = occupied[b] + insts[b].grid[a]
+            link_used = link_used + load[b][tau] * inc[b]
+            alive[b][tau] = False
+
+    return [_pack_solution(inst, semantic, admitted[b], alloc_idx[b],
+                           tables[b][1]) for b, inst in enumerate(insts)]
 
 
 ALGORITHMS = {

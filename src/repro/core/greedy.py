@@ -26,7 +26,7 @@ import jax.numpy as jnp
 
 from . import semantics
 from .sfesp import next_pow2, objective_value, stack_instances
-from .types import ProblemInstance, Solution, StackedInstances
+from .types import CouplingSpec, ProblemInstance, Solution, StackedInstances
 
 __all__ = ["primal_gradient", "solve_greedy", "solve_greedy_jax",
            "solve_greedy_batch", "solve_greedy_many", "solve",
@@ -262,6 +262,52 @@ def _batch_pg(grid, price, cap, occupied):
     )(price, cap, occupied)
 
 
+def _flex_round_fn(inner: str, lat_bits, grid, price, cap, A):
+    """Build the flexible-mode batched round: (occupied, alive) → (V, tau, s*).
+
+    The shared-gradient bit-domain trick of ``_greedy_jax_batch`` (see its
+    docstring), factored out so the coupled variant runs the identical round
+    with a link-masked ``alive`` — the per-round link feasibility folds into
+    the candidate mask, so neither the jnp round nor the fused Pallas kernel
+    needs to know about coupling.
+    """
+    if inner == "pallas":
+        from repro.kernels.pg import pg as pg_kernel
+
+        def round_fn(occupied, alive):
+            return pg_kernel.batch_round(lat_bits, alive, grid, price, cap,
+                                         occupied)
+    else:
+        def round_fn(occupied, alive):
+            remaining = cap - occupied
+            cap_ok = (grid[None] <= remaining[:, None, :] + 1e-9).all(-1)
+            pg = _batch_pg(grid, price, cap, occupied)                 # (B, A)
+
+            # columns lat-feasible for at least one alive task (bit domain)
+            rows = jnp.where(alive[:, :, None], lat_bits, jnp.uint32(0))
+            col_bits = jax.lax.reduce(rows, np.uint32(0), jax.lax.bitwise_or,
+                                      (1,))                            # (B, W)
+            col_any = _unpack_bits(col_bits, A)                        # (B, A)
+
+            pgm = jnp.where(cap_ok & col_any, pg, -jnp.inf)
+            v = pgm.max(-1)                                            # (B,)
+
+            # first alive task whose feasible set attains V
+            hit_bits = _pack_bits(cap_ok & (pgm == v[:, None]))        # (B, W)
+            t_hit = ((lat_bits & hit_bits[:, None, :]) != 0).any(-1) & alive
+            tau = jnp.argmax(t_hit, axis=1)                            # (B,)
+
+            # tau's own first-max allocation (dense, but only (B, A))
+            lat_tau = _unpack_bits(
+                jnp.take_along_axis(lat_bits, tau[:, None, None],
+                                    axis=1)[:, 0], A)
+            cap_pgm = jnp.where(cap_ok, pg, -jnp.inf)
+            best_a = jnp.where(lat_tau, cap_pgm, -jnp.inf).argmax(-1)  # (B,)
+            return v, tau, best_a
+
+    return round_fn
+
+
 @functools.partial(jax.jit, static_argnames=("flexible", "inner"))
 def _greedy_jax_batch(lat_ok, grid, price, cap, alive0, cost,
                       flexible: bool = True, inner: str = "jnp"):
@@ -310,40 +356,7 @@ def _greedy_jax_batch(lat_ok, grid, price, cap, alive0, cost,
         return admitted, alloc_idx, occupied
 
     lat_bits = _pack_bits(lat_ok)                          # (B, T, W) u32
-
-    if inner == "pallas":
-        from repro.kernels.pg import pg as pg_kernel
-
-        def round_fn(occupied, alive):
-            return pg_kernel.batch_round(lat_bits, alive, grid, price, cap,
-                                         occupied)
-    else:
-        def round_fn(occupied, alive):
-            remaining = cap - occupied
-            cap_ok = (grid[None] <= remaining[:, None, :] + 1e-9).all(-1)
-            pg = _batch_pg(grid, price, cap, occupied)                 # (B, A)
-
-            # columns lat-feasible for at least one alive task (bit domain)
-            rows = jnp.where(alive[:, :, None], lat_bits, jnp.uint32(0))
-            col_bits = jax.lax.reduce(rows, np.uint32(0), jax.lax.bitwise_or,
-                                      (1,))                            # (B, W)
-            col_any = _unpack_bits(col_bits, A)                        # (B, A)
-
-            pgm = jnp.where(cap_ok & col_any, pg, -jnp.inf)
-            v = pgm.max(-1)                                            # (B,)
-
-            # first alive task whose feasible set attains V
-            hit_bits = _pack_bits(cap_ok & (pgm == v[:, None]))        # (B, W)
-            t_hit = ((lat_bits & hit_bits[:, None, :]) != 0).any(-1) & alive
-            tau = jnp.argmax(t_hit, axis=1)                            # (B,)
-
-            # tau's own first-max allocation (dense, but only (B, A))
-            lat_tau = _unpack_bits(
-                jnp.take_along_axis(lat_bits, tau[:, None, None],
-                                    axis=1)[:, 0], A)
-            cap_pgm = jnp.where(cap_ok, pg, -jnp.inf)
-            best_a = jnp.where(lat_tau, cap_pgm, -jnp.inf).argmax(-1)  # (B,)
-            return v, tau, best_a
+    round_fn = _flex_round_fn(inner, lat_bits, grid, price, cap, A)
 
     def body(state):
         admitted, alloc_idx, occupied, alive = state
@@ -364,6 +377,86 @@ def _greedy_jax_batch(lat_ok, grid, price, cap, alive0, cost,
     init = (jnp.zeros((B, tmax), bool), jnp.full((B, tmax), -1, jnp.int32),
             jnp.zeros((B, m), grid.dtype), alive0)
     admitted, alloc_idx, occupied, _ = jax.lax.while_loop(cond, body, init)
+    return admitted, alloc_idx, occupied
+
+
+@functools.partial(jax.jit, static_argnames=("flexible", "inner"))
+def _greedy_jax_batch_coupled(lat_ok, grid, price, cap, alive0, cost,
+                              load, link_cap, incidence, group,
+                              flexible: bool = True, inner: str = "jnp"):
+    """Coupled variant of :func:`_greedy_jax_batch`: cells sharing backhaul
+    links admit JOINTLY.
+
+    Extra inputs: ``load`` (B, Tmax) per-task shared-link load, ``link_cap``
+    (L,), ``incidence`` (B, L) bool and ``group`` (B,) int — the connected
+    components of the cell–link graph (``CouplingSpec.groups``). Each round:
+
+      1. per-cell candidate masks additionally require the task's load to fit
+         the REMAINING budget of every link its cell traverses (folded into
+         ``alive``, so the inner round — jnp bit-domain or the fused Pallas
+         kernel — is reused unchanged),
+      2. per cell the round yields (V_b, tau_b, s*_b) exactly as uncoupled,
+      3. per coupling GROUP only the first cell attaining the group-max V
+         admits its pick; the other cells' candidates stay alive and contend
+         again next round (the oracle's cell-major first-max scan),
+      4. the admitted task's load is charged to every incident link.
+
+    A cell whose V is -inf retires: grid occupancy and link usage only grow,
+    so infeasibility is permanent. Uncoupled cells (all-zero incidence rows)
+    are singleton groups and admit every round, exactly like the uncoupled
+    engine.
+    """
+    B, tmax, A = lat_ok.shape
+    m = grid.shape[1]
+    bidx = jnp.arange(B)
+    inc_b = incidence.astype(bool)                          # (B, L)
+    inc_f = incidence.astype(grid.dtype)
+
+    if flexible:
+        lat_bits = _pack_bits(lat_ok)
+        round_fn = _flex_round_fn(inner, lat_bits, grid, price, cap, A)
+    else:
+        # MinRes needs each task's OWN min-cost allocation → dense per-cell
+        # rounds, reduced to (V, tau, s*) for the joint selection
+        def round_fn(occupied, alive):
+            def f(lat_ok_b, price_b, cap_b, occ_b, alive_b):
+                G, best_a, _ = _inner_jnp(grid, price_b, cap_b, occ_b,
+                                          cap_b - occ_b, lat_ok_b, alive_b,
+                                          cost, False)
+                G = jnp.where(alive_b, G, -jnp.inf)
+                tau = jnp.argmax(G)
+                return G[tau], tau, best_a[tau]
+            return jax.vmap(f)(lat_ok, price, cap, occupied, alive)
+
+    def body(state):
+        admitted, alloc_idx, occupied, alive, used = state
+        rem = link_cap - used                                        # (L,)
+        headroom = jnp.where(inc_b, rem[None, :], jnp.inf).min(-1)   # (B,)
+        link_ok = load <= headroom[:, None] + 1e-9                   # (B, T)
+        v, tau, best_a = round_fn(occupied, alive & link_ok)
+        gmax = jax.ops.segment_max(v, group, num_segments=B)
+        att = (v > -jnp.inf) & (v == gmax[group])
+        first = jax.ops.segment_min(jnp.where(att, bidx, B), group,
+                                    num_segments=B)
+        admit = att & (bidx == first[group])
+        admitted = admitted.at[bidx, tau].set(admitted[bidx, tau] | admit)
+        alloc_idx = alloc_idx.at[bidx, tau].set(
+            jnp.where(admit, best_a.astype(jnp.int32), alloc_idx[bidx, tau]))
+        occupied = occupied + jnp.where(admit[:, None], grid[best_a], 0.0)
+        used = used + (jnp.where(admit, load[bidx, tau], 0.0)[:, None]
+                       * inc_f).sum(axis=0)
+        alive = jnp.where(admit[:, None], alive.at[bidx, tau].set(False),
+                          alive)
+        alive = alive & (v > -jnp.inf)[:, None]
+        return admitted, alloc_idx, occupied, alive, used
+
+    def cond(state):
+        return jnp.any(state[3])
+
+    init = (jnp.zeros((B, tmax), bool), jnp.full((B, tmax), -1, jnp.int32),
+            jnp.zeros((B, m), grid.dtype), alive0,
+            jnp.zeros(link_cap.shape, grid.dtype))
+    admitted, alloc_idx, occupied, _, _ = jax.lax.while_loop(cond, body, init)
     return admitted, alloc_idx, occupied
 
 
@@ -403,9 +496,18 @@ def solve_greedy_batch(insts, *, semantic: bool = True, flexible: bool = True,
     round). ``pad_batch_to`` pads the DEVICE batch with inert instances
     (never-alive, unit capacity) so sweeps bucketed to a common (B, Tmax)
     shape reuse one compiled program; outputs are sliced back to the real B.
+
+    When the stacked batch carries a :class:`~repro.core.types.CouplingSpec`
+    (shared midhaul/backhaul links), cells coupled through a link admit
+    JOINTLY — one global-max pick per coupling group per round, capacity-
+    checked against both the cell's grid and the shared link budgets; the
+    reference semantics are ``baselines.solve_coupled_ref``. Uncoupled
+    batches take the exact uncoupled device program as before.
     """
     stacked = insts if isinstance(insts, StackedInstances) \
         else stack_instances(insts)
+    coupling = stacked.coupling
+    coupled = coupling is not None and bool(coupling.incidence.any())
     if semantic:
         lat, z_idx = stacked.lat, stacked.z_star_idx
         z_star = stacked.z_star
@@ -417,6 +519,8 @@ def solve_greedy_batch(insts, *, semantic: bool = True, flexible: bool = True,
     cost = lexicographic_cost(stacked.grid)
     B = stacked.batch_size
     price_d, cap_d = stacked.price, stacked.capacity
+    load_d = stacked.link_load if semantic else stacked.link_load_agnostic
+    inc_d = coupling.incidence if coupled else None
     if pad_batch_to is not None and pad_batch_to > B:
         pad = pad_batch_to - B
         m = stacked.m
@@ -428,11 +532,27 @@ def solve_greedy_batch(insts, *, semantic: bool = True, flexible: bool = True,
         # instances start with no alive candidates, so they never admit
         price_d = np.concatenate([price_d, np.zeros((pad, m))])
         cap_d = np.concatenate([cap_d, np.ones((pad, m))])
-    admitted, alloc_idx, _ = _greedy_jax_batch(
-        jnp.asarray(lat_ok), jnp.asarray(stacked.grid),
-        jnp.asarray(price_d), jnp.asarray(cap_d),
-        jnp.asarray(alive0), jnp.asarray(cost), flexible=flexible,
-        inner=inner)
+        if coupled:
+            # link-free padded cells: singleton groups that never admit
+            load_d = np.concatenate(
+                [load_d, np.zeros((pad, load_d.shape[1]))])
+            inc_d = np.concatenate(
+                [inc_d, np.zeros((pad, inc_d.shape[1]), bool)])
+    if coupled:
+        group = CouplingSpec(coupling.link_capacity, inc_d).groups()
+        admitted, alloc_idx, _ = _greedy_jax_batch_coupled(
+            jnp.asarray(lat_ok), jnp.asarray(stacked.grid),
+            jnp.asarray(price_d), jnp.asarray(cap_d),
+            jnp.asarray(alive0), jnp.asarray(cost),
+            jnp.asarray(load_d), jnp.asarray(coupling.link_capacity),
+            jnp.asarray(inc_d), jnp.asarray(group),
+            flexible=flexible, inner=inner)
+    else:
+        admitted, alloc_idx, _ = _greedy_jax_batch(
+            jnp.asarray(lat_ok), jnp.asarray(stacked.grid),
+            jnp.asarray(price_d), jnp.asarray(cap_d),
+            jnp.asarray(alive0), jnp.asarray(cost), flexible=flexible,
+            inner=inner)
     admitted = np.asarray(admitted)[:B]
     alloc_idx = np.asarray(alloc_idx, np.int64)[:B]
 
@@ -474,14 +594,33 @@ def solve_greedy_many(insts, *, semantic: bool = True, flexible: bool = True,
 
     Returns one :class:`Solution` per instance, in input order. Decisions are
     exactly those of :func:`solve_greedy_batch` on each group (hence the same
-    f32 tie-break caveat vs the numpy oracle).
+    f32 tie-break caveat vs the numpy oracle). Backhaul-coupled instances are
+    solved jointly within their grid group; cells of one coupling group MUST
+    therefore share an allocation grid (a link whose users were split across
+    grid groups would have its budget double-counted — rejected up front).
     """
     insts = list(insts)
     groups: dict[bytes, list[int]] = {}
+    keys: list[bytes] = []
     for i, inst in enumerate(insts):
         key = np.ascontiguousarray(inst.grid).tobytes() \
             + repr(inst.grid.shape).encode()
+        keys.append(key)
         groups.setdefault(key, []).append(i)
+    link_users: dict[tuple, set] = {}
+    for i, inst in enumerate(insts):
+        spec = inst.coupling
+        if spec is None:
+            continue
+        for link in np.nonzero(spec.incidence[0])[0]:
+            # link sets are identified by capacity-array identity, matching
+            # the merge_coupling contract
+            lid = (id(spec.link_capacity), int(link))
+            link_users.setdefault(lid, set()).add(keys[i])
+    if any(len(g) > 1 for g in link_users.values()):
+        raise ValueError(
+            "backhaul-coupled cells must share one allocation grid "
+            "(identical pool.levels); a shared link cannot span grid groups")
     out: list[Solution | None] = [None] * len(insts)
     for idxs in groups.values():
         sub = [insts[i] for i in idxs]

@@ -22,8 +22,12 @@ allocation grid, so a whole trace/sweep solves as ONE stacked device program.
 * :func:`fps_trace` / :func:`fps_trace_instances` — Fig. 7-style piecewise-
   constant per-UE fps periods.
 * :func:`multi_cell_pools` / :func:`multi_cell_trace` — several cells with
-  heterogeneous capacities but a shared allocation grid.
+  heterogeneous capacities but a shared allocation grid; with
+  ``shared_backhaul=...`` each step's cells are coupled through one shared
+  backhaul link (solved jointly by the coupled sweep engine).
 * :func:`mixed_workload_tasks` — detection + segmentation + LM task mixes.
+* :func:`closed_loop_trace` — decisions feed back into the trace; optional
+  ``handover_prob`` mobility (warm-start z pinning) and ``shared_backhaul``.
 """
 
 from __future__ import annotations
@@ -36,7 +40,7 @@ from . import latency as lat_mod
 from . import semantics
 from .greedy import solve_greedy_batch
 from .sfesp import build_instance, next_pow2, restack, stack_instances
-from .types import ProblemInstance, ResourcePool, TaskSet
+from .types import CouplingSpec, ProblemInstance, ResourcePool, TaskSet
 
 __all__ = [
     "ACC_THRESHOLDS", "LAT_THRESHOLDS",
@@ -140,12 +144,15 @@ def colosseum_tasks(fps: float, min_acc: float = 0.30,
 # ---------------------------------------------------------------------------
 
 def _tasks_from_apps(app_idx: np.ndarray, acc: str, lat: str,
-                     jobs_per_sec: np.ndarray) -> TaskSet:
+                     jobs_per_sec: np.ndarray,
+                     min_accuracy: np.ndarray | None = None) -> TaskSet:
     n = len(app_idx)
     services = np.array([semantics.APPS[i].service for i in app_idx])
+    if min_accuracy is None:
+        min_accuracy = np.array([ACC_THRESHOLDS[acc][s] for s in services])
     return TaskSet(
         app_idx=app_idx,
-        min_accuracy=np.array([ACC_THRESHOLDS[acc][s] for s in services]),
+        min_accuracy=np.asarray(min_accuracy, np.float64),
         max_latency=np.full(n, LAT_THRESHOLDS[lat]),
         bits_per_job=np.array([_BITS_PER_JOB[s] for s in services]),
         jobs_per_sec=np.asarray(jobs_per_sec, np.float64),
@@ -285,7 +292,7 @@ def multi_cell_pools(n_cells: int, m: int = 2, seed: int = 0,
 def multi_cell_trace(n_cells: int, horizon: int, *, m: int = 2,
                      acc: str = "med", lat: str = "high", seed: int = 0,
                      arrival_rate: float = 4.0, mean_holding: float = 5.0,
-                     n_grids: int = 1,
+                     n_grids: int = 1, shared_backhaul: float | None = None,
                      ) -> tuple[list[ProblemInstance], list[dict]]:
     """Per-cell Poisson traffic over a horizon, flattened time-major.
 
@@ -293,8 +300,23 @@ def multi_cell_trace(n_cells: int, horizon: int, *, m: int = 2,
     matching ``{"step", "cell"}`` metadata. With the default ``n_grids=1``
     the full trace stacks into one batch (shared level grid); ``n_grids > 1``
     yields per-cell allocation grids — solve via ``solve_greedy_many``.
+
+    ``shared_backhaul`` models the transport between the cells and the edge
+    cluster: the cells of each step share ONE backhaul link with that budget
+    (Mbit/s of admitted compressed traffic). Steps are independent admission
+    problems, so the trace's :class:`~repro.core.types.CouplingSpec` carries
+    one link PER STEP (L = horizon) and instance (step, cell) loads only its
+    step's link — the whole trace still solves as one coupled batch, with one
+    coupling group per step.
     """
+    if shared_backhaul is not None and n_grids != 1:
+        raise ValueError(
+            "shared_backhaul requires n_grids=1: cells coupled through a "
+            "link must share one allocation grid (no solver path accepts a "
+            "link spanning grid groups)")
     pools = multi_cell_pools(n_cells, m=m, seed=seed, n_grids=n_grids)
+    link_cap = None if shared_backhaul is None \
+        else np.full(horizon, float(shared_backhaul))
     insts, meta = [], []
     per_cell = [poisson_trace(horizon, pool=p, acc=acc, lat=lat,
                               seed=seed + 1000 * c,
@@ -303,8 +325,15 @@ def multi_cell_trace(n_cells: int, horizon: int, *, m: int = 2,
                 for c, p in enumerate(pools)]
     for step in range(horizon):
         for cell in range(n_cells):
-            insts.append(per_cell[cell][step])
-            meta.append(dict(step=step, cell=cell))
+            inst = per_cell[cell][step]
+            if link_cap is not None:
+                row = np.zeros((1, horizon), bool)
+                row[0, step] = True
+                inst = dataclasses.replace(
+                    inst, coupling=CouplingSpec(link_cap, row))
+            insts.append(inst)
+            meta.append(dict(step=step, cell=cell) if link_cap is None
+                        else dict(step=step, cell=cell, link=step))
     return insts, meta
 
 
@@ -312,7 +341,8 @@ def closed_loop_trace(n_cells: int, horizon: int, *, m: int = 2,
                       acc: str = "med", lat: str = "high", seed: int = 0,
                       arrival_rate: float = 4.0, mean_holding: float = 5.0,
                       max_retries: int = 2, semantic: bool = True,
-                      flexible: bool = True) -> list[dict]:
+                      flexible: bool = True, handover_prob: float = 0.0,
+                      shared_backhaul: float | None = None) -> list[dict]:
     """Closed-loop multi-cell admission: decisions feed back into the trace.
 
     Unlike :func:`multi_cell_trace` (open loop — every step's task set is
@@ -325,28 +355,78 @@ def closed_loop_trace(n_cells: int, horizon: int, *, m: int = 2,
     padded host buffers across the whole horizon, re-stacking only when a
     step outgrows the current power-of-two ``Tmax`` bucket.
 
+    ``handover_prob`` adds mobility: each step, an ADMITTED task hands over
+    to a uniformly-random other cell with this probability, its compression
+    retained as a warm start — the stream is already encoded at its admitted
+    ``z``, so the task re-arrives in the target cell with its accuracy bound
+    pinned to the level achieved at that ``z`` (Eq. 2 then re-derives the
+    same compression instead of renegotiating the stream).
+
+    ``shared_backhaul`` couples each step's cells through one shared
+    backhaul link with that budget (see :func:`multi_cell_trace`); the
+    per-step batch then solves through the coupled sweep engine.
+
     Returns one record per (step, cell):
-    ``{"step", "cell", "offered", "admitted", "objective", "restacked"}``
-    where ``restacked`` flags steps that had to allocate fresh buffers.
+    ``{"step", "cell", "offered", "admitted", "objective", "restacked",
+    "handovers"}`` where ``restacked`` flags steps that allocated fresh
+    buffers and ``handovers`` counts tasks that re-arrived in this cell via
+    handover this step.
     """
     pools = multi_cell_pools(n_cells, m=m, seed=seed)
+    coupling_row = None
+    if shared_backhaul is not None:
+        link_cap = np.array([float(shared_backhaul)])
+        coupling_row = CouplingSpec(link_cap, np.ones((1, 1), bool))
     rng = np.random.default_rng(seed + 17)
     n_paper = len(semantics.PAPER_APPS)
-    # per-cell live tasks: (app_idx, departure_step, retries_left)
+    # per-cell live tasks: app index, departure step, retries left, pinned
+    # accuracy bound (None until first handover) and last admitted z
     active: list[list[dict]] = [[] for _ in range(n_cells)]
     stacked = None
     records = []
     for step in range(horizon):
+        handed_in = [0] * n_cells
+        # departures first: a task whose holding time expired must not hand
+        # over (or consume rng draws) as a phantom
         for c in range(n_cells):
             active[c] = [t for t in active[c] if t["depart"] > step]
+        if handover_prob > 0.0 and n_cells > 1:
+            # mobility: admitted tasks may hand over before this step's
+            # arrivals; the warm-start pin keeps their stream's compression
+            moved: list[tuple[int, dict]] = []
+            for c in range(n_cells):
+                stay = []
+                for task in active[c]:
+                    if task["z"] is not None and rng.random() < handover_prob:
+                        target = int(rng.integers(0, n_cells - 1))
+                        target += target >= c
+                        task["min_acc"] = float(semantics.accuracy(
+                            np.array([task["app"]]),
+                            np.array([task["z"]]))[0])
+                        moved.append((target, task))
+                    else:
+                        stay.append(task)
+                active[c] = stay
+            for target, task in moved:
+                active[target].append(task)
+                handed_in[target] += 1
+        for c in range(n_cells):
             for _ in range(rng.poisson(arrival_rate)):
                 active[c].append(dict(
                     app=int(rng.integers(0, n_paper)),
                     depart=step + rng.exponential(mean_holding),
-                    retries=max_retries))
-        insts = [build_instance(pools[c], _tasks_from_apps(
-            np.array([t["app"] for t in active[c]], np.int64), acc, lat,
-            np.full(len(active[c]), 5.0))) for c in range(n_cells)]
+                    retries=max_retries, min_acc=None, z=None))
+        insts = []
+        for c in range(n_cells):
+            app_idx = np.array([t["app"] for t in active[c]], np.int64)
+            services = [semantics.APPS[i].service for i in app_idx]
+            min_acc = np.array([
+                t["min_acc"] if t["min_acc"] is not None
+                else ACC_THRESHOLDS[acc][s]
+                for t, s in zip(active[c], services)])
+            insts.append(build_instance(pools[c], _tasks_from_apps(
+                app_idx, acc, lat, np.full(len(active[c]), 5.0),
+                min_accuracy=min_acc), coupling=coupling_row))
         tneed = max(len(a) for a in active)
         fresh = stacked is None or tneed > stacked.max_tasks
         if fresh:
@@ -359,9 +439,14 @@ def closed_loop_trace(n_cells: int, horizon: int, *, m: int = 2,
             keep = []
             for t, task in enumerate(active[c]):
                 if sol.admitted[t]:
+                    task["z"] = float(sol.z[t])
                     keep.append(task)
                 else:
                     task["retries"] -= 1
+                    # not served → no encoded stream to warm-start from: the
+                    # task retries at its class threshold, not the pinned one
+                    task["z"] = None
+                    task["min_acc"] = None
                     if task["retries"] >= 0:   # max_retries re-offers total
                         keep.append(task)
             offered = len(active[c])
@@ -369,5 +454,6 @@ def closed_loop_trace(n_cells: int, horizon: int, *, m: int = 2,
             records.append(dict(step=step, cell=c, offered=offered,
                                 admitted=int(sol.num_allocated),
                                 objective=sol.objective,
-                                restacked=bool(fresh)))
+                                restacked=bool(fresh),
+                                handovers=handed_in[c]))
     return records

@@ -16,11 +16,12 @@ import numpy as np
 
 from . import latency as lat_mod
 from . import semantics
-from .types import (ProblemInstance, ResourcePool, Solution, StackedInstances,
-                    TaskSet, make_allocation_grid)
+from .types import (CouplingSpec, ProblemInstance, ResourcePool, Solution,
+                    StackedInstances, TaskSet, make_allocation_grid)
 
 __all__ = ["build_instance", "check_solution", "objective_value",
-           "default_z_grid", "stack_instances", "restack", "next_pow2"]
+           "default_z_grid", "stack_instances", "restack", "next_pow2",
+           "task_link_load", "merge_coupling"]
 
 
 def next_pow2(n: int) -> int:
@@ -39,7 +40,8 @@ def default_z_grid(n: int = 64) -> np.ndarray:
 
 def build_instance(pool: ResourcePool, tasks: TaskSet,
                    lat_params: lat_mod.LatencyParams | None = None,
-                   z_grid: np.ndarray | None = None) -> ProblemInstance:
+                   z_grid: np.ndarray | None = None,
+                   coupling: CouplingSpec | None = None) -> ProblemInstance:
     lat_params = lat_params or lat_mod.LatencyParams()
     z_grid = default_z_grid() if z_grid is None else np.asarray(z_grid)
     grid = make_allocation_grid(pool.levels)
@@ -63,7 +65,52 @@ def build_instance(pool: ResourcePool, tasks: TaskSet,
         acc=acc, acc_agnostic=acc_agn, grid=grid,
         lat=lat, lat_agnostic=lat_agn,
         z_star_idx=zi, z_star_idx_agnostic=zi_agn,
+        coupling=coupling,
     )
+
+
+def task_link_load(inst: ProblemInstance, *, semantic: bool = True
+                   ) -> np.ndarray:
+    """Per-task shared-link load ``b_τ · λ_τ · z*_τ`` (Mbit/s) → (T,).
+
+    The network traffic an admitted task puts on every shared link its cell
+    traverses — the quantity SEM-O-RAN's semantic compression shrinks, and the
+    quantity a :class:`~repro.core.types.CouplingSpec` budgets.
+    """
+    z_idx = inst.z_star_idx if semantic else inst.z_star_idx_agnostic
+    z = _z_star_of(inst.z_grid, z_idx)
+    return inst.tasks.bits_per_job * inst.tasks.jobs_per_sec * z
+
+
+def merge_coupling(insts: Sequence[ProblemInstance]) -> CouplingSpec | None:
+    """Merge per-instance single-cell coupling rows into one (B, L) spec.
+
+    Every coupled instance must reference the SAME shared link set — the
+    identical ``link_capacity`` array OBJECT (build all per-cell rows from
+    one spec / one capacity array, as ``CouplingSpec.row`` and the scenario
+    generators do). Identity rather than value equality is deliberate: two
+    logically independent deployments can carry equal budget vectors, and
+    merging them by value would silently charge both against one budget.
+    Instances without a spec become all-zero (uncoupled) rows. Returns
+    ``None`` when no instance is coupled.
+    """
+    specs = [inst.coupling for inst in insts]
+    ref = next((s for s in specs if s is not None), None)
+    if ref is None:
+        return None
+    inc = np.zeros((len(insts), ref.num_links), bool)
+    for b, spec in enumerate(specs):
+        if spec is None:
+            continue
+        if spec.incidence.shape != (1, ref.num_links) or \
+                spec.link_capacity is not ref.link_capacity or \
+                spec.names != ref.names:
+            raise ValueError(
+                "all coupled instances in a batch must reference one shared "
+                "link set (the same link_capacity array object, single-row "
+                "incidence) — build per-cell rows from one CouplingSpec")
+        inc[b] = spec.incidence[0]
+    return CouplingSpec(ref.link_capacity, inc, ref.names)
 
 
 def _check_shared_grid(insts: Sequence[ProblemInstance], grid: np.ndarray,
@@ -107,6 +154,12 @@ def _fill_stacked(st: StackedInstances, insts: tuple[ProblemInstance, ...],
     st.app_idx[rows, cols] = cat(lambda i: i.tasks.app_idx)
     st.min_accuracy[rows, cols] = cat(lambda i: i.tasks.min_accuracy)
     st.max_latency[rows, cols] = cat(lambda i: i.tasks.max_latency)
+    if st.coupling is not None:
+        # only coupled batches read the load tables; skipping them keeps the
+        # uncoupled restack hot path free of two per-instance passes
+        st.link_load[rows, cols] = cat(lambda i: task_link_load(i))
+        st.link_load_agnostic[rows, cols] = cat(
+            lambda i: task_link_load(i, semantic=False))
     st.task_mask[rows, cols] = True
     st.capacity[:] = [i.pool.capacity for i in insts]
     st.price[:] = [i.pool.price for i in insts]
@@ -149,6 +202,9 @@ def stack_instances(insts: Sequence[ProblemInstance], *,
         min_accuracy=np.full((B, tmax), np.inf),
         max_latency=np.zeros((B, tmax)),
         task_mask=np.zeros((B, tmax), bool), num_tasks=n_tasks,
+        link_load=np.zeros((B, tmax)),
+        link_load_agnostic=np.zeros((B, tmax)),
+        coupling=merge_coupling(insts),
     )
     _fill_stacked(st, insts, n_tasks)
     return st
@@ -191,7 +247,10 @@ def restack(stacked: StackedInstances,
     stacked.min_accuracy.fill(np.inf)
     stacked.max_latency.fill(0.0)
     stacked.task_mask.fill(False)
-    st = dataclasses.replace(stacked, instances=insts, num_tasks=n_tasks)
+    stacked.link_load.fill(0.0)
+    stacked.link_load_agnostic.fill(0.0)
+    st = dataclasses.replace(stacked, instances=insts, num_tasks=n_tasks,
+                             coupling=merge_coupling(insts))
     _fill_stacked(st, insts, n_tasks)
     return st
 

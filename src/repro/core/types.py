@@ -24,6 +24,7 @@ import numpy as np
 __all__ = [
     "ResourcePool",
     "TaskSet",
+    "CouplingSpec",
     "ProblemInstance",
     "StackedInstances",
     "Solution",
@@ -88,6 +89,84 @@ class TaskSet:
         return len(self.app_idx)
 
 
+@dataclasses.dataclass(frozen=True)
+class CouplingSpec:
+    """Shared midhaul/backhaul links coupling the cells of a multi-cell batch.
+
+    SEM-O-RAN's networking-load minimization only pays off system-wide if the
+    *shared* transport between cells and the edge cluster is itself a budgeted
+    resource: cells that solve their SF-ESP independently can jointly
+    over-admit a midhaul/backhaul link (cf. joint communication+computation
+    slicing, arXiv:2202.06439 / arXiv:1911.01904). A ``CouplingSpec``
+    describes that transport topology:
+
+    Attributes:
+      link_capacity: (L,) float — per-link budget on the summed *admitted*
+        network load, in the same unit as the per-task load
+        ``b_τ · λ_τ · z*_τ`` (Mbit/s of compressed traffic).
+      incidence: (C, L) bool — one row per cell; ``incidence[c, l]`` means
+        cell ``c``'s traffic traverses shared link ``l``. On a single
+        :class:`ProblemInstance` the spec carries that cell's own row
+        (C == 1); :func:`repro.core.sfesp.stack_instances` merges the rows of
+        a batch into the (B, L) spec the coupled solver consumes. Cells whose
+        rows are all-zero are uncoupled (their group is a singleton and they
+        admit exactly as the link-free path).
+      names: optional human-readable link names.
+    """
+
+    link_capacity: np.ndarray
+    incidence: np.ndarray
+    names: tuple[str, ...] | None = None
+
+    def __post_init__(self):
+        cap = np.asarray(self.link_capacity, np.float64)
+        inc = np.asarray(self.incidence, bool)
+        object.__setattr__(self, "link_capacity", cap)
+        object.__setattr__(self, "incidence", inc)
+        assert cap.ndim == 1
+        assert inc.ndim == 2 and inc.shape[1] == cap.shape[0], inc.shape
+        if self.names is not None:
+            assert len(self.names) == cap.shape[0]
+
+    @property
+    def num_links(self) -> int:
+        return self.link_capacity.shape[0]
+
+    @property
+    def num_cells(self) -> int:
+        return self.incidence.shape[0]
+
+    def row(self, c: int) -> "CouplingSpec":
+        """The single-cell view of cell ``c`` (incidence row, same links)."""
+        return CouplingSpec(self.link_capacity, self.incidence[c:c + 1],
+                            self.names)
+
+    def groups(self) -> np.ndarray:
+        """Connected components of the cell–link graph → (C,) group ids.
+
+        Cells sharing a link (transitively) must admit jointly — one
+        global-max pick per group per round — so both the numpy oracle and
+        the batched engine derive their group structure from this single
+        implementation. Ids are the smallest cell index of each component.
+        """
+        c = self.num_cells
+        parent = np.arange(c)
+
+        def find(a: int) -> int:
+            while parent[a] != a:
+                parent[a] = parent[parent[a]]
+                a = parent[a]
+            return a
+
+        for link in range(self.num_links):
+            users = np.nonzero(self.incidence[:, link])[0]
+            for other in users[1:]:
+                ra, rb = find(int(users[0])), find(int(other))
+                if ra != rb:
+                    parent[max(ra, rb)] = min(ra, rb)
+        return np.array([find(i) for i in range(c)], np.int64)
+
+
 def make_allocation_grid(levels: Sequence[np.ndarray]) -> np.ndarray:
     """Cartesian product of per-resource allocation levels → grid (A, m).
 
@@ -115,6 +194,8 @@ class ProblemInstance:
       z_star_idx: (T,) int — index into z_grid of z*_τ (semantic); -1 if the
         accuracy bound is unreachable on the task's own curve.
       z_star_idx_agnostic: (T,) int — same for the agnostic curve.
+      coupling: optional single-cell :class:`CouplingSpec` view (incidence
+        shape (1, L)) — the shared links this cell's admitted traffic loads.
     """
 
     pool: ResourcePool
@@ -127,6 +208,7 @@ class ProblemInstance:
     lat_agnostic: np.ndarray
     z_star_idx: np.ndarray
     z_star_idx_agnostic: np.ndarray
+    coupling: CouplingSpec | None = None
 
     @property
     def num_tasks(self) -> int:
@@ -180,6 +262,11 @@ class StackedInstances:
     max_latency: np.ndarray           # (B, Tmax) — 0 padded
     task_mask: np.ndarray             # (B, Tmax) bool — True on real tasks
     num_tasks: np.ndarray             # (B,) int — T_b of each instance
+    # per-task shared-link load b_τ·λ_τ·z*_τ at the semantic / agnostic z*,
+    # 0-padded; consumed by the coupled admission rounds when `coupling` is set
+    link_load: np.ndarray | None = None           # (B, Tmax)
+    link_load_agnostic: np.ndarray | None = None  # (B, Tmax)
+    coupling: CouplingSpec | None = None          # merged (B, L) batch view
 
     @property
     def batch_size(self) -> int:

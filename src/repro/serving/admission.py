@@ -13,8 +13,8 @@ import dataclasses
 
 import numpy as np
 
-from repro.core import (ResourcePool, check_solution, next_pow2, restack,
-                        solve, solve_greedy_batch, stack_instances)
+from repro.core import (CouplingSpec, ResourcePool, check_solution, next_pow2,
+                        restack, solve, solve_greedy_batch, stack_instances)
 from .request import SliceRequest
 from .sdla import SDLA
 
@@ -51,7 +51,8 @@ class SESM:
                     **self.algorithm)
         return self._decisions(requests, inst, sol)
 
-    def solve_batch(self, request_sets: list[list[SliceRequest]]
+    def solve_batch(self, request_sets: list[list[SliceRequest]],
+                    coupling: CouplingSpec | None = None
                     ) -> list[list[SliceDecision]]:
         """Evaluate many candidate re-slice decisions in ONE device program.
 
@@ -63,16 +64,31 @@ class SESM:
         on it (up to the float32 gradient-tie caveat of the JAX backends vs
         the numpy default — see ``solve_greedy_batch``).
 
+        ``coupling`` treats the request sets as CELLS of one multi-cell
+        deployment instead of independent what-ifs: ``coupling.incidence``
+        must have one row per request set, and sets routed through a common
+        shared link admit jointly under its budget (the coupled sweep
+        engine; reference semantics in ``core.baselines.solve_coupled_ref``).
+        Empty request sets keep their (vacuous) incidence row.
+
         Stacking buffers are padded to a power-of-two ``Tmax`` bucket and
         reused (``restack``) across calls with the same number of request
         sets, so a closed-loop horizon evaluation neither reallocates the
         (B, Tmax, A) host tables nor recompiles the device program per step.
         """
+        if coupling is not None and \
+                coupling.num_cells != len(request_sets):
+            raise ValueError(
+                f"coupling.incidence has {coupling.num_cells} rows for "
+                f"{len(request_sets)} request sets")
         filled = [(i, rs) for i, rs in enumerate(request_sets) if rs]
         out: list[list[SliceDecision]] = [[] for _ in request_sets]
         if not filled:
             return out
         insts = [self.sdla.build_instance(rs, self.pool) for _, rs in filled]
+        if coupling is not None:
+            insts = [dataclasses.replace(inst, coupling=coupling.row(i))
+                     for (i, _), inst in zip(filled, insts)]
         cache = self._batch_cache
         tneed = max(inst.num_tasks for inst in insts)
         if (cache is not None and cache.batch_size == len(insts)

@@ -1,5 +1,10 @@
 """Serving engine: admission, semantic compression, eviction, metrics."""
-from repro.core import scenarios
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import CouplingSpec, scenarios, solve_coupled_ref
 from repro.serving import EdgeServingEngine, SliceRequest
 from repro.serving.admission import SESM
 
@@ -81,6 +86,32 @@ def test_solve_batch_reuses_stacking_buffers():
     assert sesm._batch_cache.lat is not cache.lat
     assert sesm._batch_cache.max_tasks == 8
     assert [d.admitted for d in wide[0]] == [d.admitted for d in first[0]]
+
+
+def test_solve_batch_coupled_cells_share_backhaul():
+    """Request sets as coupled cells: a tight shared link rejects admissions
+    the independent what-if evaluation would grant."""
+    sesm = SESM(scenarios.colosseum_pool())
+    sets = [[_req("coco_bags"), _req("cityscapes_flat")],
+            [_req("coco_animals", acc=0.50, fps=10.0), _req("coco_bags",
+                                                            fps=8.0)],
+            []]
+    spec = CouplingSpec(np.array([3.0]), np.array([[1], [1], [0]], bool))
+    coupled = sesm.solve_batch(sets, coupling=spec)
+    assert [len(d) for d in coupled] == [2, 2, 0]
+    insts = [dataclasses.replace(
+        sesm.sdla.build_instance(rs, sesm.pool), coupling=spec.row(i))
+        for i, rs in enumerate(sets[:2])]
+    for ds, ref in zip(coupled[:2], solve_coupled_ref(insts)):
+        assert [d.admitted for d in ds] == [bool(a) for a in ref.admitted]
+    # the budget binds vs the uncoupled evaluation of the same sets
+    plain = sesm.solve_batch(sets)
+    n_coupled = sum(d.admitted for ds in coupled for d in ds)
+    n_plain = sum(d.admitted for ds in plain for d in ds)
+    assert n_coupled < n_plain
+    with pytest.raises(ValueError, match="rows"):
+        sesm.solve_batch(sets, coupling=CouplingSpec(
+            np.array([3.0]), np.ones((2, 1), bool)))
 
 
 def test_process_and_metrics():

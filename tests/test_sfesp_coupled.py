@@ -1,0 +1,244 @@
+"""Cell-coupled (shared backhaul) batched solving vs the numpy coupled oracle."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (CouplingSpec, build_instance, merge_coupling,
+                        scenarios, semantics, solve_coupled_ref, solve_greedy,
+                        solve_greedy_batch, solve_greedy_many, stack_instances,
+                        restack, task_link_load)
+
+
+def _coupled_instances(n_cells=4, seed=0, link_caps=(4.0, 6.0)):
+    """Heterogeneous-pool cells over a random link topology (every link has
+    at least one user; the last cell stays link-free/uncoupled)."""
+    rng = np.random.default_rng(seed)
+    pools = scenarios.multi_cell_pools(n_cells, seed=seed)
+    cap = np.asarray(link_caps, float)
+    L = len(cap)
+    inc = np.zeros((n_cells, L), bool)
+    for link in range(L):
+        users = rng.choice(n_cells - 1, size=rng.integers(1, n_cells - 1),
+                           replace=False)
+        inc[users, link] = True
+    insts = []
+    for c, pool in enumerate(pools):
+        tasks = scenarios.numerical_tasks(
+            int(rng.integers(4, 30)), ("low", "med", "high")[c % 3], "high",
+            seed=seed + 31 * c)
+        insts.append(build_instance(
+            pool, tasks, coupling=CouplingSpec(cap, inc[c:c + 1])))
+    return insts, cap, inc
+
+
+def _assert_matches_ref(insts, **kw):
+    sols = solve_greedy_batch(stack_instances(insts), **kw)
+    refs = solve_coupled_ref(insts, **kw)
+    for b, (sol, ref) in enumerate(zip(sols, refs)):
+        assert (sol.admitted == ref.admitted).all(), b
+        assert np.allclose(sol.alloc, ref.alloc)
+        assert np.allclose(sol.z, ref.z)
+        assert sol.objective == pytest.approx(ref.objective)
+    return sols
+
+
+def test_coupled_matches_oracle_randomized():
+    for seed in range(4):
+        insts, cap, inc = _coupled_instances(seed=seed)
+        sols = _assert_matches_ref(insts)
+        # shared-link budgets hold for the admitted set
+        for link in range(len(cap)):
+            used = sum(
+                float((task_link_load(i) * s.admitted).sum())
+                for i, s, on in zip(insts, sols, inc[:, link]) if on)
+            assert used <= cap[link] + 1e-6
+
+
+@pytest.mark.parametrize("semantic", [True, False])
+@pytest.mark.parametrize("flexible", [True, False])
+def test_coupled_matches_oracle_all_quadrants(semantic, flexible):
+    insts, _, _ = _coupled_instances(seed=2)
+    _assert_matches_ref(insts, semantic=semantic, flexible=flexible)
+
+
+def test_coupled_pallas_inner_matches_oracle():
+    insts, _, _ = _coupled_instances(seed=1)
+    sols = solve_greedy_batch(stack_instances(insts), inner="pallas")
+    for sol, ref in zip(sols, solve_coupled_ref(insts)):
+        assert (sol.admitted == ref.admitted).all()
+        assert np.allclose(sol.alloc, ref.alloc)
+
+
+def test_zero_budget_admits_only_link_free_cells():
+    insts, _, _ = _coupled_instances(seed=3, link_caps=(0.0, 0.0))
+    sols = _assert_matches_ref(insts)
+    for inst, sol in zip(insts, sols):
+        if inst.coupling.incidence.any():
+            # every task carries positive load → nothing fits a zero link
+            assert sol.num_allocated == 0
+        else:
+            # the link-free cell admits exactly as the uncoupled greedy
+            ref = solve_greedy(inst)
+            assert (sol.admitted == ref.admitted).all()
+            assert sol.num_allocated > 0
+
+
+def test_singleton_groups_bit_match_uncoupled_path():
+    """One cell per group (private links) == the uncoupled device program."""
+    insts, _, _ = _coupled_instances(seed=4)
+    plain = [dataclasses.replace(i, coupling=None) for i in insts]
+    # generous private link per cell → constraint never binds (one shared
+    # spec: per-cell rows must reference the same capacity array)
+    spec = CouplingSpec(np.full(len(insts), 1e9),
+                        np.eye(len(insts), dtype=bool))
+    solo = [dataclasses.replace(i, coupling=spec.row(c))
+            for c, i in enumerate(insts)]
+    spec = stack_instances(solo).coupling
+    assert (spec.groups() == np.arange(len(insts))).all()
+    for a, b in zip(solve_greedy_batch(stack_instances(solo)),
+                    solve_greedy_batch(stack_instances(plain))):
+        assert (a.admitted == b.admitted).all()
+        assert np.allclose(a.alloc, b.alloc)
+        assert a.objective == b.objective
+
+
+def test_coupled_pad_batch_to_is_inert():
+    insts, _, _ = _coupled_instances(seed=5, link_caps=(3.0,))
+    st = stack_instances(insts)
+    plain = solve_greedy_batch(st)
+    padded = solve_greedy_batch(st, pad_batch_to=8)
+    for a, b in zip(plain, padded):
+        assert (a.admitted == b.admitted).all()
+        assert np.allclose(a.alloc, b.alloc)
+
+
+def test_coupling_spec_groups_transitive():
+    # cells 0-1 share link 0, cells 1-2 share link 1 → {0,1,2} one group
+    inc = np.array([[1, 0], [1, 1], [0, 1], [0, 0]], bool)
+    spec = CouplingSpec(np.ones(2), inc)
+    assert spec.groups().tolist() == [0, 0, 0, 3]
+
+
+def test_merge_coupling_validates_link_set():
+    insts, _, _ = _coupled_instances(seed=0)
+    other = dataclasses.replace(
+        insts[1], coupling=CouplingSpec(np.array([9.0]), np.ones((1, 1), bool)))
+    with pytest.raises(ValueError, match="shared link set"):
+        merge_coupling([insts[0], other])
+    # identity, not value equality: an equal budget vector from a DIFFERENT
+    # deployment must not be silently charged against the same links
+    twin = dataclasses.replace(
+        insts[1], coupling=CouplingSpec(
+            insts[0].coupling.link_capacity.copy(),
+            insts[1].coupling.incidence))
+    with pytest.raises(ValueError, match="shared link set"):
+        merge_coupling([insts[0], twin])
+    assert merge_coupling([dataclasses.replace(i, coupling=None)
+                           for i in insts]) is None
+
+
+def test_many_rejects_link_across_grid_groups():
+    pools = scenarios.multi_cell_pools(2, seed=3, n_grids=2)  # distinct grids
+    spec = CouplingSpec(np.array([5.0]), np.ones((1, 1), bool))
+    insts = [build_instance(p, scenarios.numerical_tasks(6, "med", "high",
+                                                         seed=s),
+                            coupling=spec)
+             for s, p in enumerate(pools)]
+    with pytest.raises(ValueError, match="span grid groups"):
+        solve_greedy_many(insts)
+
+
+def test_many_dispatches_coupled_groups():
+    insts, _, _ = _coupled_instances(seed=6, link_caps=(5.0,))
+    sols = solve_greedy_many(insts)
+    for sol, ref in zip(sols, solve_coupled_ref(insts)):
+        assert (sol.admitted == ref.admitted).all()
+        assert np.allclose(sol.alloc, ref.alloc)
+
+
+def test_restack_recomputes_coupling():
+    insts, _, _ = _coupled_instances(seed=7, link_caps=(4.0,))
+    plain = [dataclasses.replace(i, coupling=None) for i in insts]
+    st = stack_instances(plain, tmax=32)
+    assert st.coupling is None
+    st2 = restack(st, insts)
+    assert st2.coupling is not None and st2.lat is st.lat
+    for sol, ref in zip(solve_greedy_batch(st2), solve_coupled_ref(insts)):
+        assert (sol.admitted == ref.admitted).all()
+
+
+# ---------------------------------------------------------------------------
+# coupled scenarios: shared-backhaul traces + handover
+# ---------------------------------------------------------------------------
+
+def test_multi_cell_trace_shared_backhaul_one_group_per_step():
+    insts, meta = scenarios.multi_cell_trace(3, 4, seed=2,
+                                             shared_backhaul=5.0)
+    st = stack_instances(insts)
+    groups = st.coupling.groups()
+    # cells of one step are coupled; different steps are independent
+    for i, m in enumerate(meta):
+        assert groups[i] == 3 * m["step"]
+    sols = solve_greedy_batch(st)
+    for sol, ref in zip(sols, solve_coupled_ref(insts)):
+        assert (sol.admitted == ref.admitted).all()
+    for step in range(4):
+        used = sum(float((task_link_load(i) * s.admitted).sum())
+                   for i, s, m in zip(insts, sols, meta)
+                   if m["step"] == step)
+        assert used <= 5.0 + 1e-6
+
+
+def test_shared_backhaul_rejects_mixed_grids():
+    with pytest.raises(ValueError, match="n_grids"):
+        scenarios.multi_cell_trace(4, 2, n_grids=2, shared_backhaul=5.0)
+
+
+def test_shared_backhaul_binds_admission():
+    loose, _ = scenarios.multi_cell_trace(3, 3, seed=1)
+    tight, _ = scenarios.multi_cell_trace(3, 3, seed=1, shared_backhaul=2.0)
+    n_loose = sum(s.num_allocated for s in solve_greedy_batch(loose))
+    n_tight = sum(s.num_allocated for s in solve_greedy_batch(tight))
+    assert n_tight < n_loose
+    load = sum(float((task_link_load(i) * s.admitted).sum())
+               for i, s in zip(tight, solve_greedy_batch(tight)))
+    assert load <= 3 * 2.0 + 1e-6          # 3 steps x one 2.0 link each
+
+
+def test_closed_loop_handover_step():
+    recs = scenarios.closed_loop_trace(3, 8, seed=5, arrival_rate=3.0,
+                                       handover_prob=0.5)
+    assert sum(r["handovers"] for r in recs) > 0
+    assert all(0 <= r["admitted"] <= r["offered"] for r in recs)
+    again = scenarios.closed_loop_trace(3, 8, seed=5, arrival_rate=3.0,
+                                        handover_prob=0.5)
+    assert recs == again
+    # single cell: nowhere to hand over to
+    solo = scenarios.closed_loop_trace(1, 4, seed=5, handover_prob=1.0)
+    assert all(r["handovers"] == 0 for r in solo)
+
+
+def test_closed_loop_coupled_backhaul_runs():
+    recs = scenarios.closed_loop_trace(2, 5, seed=4, arrival_rate=4.0,
+                                       shared_backhaul=3.0,
+                                       handover_prob=0.25)
+    assert len(recs) == 10
+    assert all(0 <= r["admitted"] <= r["offered"] for r in recs)
+    # the tight shared link caps admission below the uncoupled run
+    free = scenarios.closed_loop_trace(2, 5, seed=4, arrival_rate=4.0,
+                                       handover_prob=0.25)
+    assert sum(r["admitted"] for r in recs) <= sum(r["admitted"] for r in free)
+
+
+def test_handover_warm_start_pins_compression():
+    """Re-deriving z from the accuracy achieved at the admitted z never
+    forces a re-upload at a higher rate (the warm-start contract)."""
+    z_grid = np.geomspace(0.02, 1.0, 64)
+    for app in range(len(semantics.PAPER_APPS)):
+        idx = np.full(z_grid.shape, app)
+        acc_at = semantics.accuracy(idx, z_grid)
+        zi = semantics.min_z_for_accuracy(idx, acc_at, z_grid)
+        assert (zi >= 0).all()
+        assert (z_grid[zi] <= z_grid + 1e-12).all()
+        assert (semantics.accuracy(idx, z_grid[zi]) >= acc_at - 1e-9).all()
