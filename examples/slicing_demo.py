@@ -47,8 +47,9 @@ def main():
     engine.process(wall_dt=1.0)
     print("slice metrics:")
     for rid, m in engine.metrics().items():
+        p50 = "n/a" if m["no_data"] else f"{m['p50_latency_s']:.3f}s"
         print(f"  {m['app']:18s} jobs={m['jobs_done']:3d} "
-              f"p50={m['p50_latency_s']:.3f}s deadline={m['deadline_s']}s "
+              f"p50={p50} deadline={m['deadline_s']}s "
               f"meets={m['meets_deadline']}")
 
 

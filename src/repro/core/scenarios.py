@@ -28,6 +28,9 @@ allocation grid, so a whole trace/sweep solves as ONE stacked device program.
 * :func:`mixed_workload_tasks` — detection + segmentation + LM task mixes.
 * :func:`closed_loop_trace` — decisions feed back into the trace; optional
   ``handover_prob`` mobility (warm-start z pinning) and ``shared_backhaul``.
+* :func:`closed_loop_arrivals` — the closed loop's exogenous traffic as a
+  plain event stream, so the SERVING engine can be driven by the same
+  generators (``repro.serving.driver.drive_closed_loop`` consumes it).
 """
 
 from __future__ import annotations
@@ -47,7 +50,7 @@ __all__ = [
     "numerical_pool", "numerical_tasks", "colosseum_pool", "colosseum_tasks",
     "fig6_sweep", "poisson_trace", "fps_trace", "fps_trace_instances",
     "multi_cell_pools", "multi_cell_trace", "mixed_workload_tasks",
-    "closed_loop_trace",
+    "closed_loop_trace", "closed_loop_arrivals",
 ]
 
 # paper Section V-B threshold definitions ("lm" extends them to the
@@ -337,6 +340,54 @@ def multi_cell_trace(n_cells: int, horizon: int, *, m: int = 2,
     return insts, meta
 
 
+def closed_loop_arrivals(n_cells: int, horizon: int, *,
+                         arrival_rate: float = 4.0, mean_holding: float = 5.0,
+                         acc: str = "med", lat: str = "high",
+                         jobs_per_sec: float = 5.0,
+                         seed: int = 0) -> list[list[list[dict]]]:
+    """The closed loop's exogenous traffic as an engine-drivable event stream.
+
+    Same traffic MODEL as :func:`closed_loop_trace` — per cell and step,
+    ``Poisson(arrival_rate)`` tasks arrive, each drawn uniformly from the
+    paper's Tab. II applications with an ``Exp(mean_holding)`` holding time —
+    but emitted as plain events instead of being solved in place, so a
+    serving engine (``repro.serving.multicell.MultiCellEngine``, via
+    ``repro.serving.driver.drive_closed_loop``) can be driven by the same
+    generators the offline trace uses. (Same distribution, NOT the same
+    random realization: the offline trace interleaves its arrival draws with
+    handover draws on one stream, so equal seeds do not reproduce its exact
+    per-step counts.) Returns
+    ``events[step][cell] = [event, ...]`` with each event::
+
+        {"app": int,            # semantics.APPS index
+         "app_class": str,      # registry name (SliceRequest.app_class)
+         "service": str,        # "detection" | "segmentation"
+         "min_accuracy": float, # ACC_THRESHOLDS[acc][service]
+         "max_latency_s": float,
+         "jobs_per_sec": float,
+         "depart": float}       # step at which the task leaves the system
+    """
+    rng = np.random.default_rng(seed)
+    n_paper = len(semantics.PAPER_APPS)
+    events: list[list[list[dict]]] = []
+    for step in range(horizon):
+        per_cell = []
+        for _ in range(n_cells):
+            evs = []
+            for _ in range(rng.poisson(arrival_rate)):
+                app = int(rng.integers(0, n_paper))
+                cls = semantics.APPS[app]
+                evs.append(dict(
+                    app=app, app_class=cls.name, service=cls.service,
+                    min_accuracy=ACC_THRESHOLDS[acc][cls.service],
+                    max_latency_s=LAT_THRESHOLDS[lat],
+                    jobs_per_sec=float(jobs_per_sec),
+                    depart=step + float(rng.exponential(mean_holding))))
+            per_cell.append(evs)
+        events.append(per_cell)
+    return events
+
+
 def closed_loop_trace(n_cells: int, horizon: int, *, m: int = 2,
                       acc: str = "med", lat: str = "high", seed: int = 0,
                       arrival_rate: float = 4.0, mean_holding: float = 5.0,
@@ -400,9 +451,8 @@ def closed_loop_trace(n_cells: int, horizon: int, *, m: int = 2,
                     if task["z"] is not None and rng.random() < handover_prob:
                         target = int(rng.integers(0, n_cells - 1))
                         target += target >= c
-                        task["min_acc"] = float(semantics.accuracy(
-                            np.array([task["app"]]),
-                            np.array([task["z"]]))[0])
+                        task["min_acc"] = semantics.warm_start_accuracy(
+                            task["app"], task["z"])
                         moved.append((target, task))
                     else:
                         stay.append(task)

@@ -46,6 +46,7 @@ __all__ = [
     "accuracy_table",
     "min_z_for_accuracy",
     "agnostic_app",
+    "warm_start_accuracy",
 ]
 
 
@@ -204,6 +205,15 @@ def accuracy(app_idx, z):
 def accuracy_table(app_idx: np.ndarray, z_grid: np.ndarray) -> np.ndarray:
     """(T, Z) table of a_τ(z) for each task's app over the z grid."""
     return accuracy(np.asarray(app_idx)[:, None], np.asarray(z_grid)[None, :])
+
+
+def warm_start_accuracy(app_idx: int, z: float) -> float:
+    """The handover warm-start pin: the accuracy a stream already encoded at
+    ``z`` achieves — Eq. (2) in the target cell then re-derives (at most)
+    that same compression instead of renegotiating the stream. Single source
+    for the closed-loop trace AND the serving engine, so trace-vs-engine
+    equivalence cannot drift."""
+    return float(accuracy(np.array([app_idx]), np.array([z]))[0])
 
 
 def min_z_for_accuracy(app_idx: np.ndarray, min_acc: np.ndarray,

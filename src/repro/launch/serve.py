@@ -54,8 +54,9 @@ def main():
     for _ in range(args.ticks):
         engine.process(wall_dt=1.0)
     for rid, m in engine.metrics().items():
+        p50 = "n/a" if m["no_data"] else f"{m['p50_latency_s']:.3f}s"
         print(f"[serve] task {rid} {m['app']:18s} jobs={m['jobs_done']} "
-              f"p50={m['p50_latency_s']:.3f}s deadline={m['deadline_s']}s "
+              f"p50={p50} deadline={m['deadline_s']}s "
               f"ok={m['meets_deadline']}")
 
 

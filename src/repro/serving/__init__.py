@@ -1,4 +1,10 @@
 from .request import SliceRequest
 from .sdla import SDLA
 from .admission import SESM, SliceDecision
-from .engine import EdgeServingEngine
+from .engine import CellRuntime, EdgeServingEngine, TaskRuntime
+from .multicell import MultiCellEngine
+from .driver import drive_closed_loop
+
+__all__ = ["SliceRequest", "SDLA", "SESM", "SliceDecision", "CellRuntime",
+           "EdgeServingEngine", "TaskRuntime", "MultiCellEngine",
+           "drive_closed_loop"]

@@ -10,6 +10,7 @@ equally considered — already-running tasks may be evicted, Section III-C).
 from __future__ import annotations
 
 import dataclasses
+from typing import Sequence
 
 import numpy as np
 
@@ -29,6 +30,11 @@ class SliceDecision:
     alloc: dict[str, float]
     expected_latency_s: float
     expected_accuracy: float
+    # control-plane plumbing for cell-indexed decision sets: which cell of a
+    # multi-cell re-slice this decision belongs to, and whether a rejection
+    # evicted a previously-RUNNING task (vs turning away a pending request)
+    cell: int | None = None
+    evicted: bool = False
 
 
 class SESM:
@@ -42,6 +48,11 @@ class SESM:
         # padded stacking buffers reused across solve_batch calls (the
         # closed-loop re-slice case: only tasks/capacities change per call)
         self._batch_cache = None
+        # stacking-cache telemetry: fresh_stacks counts (re)allocations of the
+        # padded buffers, restacks counts in-place refills — a healthy closed
+        # loop shows fresh_stacks == 1 after the first tick (zero cache misses)
+        self.fresh_stacks = 0
+        self.restacks = 0
 
     def slice(self, requests: list[SliceRequest]) -> list[SliceDecision]:
         if not requests:
@@ -52,7 +63,8 @@ class SESM:
         return self._decisions(requests, inst, sol)
 
     def solve_batch(self, request_sets: list[list[SliceRequest]],
-                    coupling: CouplingSpec | None = None
+                    coupling: CouplingSpec | None = None,
+                    pools: Sequence[ResourcePool] | None = None
                     ) -> list[list[SliceDecision]]:
         """Evaluate many candidate re-slice decisions in ONE device program.
 
@@ -71,6 +83,11 @@ class SESM:
         engine; reference semantics in ``core.baselines.solve_coupled_ref``).
         Empty request sets keep their (vacuous) incidence row.
 
+        ``pools`` gives each request set its own resource pool (a multi-cell
+        deployment with heterogeneous capacities); all pools must share one
+        enumerated allocation grid (identical ``levels``). ``None`` keeps this
+        SESM's pool for every set.
+
         Stacking buffers are padded to a power-of-two ``Tmax`` bucket and
         reused (``restack``) across calls with the same number of request
         sets, so a closed-loop horizon evaluation neither reallocates the
@@ -81,34 +98,45 @@ class SESM:
             raise ValueError(
                 f"coupling.incidence has {coupling.num_cells} rows for "
                 f"{len(request_sets)} request sets")
-        filled = [(i, rs) for i, rs in enumerate(request_sets) if rs]
+        if pools is not None and len(pools) != len(request_sets):
+            raise ValueError(
+                f"got {len(pools)} pools for {len(request_sets)} request sets")
         out: list[list[SliceDecision]] = [[] for _ in request_sets]
-        if not filled:
+        if not any(request_sets):
             return out
-        insts = [self.sdla.build_instance(rs, self.pool) for _, rs in filled]
+        # EMPTY sets stay in the batch as zero-task rows (task_mask all
+        # False, never-alive padding): a transiently-empty cell in a closed
+        # loop must not shrink the batch, which would miss the restack cache
+        # and recompile the device program for the new shape
+        insts = [self.sdla.build_instance(
+            rs, self.pool if pools is None else pools[i])
+            for i, rs in enumerate(request_sets)]
         if coupling is not None:
             insts = [dataclasses.replace(inst, coupling=coupling.row(i))
-                     for (i, _), inst in zip(filled, insts)]
+                     for i, inst in enumerate(insts)]
         cache = self._batch_cache
         tneed = max(inst.num_tasks for inst in insts)
         if (cache is not None and cache.batch_size == len(insts)
                 and cache.max_tasks >= tneed
                 and np.array_equal(cache.grid, insts[0].grid)):
             stacked = restack(cache, insts)
+            self.restacks += 1
         else:
             stacked = stack_instances(insts, tmax=next_pow2(tneed))
+            self.fresh_stacks += 1
         self._batch_cache = stacked
         sols = solve_greedy_batch(stacked, **self.algorithm)
-        for (i, rs), inst, sol in zip(filled, insts, sols):
-            out[i] = self._decisions(rs, inst, sol)
+        for i, (rs, inst, sol) in enumerate(zip(request_sets, insts, sols)):
+            out[i] = self._decisions(rs, inst, sol, cell=i)
         return out
 
-    def _decisions(self, requests, inst, sol) -> list[SliceDecision]:
+    def _decisions(self, requests, inst, sol,
+                   cell: int | None = None) -> list[SliceDecision]:
         report = check_solution(inst, sol, lat_params=self.sdla.lat_params)
         out = []
         for i, r in enumerate(requests):
             alloc = {n: float(sol.alloc[i, k])
-                     for k, n in enumerate(self.pool.names)}
+                     for k, n in enumerate(inst.pool.names)}
             out.append(SliceDecision(
                 request=r,
                 admitted=bool(sol.admitted[i]),
@@ -116,5 +144,6 @@ class SESM:
                 alloc=alloc,
                 expected_latency_s=float(report["latency"][i]),
                 expected_accuracy=float(report["accuracy"][i]),
+                cell=cell,
             ))
         return out

@@ -11,17 +11,30 @@ service rate, and the engine enforces the radio share by throttling ingest
 bitrate — so the end-to-end latency accounting mirrors core.latency. The
 model forward itself runs for real (smoke-scale models on CPU; pod submeshes
 in production).
+
+The module is split control/data:
+
+* :class:`CellRuntime` is the per-cell DATA plane — admitted task runtimes,
+  the pending/retry queue (rejected requests re-offer up to ``max_retries``
+  times before dropping, the ``closed_loop_trace`` semantics), handover
+  warm-start pins, job execution, metrics. It never talks to a solver.
+* :class:`EdgeServingEngine` is the single-cell CONTROL loop: one
+  ``CellRuntime`` + one SESM, ``reslice()`` = gather → solve → apply.
+* The multi-cell control loop lives in
+  :class:`repro.serving.multicell.MultiCellEngine`, which gathers N cell
+  runtimes into ONE coupled ``SESM.solve_batch`` call per re-slice.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
 
 import jax
 import numpy as np
 
-from repro.core import ResourcePool
+from repro.core import ResourcePool, semantics
 from repro.core.latency import LatencyParams, latency as latency_model
 from repro.data.pipeline import FrameStream
 from repro.kernels.resize import ops as resize_ops
@@ -29,7 +42,8 @@ from .admission import SESM, SliceDecision
 from .request import SliceRequest
 from .sdla import SDLA
 
-__all__ = ["EdgeServingEngine", "TaskRuntime"]
+__all__ = ["CellRuntime", "EdgeServingEngine", "TaskRuntime",
+           "pinned_accuracy_at"]
 
 
 @dataclasses.dataclass
@@ -40,42 +54,168 @@ class TaskRuntime:
     latencies: list = dataclasses.field(default_factory=list)
 
 
-class EdgeServingEngine:
-    def __init__(self, pool: ResourcePool, *, lat_params=None,
-                 max_batch: int = 8, solver_backend: str = "numpy"):
+class CellRuntime:
+    """Per-cell serving data plane: tasks, retry queue, execution, metrics.
+
+    Decision application follows the closed-loop trace semantics
+    (``core.scenarios.closed_loop_trace``): a rejected request — new OR
+    previously running (an eviction, surfaced as ``decision.evicted``) — goes
+    back onto the bounded retry queue and re-offers on the next re-slice,
+    until its ``max_retries`` budget is exhausted and it drops. A handed-over
+    task re-arrives with its accuracy bound pinned at the level achieved at
+    its admitted ``z`` (the stream is already encoded — warm start); the pin
+    clears on rejection, since an unserved task has no encoded stream to
+    warm-start from.
+    """
+
+    def __init__(self, pool: ResourcePool, sdla: SDLA, *, max_batch: int = 8,
+                 max_retries: int = 2, cell: int | None = None):
         self.pool = pool
-        self.sdla = SDLA(lat_params or LatencyParams())
-        self.sesm = SESM(pool, self.sdla, backend=solver_backend)
-        self.pending: list[SliceRequest] = []
-        self.tasks: dict[int, TaskRuntime] = {}
+        self.sdla = sdla
+        self.cell = cell
         self.max_batch = max_batch
+        self.max_retries = max_retries
+        self.tasks: dict[int, TaskRuntime] = {}
+        # drop accounting: `drops` is the monotone event count (what loops
+        # should diff); `dropped` is a bounded log of recent drop EVENTS for
+        # inspection — an id may reappear if resubmitted and dropped again
+        self.drops = 0
+        self.dropped: collections.deque[SliceRequest] = \
+            collections.deque(maxlen=256)
+        self._requests: dict[int, SliceRequest] = {}   # originals, unpinned
+        self._queue: list[int] = []                # pending request ids, FIFO
+        self._retries: dict[int, int] = {}         # rejections left
+        self._pinned: dict[int, float] = {}        # handover warm-start bound
+        self._carry: dict[int, TaskRuntime] = {}   # handover runtime carry
         self.frames = FrameStream()
         self._models: dict[str, tuple] = {}
         self.step = 0
 
     # ------------------------------------------------------------- control
+    @property
+    def pending(self) -> tuple[SliceRequest, ...]:
+        """Read-only view of the retry/pending queue (a tuple on purpose:
+        appending to it would silently go nowhere — use :meth:`submit`)."""
+        return tuple(self._requests[rid] for rid in self._queue)
+
     def register_model(self, name: str, cfg, params, infer_fn):
         """infer_fn(params, inputs) → outputs; used for LM-service tasks."""
         self._models[name] = (cfg, params, infer_fn)
 
     def submit(self, request: SliceRequest):
-        self.pending.append(request)
+        rid = request.request_id
+        if rid in self._requests:
+            # a live duplicate would be double-counted by every solve and
+            # corrupt the retry/queue bookkeeping; dropped/departed ids may
+            # be resubmitted (their state was cleaned up)
+            raise ValueError(
+                f"request {rid} is already live in cell {self.cell} "
+                "(running or queued); clone it with a fresh request_id to "
+                "submit a second instance")
+        self._requests[rid] = request
+        self._queue.append(rid)
+        self._retries.setdefault(rid, self.max_retries)
 
-    def reslice(self) -> list[SliceDecision]:
-        """Run SESM over pending + running requests (full re-slice: running
-        tasks may be evicted — paper Section III-C)."""
-        requests = [t.decision.request for t in self.tasks.values()] \
-            + self.pending
-        decisions = self.sesm.slice(requests)
-        self.pending = []
+    def remove(self, request_id: int) -> TaskRuntime | None:
+        """Withdraw a task (departure): no retry, no drop accounting."""
+        rt = self.tasks.pop(request_id, None) \
+            or self._carry.pop(request_id, None)
+        self._requests.pop(request_id, None)
+        self._queue = [r for r in self._queue if r != request_id]
+        self._retries.pop(request_id, None)
+        self._pinned.pop(request_id, None)
+        return rt
+
+    def gather(self) -> list[SliceRequest]:
+        """The cell's current candidate set: running tasks first, then the
+        pending/retry queue, with handover pins applied (idempotent)."""
+        out = []
+        for rid in list(self.tasks) + list(self._queue):
+            req = self._requests[rid]
+            pin = self._pinned.get(rid)
+            out.append(req if pin is None
+                       else dataclasses.replace(req, min_accuracy=pin))
+        return out
+
+    def apply(self, decisions: list[SliceDecision]) -> list[SliceDecision]:
+        """Apply one re-slice round's decisions (for this cell's gather set).
+
+        Admitted tasks keep (or gain) a runtime; rejected requests are NOT
+        discarded — they consume one retry and re-queue, dropping only once
+        the budget is exhausted. A rejection of a task that was RUNNING in
+        this cell right before the re-slice is an eviction and is flagged on
+        the returned decision (exactly once — later rejections of the same
+        task while it is merely queued are plain rejections). Requests
+        submitted after the ``gather()`` that produced ``decisions`` are
+        untouched: they stay queued for the next round, and decisions for
+        requests withdrawn (``remove()``) in the meantime are ignored.
+        """
         prev = self.tasks
-        self.tasks = {}
+        decided = {d.request.request_id for d in decisions}
+        # running tasks / queued requests the decisions do not cover (e.g.
+        # submitted between gather and apply) are carried forward untouched
+        self.tasks = {rid: rt for rid, rt in prev.items()
+                      if rid not in decided}
+        self._queue = [rid for rid in self._queue if rid not in decided]
         for d in decisions:
+            rid = d.request.request_id
+            if rid not in self._requests:
+                # departed (remove()d) between gather and apply: the decision
+                # is stale — do not resurrect or re-queue the task
+                continue
             if d.admitted:
-                rt = prev.get(d.request.request_id) or TaskRuntime(d)
+                rt = self._carry.pop(rid, None) or prev.get(rid) \
+                    or TaskRuntime(d)
                 rt.decision = d
-                self.tasks[d.request.request_id] = rt
+                self.tasks[rid] = rt
+                continue
+            if rid in prev:
+                d.evicted = True
+            parked = prev.get(rid) or self._carry.pop(rid, None)
+            # no served stream to warm-start from: a rejected task re-offers
+            # at its class threshold, not the pinned one
+            self._pinned.pop(rid, None)
+            left = self._retries.get(rid, self.max_retries) - 1
+            self._retries[rid] = left
+            if left >= 0:
+                self._queue.append(rid)
+                if parked is not None:
+                    # the task stays in the system: its job/latency history
+                    # resumes if a later re-slice re-admits it
+                    self._carry[rid] = parked
+            else:
+                self.drops += 1
+                self.dropped.append(self._requests.pop(rid))
+                self._retries.pop(rid, None)
         return decisions
+
+    # ------------------------------------------------------ handover hooks
+    def hand_out(self, request_id: int) -> tuple[SliceRequest, TaskRuntime,
+                                                 int]:
+        """Release a RUNNING task for handover: (request, runtime, retries)."""
+        if request_id not in self.tasks:
+            raise KeyError(
+                f"request {request_id} is not running in cell {self.cell}")
+        rt = self.tasks.pop(request_id)
+        req = self._requests.pop(request_id)
+        retries = self._retries.pop(request_id, self.max_retries)
+        self._pinned.pop(request_id, None)
+        return req, rt, retries
+
+    def hand_in(self, request: SliceRequest, runtime: TaskRuntime,
+                retries: int, pinned_accuracy: float):
+        """Accept a handed-over task: queue it with its warm-start pin; the
+        runtime (job/latency history) resumes if the next re-slice admits."""
+        rid = request.request_id
+        if rid in self._requests:
+            raise ValueError(
+                f"request {rid} is already live in cell {self.cell}; "
+                "cannot hand in a duplicate")
+        self._requests[rid] = request
+        self._queue.append(rid)
+        self._retries[rid] = retries
+        self._pinned[rid] = pinned_accuracy
+        self._carry[rid] = runtime
 
     # --------------------------------------------------------------- data
     def _run_vision_job(self, rt: TaskRuntime, batch: int):
@@ -108,11 +248,13 @@ class EdgeServingEngine:
                     self._run_vision_job(rt, b)
                 compute_s = (time.time() - t0) / b
                 # end-to-end accounting: modeled network + sched latency with
-                # the sliced radio share, plus the measured compute time.
+                # the sliced radio share, plus the measured compute time. The
+                # stream size resolves through the SAME SDLA resolver used at
+                # admission time (an explicit bits_per_job=0.0 stays 0.0).
                 alloc = np.array([rt.decision.alloc[n]
                                   for n in self.pool.names])
                 modeled = latency_model(
-                    self.sdla.lat_params, req.bits_per_job or 0.8,
+                    self.sdla.lat_params, self.sdla.bits_per_job(req),
                     req.jobs_per_sec * req.n_ues, 0.0,  # compute term measured
                     rt.decision.z, alloc)
                 rt.latencies.append(float(modeled) + compute_s)
@@ -123,17 +265,80 @@ class EdgeServingEngine:
     def metrics(self) -> dict:
         out = {}
         for rid, rt in self.tasks.items():
-            lat = np.array(rt.latencies) if rt.latencies else np.array([0.0])
-            out[rid] = {
+            rec = {
                 "app": rt.decision.request.app_class,
                 "z": rt.decision.z,
                 "alloc": rt.decision.alloc,
                 "jobs_done": rt.jobs_done,
-                "p50_latency_s": float(np.median(lat)),
-                "p99_latency_s": float(np.quantile(lat, 0.99)),
                 "deadline_s": rt.decision.request.max_latency_s,
-                "meets_deadline": bool(
-                    np.quantile(lat, 0.5)
-                    <= rt.decision.request.max_latency_s),
             }
+            if rt.latencies:
+                lat = np.array(rt.latencies)
+                rec.update(
+                    p50_latency_s=float(np.median(lat)),
+                    p99_latency_s=float(np.quantile(lat, 0.99)),
+                    meets_deadline=bool(
+                        np.median(lat)
+                        <= rt.decision.request.max_latency_s),
+                    no_data=False,
+                )
+            else:
+                # an idle/starved task has no latency evidence: report that,
+                # never a vacuous 0.0-latency "meets deadline"
+                rec.update(p50_latency_s=None, p99_latency_s=None,
+                           meets_deadline=False, no_data=True)
+            out[rid] = rec
         return out
+
+
+class EdgeServingEngine:
+    """Single-cell control loop: one :class:`CellRuntime` + one SESM."""
+
+    def __init__(self, pool: ResourcePool, *, lat_params=None,
+                 max_batch: int = 8, max_retries: int = 2,
+                 solver_backend: str = "numpy"):
+        self.pool = pool
+        self.sdla = SDLA(lat_params or LatencyParams())
+        self.sesm = SESM(pool, self.sdla, backend=solver_backend)
+        self.runtime = CellRuntime(pool, self.sdla, max_batch=max_batch,
+                                   max_retries=max_retries)
+
+    # thin data-plane delegation — the runtime owns all serving state
+    @property
+    def tasks(self) -> dict[int, TaskRuntime]:
+        return self.runtime.tasks
+
+    @property
+    def pending(self) -> tuple[SliceRequest, ...]:
+        return self.runtime.pending
+
+    @property
+    def dropped(self) -> tuple[SliceRequest, ...]:
+        """Recent drop events (bounded log; diff ``runtime.drops`` counts)."""
+        return tuple(self.runtime.dropped)
+
+    def register_model(self, name: str, cfg, params, infer_fn):
+        self.runtime.register_model(name, cfg, params, infer_fn)
+
+    def submit(self, request: SliceRequest):
+        self.runtime.submit(request)
+
+    def reslice(self) -> list[SliceDecision]:
+        """Run SESM over pending + running requests (full re-slice: running
+        tasks may be evicted — paper Section III-C; rejected requests stay on
+        the bounded retry queue instead of being discarded)."""
+        return self.runtime.apply(self.sesm.slice(self.runtime.gather()))
+
+    def process(self, wall_dt: float = 1.0):
+        self.runtime.process(wall_dt)
+
+    def metrics(self) -> dict:
+        return self.runtime.metrics()
+
+
+def pinned_accuracy_at(request: SliceRequest, z: float) -> float:
+    """The warm-start accuracy bound of a stream already encoded at ``z`` —
+    Eq. (2) then re-derives (at most) that compression in the target cell.
+    (Request-level wrapper over the single-source pin in core.semantics.)"""
+    return semantics.warm_start_accuracy(
+        semantics.APP_INDEX[request.app_class], z)

@@ -1,0 +1,144 @@
+"""Multi-cell serving control loop: joint re-slicing across coupled cells.
+
+The paper's system-wide claim (Section III: joint admission across cells
+sharing transport) lands in the data plane here. A :class:`MultiCellEngine`
+owns N per-cell :class:`~repro.serving.engine.CellRuntime` data planes plus
+an optional :class:`~repro.core.types.CouplingSpec` for the shared
+midhaul/backhaul links, and every :meth:`MultiCellEngine.reslice` gathers ALL
+cells' running + pending requests into ONE coupled
+``SESM.solve_batch(request_sets, coupling=..., pools=...)`` call — one device
+program per re-slice. The SESM's pow2-bucket ``restack`` cache persists
+across ticks, so the closed loop neither re-stacks the padded host buffers
+nor recompiles the device program after the first tick (``sesm.fresh_stacks``
+/ ``sesm.restacks`` expose the hit rate).
+
+Reference semantics: the admitted set per re-slice equals
+``core.baselines.solve_coupled_ref`` on the gathered per-cell instances
+(asserted in tests and the sweep benchmark). Retry and handover behavior
+ports ``core.scenarios.closed_loop_trace``: rejected requests re-offer from a
+bounded retry queue (drop after ``max_retries`` rejections), and
+:meth:`handover` moves a running task between cells with its achieved ``z``
+pinned as a warm-start accuracy bound. Enforcing solver decisions in a live
+loop rather than per-snapshot follows the O-RAN slicing-enforcement
+literature (arXiv:2103.10277, arXiv:2202.06439).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import CouplingSpec, ResourcePool
+from repro.core.latency import LatencyParams
+from .admission import SESM, SliceDecision
+from .engine import CellRuntime, TaskRuntime, pinned_accuracy_at
+from .request import SliceRequest
+from .sdla import SDLA
+
+__all__ = ["MultiCellEngine"]
+
+
+class MultiCellEngine:
+    """N coupled cell runtimes re-sliced jointly through one SESM batch.
+
+    Args:
+      pools: one :class:`ResourcePool` per cell. Capacities/prices may
+        differ; ``levels`` must be identical (one shared allocation grid —
+        the batched sweep engine's stacking contract).
+      coupling: optional shared-link topology; ``incidence`` needs one row
+        per cell. ``None`` re-slices the cells as independent what-ifs
+        (still one device program).
+      max_retries: per-request rejection budget of every cell's retry queue.
+    """
+
+    def __init__(self, pools: list[ResourcePool], *,
+                 coupling: CouplingSpec | None = None, lat_params=None,
+                 max_batch: int = 8, max_retries: int = 2,
+                 solver_backend: str = "numpy"):
+        pools = list(pools)
+        if not pools:
+            raise ValueError("MultiCellEngine needs at least one cell pool")
+        for pool in pools[1:]:
+            if len(pool.levels) != len(pools[0].levels) or not all(
+                    np.array_equal(a, b)
+                    for a, b in zip(pool.levels, pools[0].levels)):
+                raise ValueError(
+                    "all cell pools must share one allocation grid "
+                    "(identical pool.levels); capacities may differ")
+        if coupling is not None and coupling.num_cells != len(pools):
+            raise ValueError(
+                f"coupling.incidence has {coupling.num_cells} rows for "
+                f"{len(pools)} cells")
+        self.pools = pools
+        self.coupling = coupling
+        self.sdla = SDLA(lat_params or LatencyParams())
+        self.sesm = SESM(pools[0], self.sdla, backend=solver_backend)
+        self.cells = [CellRuntime(p, self.sdla, max_batch=max_batch,
+                                  max_retries=max_retries, cell=c)
+                      for c, p in enumerate(pools)]
+        self.handovers = 0
+
+    @property
+    def num_cells(self) -> int:
+        return len(self.cells)
+
+    # ------------------------------------------------------------- control
+    def submit(self, request: SliceRequest, cell: int):
+        rid = request.request_id
+        for c, other in enumerate(self.cells):
+            if rid in other._requests:
+                # one stream must load the shared transport once: a live
+                # cross-cell duplicate would be admitted (and budgeted) twice
+                raise ValueError(
+                    f"request {rid} is already live in cell {c}; use "
+                    "handover() to move it, or clone with a fresh request_id")
+        self.cells[cell].submit(request)
+
+    def remove(self, request_id: int, cell: int) -> TaskRuntime | None:
+        """Withdraw a departed task from a cell (no retry/drop accounting)."""
+        return self.cells[cell].remove(request_id)
+
+    def gather(self) -> list[list[SliceRequest]]:
+        """Every cell's candidate set (running + retry queue, pins applied).
+
+        Idempotent — tests re-gather the same sets to assert the engine's
+        admissions against ``solve_coupled_ref`` on the gathered instances.
+        """
+        return [cell.gather() for cell in self.cells]
+
+    def reslice(self) -> list[list[SliceDecision]]:
+        """One joint re-slice: gather all cells → ONE coupled solve_batch →
+        apply per-cell (evictions flagged, rejected requests re-queued)."""
+        decisions = self.sesm.solve_batch(self.gather(),
+                                          coupling=self.coupling,
+                                          pools=self.pools)
+        return [cell.apply(ds) for cell, ds in zip(self.cells, decisions)]
+
+    def handover(self, request_id: int, src: int, dst: int) -> float:
+        """Move a RUNNING task from cell ``src`` to cell ``dst``.
+
+        The stream is already encoded at the task's admitted ``z``, so it
+        re-arrives in ``dst`` with its accuracy bound pinned to the level
+        achieved at that ``z`` (warm start — Eq. (2) re-derives at most the
+        same compression instead of renegotiating the stream; the
+        ``closed_loop_trace`` handover semantics). The task's runtime (job
+        and latency history) carries over and resumes if the next re-slice
+        admits it; its remaining retry budget travels with it. Returns the
+        pinned accuracy bound.
+        """
+        if src == dst:
+            raise ValueError("handover requires distinct src and dst cells")
+        req, rt, retries = self.cells[src].hand_out(request_id)
+        pin = pinned_accuracy_at(req, rt.decision.z)
+        self.cells[dst].hand_in(req, rt, retries, pin)
+        self.handovers += 1
+        return pin
+
+    # --------------------------------------------------------------- data
+    def process(self, wall_dt: float = 1.0):
+        """One engine tick: every cell runs its admitted tasks' jobs."""
+        for cell in self.cells:
+            cell.process(wall_dt)
+
+    def metrics(self) -> dict[int, dict]:
+        """Per-cell metrics keyed by cell index (see CellRuntime.metrics)."""
+        return {c: cell.metrics() for c, cell in enumerate(self.cells)}

@@ -31,27 +31,49 @@ class SDLA:
         """Step 7: refine the latency function from observed channel state."""
         self.latency_scale = scale
 
+    def bits_per_job(self, request: SliceRequest) -> float:
+        """Resolve the per-job stream size (Mbit) of a request.
+
+        Single resolver shared by admission (:meth:`task_set`) and the serving
+        data plane — an explicit ``bits_per_job`` (including ``0.0``) is
+        honored verbatim; only ``None`` falls back to the service-aware
+        default, so the latency a task is served under is the latency it was
+        admitted under.
+        """
+        if request.bits_per_job is not None:
+            return float(request.bits_per_job)
+        service = semantics.APPS[semantics.APP_INDEX[request.app_class]].service
+        return float(_DEFAULT_BITS.get(service, 0.8))
+
+    def gpu_time_per_job(self, request: SliceRequest) -> float:
+        """Resolve per-job reference-accelerator seconds (same contract as
+        :meth:`bits_per_job`: explicit values win, ``None`` → service default)."""
+        if request.gpu_time_per_job is not None:
+            return float(request.gpu_time_per_job)
+        service = semantics.APPS[semantics.APP_INDEX[request.app_class]].service
+        return float(_DEFAULT_GPU_TIME.get(service, 0.06))
+
     def task_set(self, requests: list[SliceRequest]) -> TaskSet:
         apps, accs, lats, bits, rates, gpu_t, ues = [], [], [], [], [], [], []
         for r in requests:
             app_idx = semantics.APP_INDEX[r.app_class]
-            service = semantics.APPS[app_idx].service
             apps.append(app_idx)
             accs.append(r.min_accuracy)
             lats.append(r.max_latency_s)
-            bits.append(r.bits_per_job
-                        if r.bits_per_job is not None
-                        else _DEFAULT_BITS.get(service, 0.8))
+            bits.append(self.bits_per_job(r))
             rates.append(r.jobs_per_sec * r.n_ues)
-            gpu_t.append(r.gpu_time_per_job
-                         if r.gpu_time_per_job is not None
-                         else _DEFAULT_GPU_TIME.get(service, 0.06))
+            gpu_t.append(self.gpu_time_per_job(r))
             ues.append(r.n_ues)
+        # explicit dtypes so an EMPTY request list still builds a well-typed
+        # (0,)-task instance (zero-task cells ride multi-cell batches)
         return TaskSet(
-            app_idx=np.array(apps), min_accuracy=np.array(accs),
-            max_latency=np.array(lats) / self.latency_scale,
-            bits_per_job=np.array(bits), jobs_per_sec=np.array(rates),
-            gpu_time_per_job=np.array(gpu_t), n_ues=np.array(ues),
+            app_idx=np.array(apps, np.int64),
+            min_accuracy=np.array(accs, np.float64),
+            max_latency=np.array(lats, np.float64) / self.latency_scale,
+            bits_per_job=np.array(bits, np.float64),
+            jobs_per_sec=np.array(rates, np.float64),
+            gpu_time_per_job=np.array(gpu_t, np.float64),
+            n_ues=np.array(ues, np.int64),
         )
 
     def build_instance(self, requests: list[SliceRequest], pool: ResourcePool):

@@ -4,8 +4,8 @@ import dataclasses
 import numpy as np
 import pytest
 
-from repro.core import CouplingSpec, scenarios, solve_coupled_ref
-from repro.serving import EdgeServingEngine, SliceRequest
+from repro.core import CouplingSpec, scenarios, semantics, solve_coupled_ref
+from repro.serving import SDLA, EdgeServingEngine, SliceRequest
 from repro.serving.admission import SESM
 
 
@@ -122,3 +122,191 @@ def test_process_and_metrics():
     m = list(eng.metrics().values())[0]
     assert m["jobs_done"] >= 3
     assert m["p50_latency_s"] > 0
+    assert m["no_data"] is False
+
+
+# --- serving-layer accounting fixes -----------------------------------------
+
+def test_explicit_zero_bits_per_job_honored():
+    """bits_per_job=0.0 is an explicit value, not 'unset': both the admission
+    path and the data plane resolve it through the one SDLA resolver."""
+    sdla = SDLA()
+    r_default = _req("coco_bags")
+    r_zero = dataclasses.replace(r_default, bits_per_job=0.0)
+    assert sdla.bits_per_job(r_zero) == 0.0
+    assert sdla.bits_per_job(r_default) == \
+        semantics.SERVICE_BITS_PER_JOB["detection"]
+    ts = sdla.task_set([r_zero, r_default])
+    assert ts.bits_per_job[0] == 0.0
+    assert ts.bits_per_job[1] == sdla.bits_per_job(r_default)
+    # gpu_time shares the resolver contract
+    r_zero_gpu = dataclasses.replace(r_default, gpu_time_per_job=0.0)
+    assert sdla.gpu_time_per_job(r_zero_gpu) == 0.0
+
+
+def test_process_routes_bits_through_sdla_resolver(monkeypatch):
+    """The engine's modeled latency uses the SAME stream size the task was
+    admitted under (the SDLA resolver), not an ad-hoc `or 0.8` default."""
+    eng = EdgeServingEngine(scenarios.colosseum_pool(), max_batch=4)
+    eng.submit(dataclasses.replace(_req("cityscapes_flat", fps=2.0),
+                                   bits_per_job=0.0))
+    (d,) = eng.reslice()
+    assert d.admitted
+    seen = []
+    orig = eng.sdla.bits_per_job
+    monkeypatch.setattr(eng.sdla, "bits_per_job",
+                        lambda req: (seen.append(orig(req)), orig(req))[1])
+    eng.process(wall_dt=1.0)
+    assert seen and all(b == 0.0 for b in seen)
+
+
+def test_idle_task_metrics_report_no_data():
+    """A task with no completed jobs must not report a vacuous 0.0-latency
+    deadline pass."""
+    eng = EdgeServingEngine(scenarios.colosseum_pool())
+    eng.submit(_req("coco_bags"))
+    (d,) = eng.reslice()
+    assert d.admitted
+    m = eng.metrics()[d.request.request_id]
+    assert m["jobs_done"] == 0
+    assert m["p50_latency_s"] is None and m["p99_latency_s"] is None
+    assert m["meets_deadline"] is False
+    assert m["no_data"] is True
+
+
+def test_rejected_requests_retry_then_drop():
+    """reslice() keeps rejected requests on the bounded retry queue (the
+    closed_loop_trace semantics) instead of silently discarding them."""
+    eng = EdgeServingEngine(scenarios.colosseum_pool(), max_retries=2)
+    for _ in range(30):
+        eng.submit(_req("coco_person", acc=0.2, fps=10.0))
+    ds = eng.reslice()
+    rejected = {d.request.request_id for d in ds if not d.admitted}
+    assert rejected and not any(d.evicted for d in ds)
+    assert {r.request_id for r in eng.pending} == rejected
+    # identical candidate set re-offers and re-rejects until the budget runs
+    # out: max_retries=2 → offered on 3 re-slices total, then dropped
+    eng.reslice()
+    assert {r.request_id for r in eng.pending} == rejected
+    ds3 = eng.reslice()
+    assert rejected <= {d.request.request_id for d in ds3}
+    assert not eng.pending
+    assert {r.request_id for r in eng.dropped} == rejected
+    offered4 = {d.request.request_id for d in eng.reslice()}
+    assert offered4.isdisjoint(rejected)
+
+
+def test_eviction_parks_runtime_history():
+    """An evicted task that stays in the system (retry budget left) keeps its
+    job/latency history and resumes it on re-admission."""
+    eng = EdgeServingEngine(scenarios.colosseum_pool(), max_batch=4,
+                            max_retries=2)
+    eng.submit(_req("cityscapes_flat", fps=3.0))
+    (d0,) = eng.reslice()
+    assert d0.admitted
+    eng.process(wall_dt=1.0)
+    rid = d0.request.request_id
+    jobs = eng.tasks[rid].jobs_done
+    assert jobs > 0
+    # synthetic rejection through the runtime state machine (a transient
+    # eviction), then a real re-slice re-admits the lone feasible task
+    (d1,) = eng.runtime.apply([dataclasses.replace(d0, admitted=False)])
+    assert d1.evicted and rid in {r.request_id for r in eng.pending}
+    # a SECOND rejection while merely queued is a plain rejection — the one
+    # eviction event is not re-counted
+    (d1b,) = eng.runtime.apply([dataclasses.replace(d0, admitted=False,
+                                                    evicted=False)])
+    assert not d1b.evicted
+    (d2,) = eng.reslice()
+    assert d2.admitted
+    assert eng.tasks[rid].jobs_done == jobs
+
+
+def test_apply_ignores_decisions_for_withdrawn_requests():
+    """A departure (remove) landing between gather() and apply() must not
+    resurrect the withdrawn task or queue a dangling id."""
+    eng = EdgeServingEngine(scenarios.colosseum_pool())
+    a, b = _req("coco_bags"), _req("cityscapes_flat")
+    eng.submit(a)
+    eng.submit(b)
+    decisions = eng.sesm.slice(eng.runtime.gather())
+    eng.runtime.remove(a.request_id)         # departs mid-re-slice
+    eng.runtime.apply(decisions)
+    live = {r.request_id for r in eng.pending} | set(eng.tasks)
+    assert a.request_id not in live and b.request_id in live
+    eng.reslice()                            # no KeyError on the next round
+
+
+def test_submit_rejects_live_duplicate():
+    """A duplicate request_id would be double-counted by every solve."""
+    eng = EdgeServingEngine(scenarios.colosseum_pool())
+    r = _req("coco_bags")
+    eng.submit(r)
+    with pytest.raises(ValueError, match="already live"):
+        eng.submit(r)
+    eng.reslice()
+    with pytest.raises(ValueError, match="already live"):
+        eng.submit(dataclasses.replace(r, min_accuracy=0.2))  # same id
+    # a dropped id may be resubmitted
+    eng.runtime.remove(r.request_id)
+    eng.submit(r)
+
+
+def test_pending_is_a_read_only_view():
+    """pending is a tuple: appending to it must fail loudly, not silently
+    drop the request (use submit())."""
+    eng = EdgeServingEngine(scenarios.colosseum_pool())
+    eng.submit(_req("coco_bags"))
+    with pytest.raises(AttributeError):
+        eng.pending.append(_req("coco_person"))
+
+
+def test_drop_accounting_is_a_bounded_event_log():
+    """`drops` counts events monotonically; `dropped` is a bounded log."""
+    eng = EdgeServingEngine(scenarios.colosseum_pool(), max_retries=0)
+    rt = eng.runtime
+    assert rt.dropped.maxlen is not None
+    r = _req("coco_bags", acc=0.45, fps=12.0)   # infeasible: always rejected
+    eng.submit(r)
+    eng.reslice()
+    assert rt.drops == 1 and [d.request_id for d in eng.dropped] == \
+        [r.request_id]
+    eng.submit(r)                               # resubmit after drop is legal
+    eng.reslice()
+    # two drop EVENTS for the same id — a log, not a live-state set
+    assert rt.drops == 2
+    assert [d.request_id for d in eng.dropped] == [r.request_id] * 2
+
+
+def test_apply_leaves_uncovered_requests_queued():
+    """Requests submitted between gather() and apply() are not silently
+    discarded: they stay queued and get decided on the next round."""
+    eng = EdgeServingEngine(scenarios.colosseum_pool())
+    a = _req("coco_bags")
+    eng.submit(a)
+    decisions = eng.sesm.slice(eng.runtime.gather())
+    b = _req("cityscapes_flat")
+    eng.submit(b)                      # arrives after the gather
+    eng.runtime.apply(decisions)
+    assert b.request_id in {r.request_id for r in eng.pending}
+    ds = eng.reslice()
+    assert any(d.request.request_id == b.request_id for d in ds)
+
+
+def test_eviction_surfaced_and_requeued():
+    """A previously-RUNNING task rejected by a re-slice is an eviction: it is
+    flagged on the decision and goes to the retry queue, not the void."""
+    eng = EdgeServingEngine(scenarios.colosseum_pool(), max_retries=1)
+    heavy = _req("coco_bags", acc=0.40, fps=8.0)
+    eng.submit(heavy)
+    (d0,) = eng.reslice()
+    assert d0.admitted
+    for _ in range(20):
+        eng.submit(_req("cityscapes_flat", acc=0.2, fps=2.0))
+    ds = eng.reslice()
+    dh = next(d for d in ds if d.request.request_id == heavy.request_id)
+    assert not dh.admitted and dh.evicted
+    assert heavy.request_id in {r.request_id for r in eng.pending}
+    # fresh rejections of never-admitted requests are NOT evictions
+    assert all(not d.evicted for d in ds
+               if d.request.request_id != heavy.request_id)
