@@ -9,9 +9,13 @@ summary (``$GITHUB_STEP_SUMMARY``).
 
 Only rows present in BOTH files with a positive per-instance time are gated —
 new benchmarks land ungated until the baseline is refreshed, and metric-only
-rows (e.g. ``sweep/acceptance``) are reported but never gated. Run noise on
-shared CI runners is absorbed by the generous tolerance plus the per-instance
-normalization (per_instance_us), which is a median over iterations.
+rows (e.g. ``sweep/acceptance``) are reported but never gated. Rows flagged
+``interpret: true`` (Pallas kernels timed under the interpreter on non-TPU
+backends — they measure the interpreter, not the kernel) are reported with
+status ``interp`` but excluded from the gate: interpreter timing noise says
+nothing about the code under test. Run noise on shared CI runners is absorbed
+by the generous tolerance plus the per-instance normalization
+(per_instance_us), which is a median over iterations.
 
 Refreshing the baseline (after an intentional perf change, on a quiet
 machine):
@@ -56,6 +60,12 @@ def compare(fresh: dict[str, dict], base: dict[str, dict],
                 "removed" if f_rec is None else "untimed"
             deltas.append(dict(name=name, base=b_us, fresh=f_us,
                                delta=None, status=status))
+            continue
+        if (f_rec or {}).get("interpret") or (b_rec or {}).get("interpret"):
+            # interpret-mode Pallas rows time the interpreter, not the
+            # kernel: report the delta, never gate on it
+            deltas.append(dict(name=name, base=b_us, fresh=f_us,
+                               delta=f_us / b_us - 1.0, status="interp"))
             continue
         ratio = f_us / b_us - 1.0
         gated = ratio > tolerance

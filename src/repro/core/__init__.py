@@ -2,21 +2,24 @@
 
 from .types import (CouplingSpec, ProblemInstance, ResourcePool, Solution,
                     StackedInstances, TaskSet, make_allocation_grid)
-from .sfesp import (build_instance, check_solution, default_z_grid,
-                    merge_coupling, next_pow2, objective_value, restack,
-                    stack_instances, task_link_load)
-from .greedy import (primal_gradient, solve, solve_greedy, solve_greedy_batch,
-                     solve_greedy_jax, solve_greedy_many)
+from .sfesp import (DeviceStack, build_instance, check_solution,
+                    default_z_grid, device_stack, empty_device_stack,
+                    lexicographic_cost, merge_coupling, next_pow2,
+                    objective_value, restack, stack_instances, task_link_load)
+from .greedy import (primal_gradient, solve, solve_device_batch, solve_greedy,
+                     solve_greedy_batch, solve_greedy_jax, solve_greedy_many)
 from .exact import solve_exact
 from .baselines import ALGORITHMS, run_algorithm, solve_coupled_ref
 from . import latency, scenarios, semantics
 
 __all__ = [
-    "CouplingSpec", "ProblemInstance", "ResourcePool", "Solution",
-    "StackedInstances", "TaskSet", "make_allocation_grid", "build_instance",
-    "check_solution", "default_z_grid", "merge_coupling", "next_pow2",
+    "CouplingSpec", "DeviceStack", "ProblemInstance", "ResourcePool",
+    "Solution", "StackedInstances", "TaskSet", "make_allocation_grid",
+    "build_instance", "check_solution", "default_z_grid", "device_stack",
+    "empty_device_stack", "lexicographic_cost", "merge_coupling", "next_pow2",
     "objective_value", "restack", "stack_instances", "task_link_load",
-    "primal_gradient", "solve", "solve_greedy", "solve_greedy_batch",
-    "solve_greedy_jax", "solve_greedy_many", "solve_exact", "solve_coupled_ref",
+    "primal_gradient", "solve", "solve_device_batch", "solve_greedy",
+    "solve_greedy_batch", "solve_greedy_jax", "solve_greedy_many",
+    "solve_exact", "solve_coupled_ref",
     "ALGORITHMS", "run_algorithm", "latency", "scenarios", "semantics",
 ]

@@ -25,26 +25,15 @@ import jax
 import jax.numpy as jnp
 
 from . import semantics
-from .sfesp import next_pow2, objective_value, stack_instances
-from .types import CouplingSpec, ProblemInstance, Solution, StackedInstances
+from .sfesp import (DeviceStack, device_stack, lexicographic_cost, next_pow2,
+                    objective_value, stack_instances)
+from .types import ProblemInstance, Solution, StackedInstances
 
 __all__ = ["primal_gradient", "solve_greedy", "solve_greedy_jax",
            "solve_greedy_batch", "solve_greedy_many", "solve",
-           "lexicographic_cost"]
+           "solve_device_batch", "lexicographic_cost"]
 
 _EPS_DEN = 1e-9
-
-
-def lexicographic_cost(grid, xp=np):
-    """MinRes-* allocation preference: minimize the LAST resource type first
-    (compute), then the previous, ... matching the paper's observed behaviour
-    (Fig. 7(e): MinRes-SEM requests 8 RBG + 1 GPU where SEM-O-RAN picks
-    6 RBG + 5 GPU — compute is treated as the precious resource and radio
-    compensates). Encoded as Σ_k s_k · W^k with a large base W."""
-    grid = xp.asarray(grid)
-    m = grid.shape[-1]
-    weights = xp.asarray([float(1000 ** k) for k in range(m)])
-    return (grid * weights).sum(axis=-1)
 
 
 # ---------------------------------------------------------------------------
@@ -308,10 +297,9 @@ def _flex_round_fn(inner: str, lat_bits, grid, price, cap, A):
     return round_fn
 
 
-@functools.partial(jax.jit, static_argnames=("flexible", "inner"))
-def _greedy_jax_batch(lat_ok, grid, price, cap, alive0, cost,
-                      flexible: bool = True, inner: str = "jnp"):
-    """Solve B padded instances in ONE device program.
+def _batch_solve(lat_ok, grid, price, cap, alive0, cost,
+                 flexible: bool = True, inner: str = "jnp"):
+    """Traced core shared by the plain and fused uncoupled jit entries.
 
     ``lat_ok`` (B, Tmax, A), ``price``/``cap`` (B, m), ``alive0`` (B, Tmax);
     ``grid``/``cost`` are shared (A, m)/(A,). The data-dependent while-loop of
@@ -381,11 +369,18 @@ def _greedy_jax_batch(lat_ok, grid, price, cap, alive0, cost,
 
 
 @functools.partial(jax.jit, static_argnames=("flexible", "inner"))
-def _greedy_jax_batch_coupled(lat_ok, grid, price, cap, alive0, cost,
-                              load, link_cap, incidence, group,
-                              flexible: bool = True, inner: str = "jnp"):
-    """Coupled variant of :func:`_greedy_jax_batch`: cells sharing backhaul
-    links admit JOINTLY.
+def _greedy_jax_batch(lat_ok, grid, price, cap, alive0, cost,
+                      flexible: bool = True, inner: str = "jnp"):
+    """Solve B padded instances in ONE device program (see _batch_solve)."""
+    return _batch_solve(lat_ok, grid, price, cap, alive0, cost,
+                        flexible, inner)
+
+
+def _batch_solve_coupled(lat_ok, grid, price, cap, alive0, cost,
+                         load, link_cap, incidence, group,
+                         flexible: bool = True, inner: str = "jnp"):
+    """Coupled variant of :func:`_batch_solve`: cells sharing backhaul
+    links admit JOINTLY. Also returns the per-link admitted load ``used``.
 
     Extra inputs: ``load`` (B, Tmax) per-task shared-link load, ``link_cap``
     (L,), ``incidence`` (B, L) bool and ``group`` (B,) int — the connected
@@ -456,8 +451,104 @@ def _greedy_jax_batch_coupled(lat_ok, grid, price, cap, alive0, cost,
     init = (jnp.zeros((B, tmax), bool), jnp.full((B, tmax), -1, jnp.int32),
             jnp.zeros((B, m), grid.dtype), alive0,
             jnp.zeros(link_cap.shape, grid.dtype))
-    admitted, alloc_idx, occupied, _, _ = jax.lax.while_loop(cond, body, init)
+    admitted, alloc_idx, occupied, _, used = \
+        jax.lax.while_loop(cond, body, init)
+    return admitted, alloc_idx, occupied, used
+
+
+@functools.partial(jax.jit, static_argnames=("flexible", "inner"))
+def _greedy_jax_batch_coupled(lat_ok, grid, price, cap, alive0, cost,
+                              load, link_cap, incidence, group,
+                              flexible: bool = True, inner: str = "jnp"):
+    """Coupled batch solve in ONE device program (see _batch_solve_coupled)."""
+    admitted, alloc_idx, occupied, _ = _batch_solve_coupled(
+        lat_ok, grid, price, cap, alive0, cost, load, link_cap, incidence,
+        group, flexible, inner)
     return admitted, alloc_idx, occupied
+
+
+# ---------------------------------------------------------------------------
+# Fused serving entry points: device-resident inputs, packed decision output
+# ---------------------------------------------------------------------------
+
+def _extract_packed(admitted, alloc_idx, occupied, cap):
+    """Fuse decision extraction into the device program.
+
+    Instead of shipping the full (B, Tmax) solution tables to the host and
+    unpacking per task in Python, pack each batch row's decision into ONE
+    compact int32 row: ``[admitted bitmask (ceil(T/32) words) | alloc_idx]``,
+    plus the (B, m) residual capacities. The serving loop reads back a single
+    small buffer per tick.
+    """
+    bits = _pack_bits(admitted)                           # (B, WT) u32
+    packed = jnp.concatenate(
+        [bits.astype(jnp.int32), alloc_idx.astype(jnp.int32)], axis=1)
+    return packed, cap - occupied
+
+
+@functools.partial(jax.jit, static_argnames=("flexible", "inner"))
+def _serve_batch(lat_ok, grid, price, cap, alive0, cost,
+                 flexible: bool = True, inner: str = "jnp"):
+    """Uncoupled serving fast path: solve + packed extraction, one program.
+
+    Inputs are expected to be ALREADY device-resident (a
+    :class:`~repro.core.sfesp.DeviceStack`): nothing is re-uploaded per call.
+    Returns ``(packed (B, WT+Tmax) i32, residual (B, m))``.
+    """
+    admitted, alloc_idx, occupied = _batch_solve(
+        lat_ok, grid, price, cap, alive0, cost, flexible, inner)
+    return _extract_packed(admitted, alloc_idx, occupied, cap)
+
+
+@functools.partial(jax.jit, static_argnames=("flexible", "inner"))
+def _serve_batch_coupled(lat_ok, grid, price, cap, alive0, cost,
+                         load, link_cap, incidence, group,
+                         flexible: bool = True, inner: str = "jnp"):
+    """Coupled serving fast path; additionally returns per-link loads."""
+    admitted, alloc_idx, occupied, used = _batch_solve_coupled(
+        lat_ok, grid, price, cap, alive0, cost, load, link_cap, incidence,
+        group, flexible, inner)
+    packed, residual = _extract_packed(admitted, alloc_idx, occupied, cap)
+    return packed, residual, used
+
+
+def solve_device_batch(dev: DeviceStack, *, flexible: bool = True,
+                       inner: str = "jnp") -> dict:
+    """Solve a device-resident stacked batch via the fused entry points.
+
+    The upload-free dispatch of the serving fast path (and of the delta
+    restack tests): all inputs live in ``dev``'s jax arrays, the device
+    program fuses the admission loop with decision extraction, and the host
+    reads back one compact packed buffer. Returns a dict with ``admitted``
+    (B, Tmax) bool, ``alloc_idx`` (B, Tmax) int (-1 where not admitted, as a
+    mask-consumer convention: only ``admitted`` rows are meaningful),
+    ``residual`` (B, m) remaining capacity, and ``link_used`` (L,) admitted
+    shared-link load (zeros-length when uncoupled). Decisions are identical
+    to :func:`solve_greedy_batch` on the equivalently stacked host batch.
+    """
+    if dev.coupled:
+        packed, residual, used = _serve_batch_coupled(
+            dev.lat_ok, dev.grid, dev.price, dev.capacity, dev.alive0,
+            dev.cost, dev.link_load, dev.link_cap, dev.incidence, dev.group,
+            flexible=flexible, inner=inner)
+    else:
+        packed, residual = _serve_batch(
+            dev.lat_ok, dev.grid, dev.price, dev.capacity, dev.alive0,
+            dev.cost, flexible=flexible, inner=inner)
+        used = np.zeros(0)
+    B = dev.batch_size                   # drop inert pad_batch_to rows
+    packed = np.asarray(packed)[:B]
+    tmax = dev.max_tasks
+    wt = -(-tmax // 32)
+    bits = packed[:, :wt].astype(np.uint32)
+    idx = np.arange(tmax)
+    admitted = (bits[:, idx // 32] >> (idx % 32).astype(np.uint32)) & 1 > 0
+    return {
+        "admitted": admitted,
+        "alloc_idx": packed[:, wt:].astype(np.int64),
+        "residual": np.asarray(residual)[:B],
+        "link_used": np.asarray(used),
+    }
 
 
 def solve_greedy_jax(inst: ProblemInstance, *, semantic: bool = True,
@@ -506,53 +597,25 @@ def solve_greedy_batch(insts, *, semantic: bool = True, flexible: bool = True,
     """
     stacked = insts if isinstance(insts, StackedInstances) \
         else stack_instances(insts)
-    coupling = stacked.coupling
-    coupled = coupling is not None and bool(coupling.incidence.any())
     if semantic:
         lat, z_idx = stacked.lat, stacked.z_star_idx
         z_star = stacked.z_star
     else:
         lat, z_idx = stacked.lat_agnostic, stacked.z_star_idx_agnostic
         z_star = stacked.z_star_agnostic
-    lat_ok = lat <= stacked.max_latency[:, :, None]       # padded rows: False
-    alive0 = (z_idx >= 0) & lat_ok.any(axis=2) & stacked.task_mask
-    cost = lexicographic_cost(stacked.grid)
     B = stacked.batch_size
-    price_d, cap_d = stacked.price, stacked.capacity
-    load_d = stacked.link_load if semantic else stacked.link_load_agnostic
-    inc_d = coupling.incidence if coupled else None
-    if pad_batch_to is not None and pad_batch_to > B:
-        pad = pad_batch_to - B
-        m = stacked.m
-        lat_ok = np.concatenate(
-            [lat_ok, np.zeros((pad,) + lat_ok.shape[1:], bool)])
-        alive0 = np.concatenate(
-            [alive0, np.zeros((pad, alive0.shape[1]), bool)])
-        # unit capacity keeps the in-kernel gradient NaN-free; the padded
-        # instances start with no alive candidates, so they never admit
-        price_d = np.concatenate([price_d, np.zeros((pad, m))])
-        cap_d = np.concatenate([cap_d, np.ones((pad, m))])
-        if coupled:
-            # link-free padded cells: singleton groups that never admit
-            load_d = np.concatenate(
-                [load_d, np.zeros((pad, load_d.shape[1]))])
-            inc_d = np.concatenate(
-                [inc_d, np.zeros((pad, inc_d.shape[1]), bool)])
-    if coupled:
-        group = CouplingSpec(coupling.link_capacity, inc_d).groups()
+    # device-resident half, memoized on the batch: repeated solves of the
+    # same stacked batch (sweep reruns, what-if studies) re-upload nothing
+    dev = device_stack(stacked, semantic=semantic, pad_batch_to=pad_batch_to)
+    if dev.coupled:
         admitted, alloc_idx, _ = _greedy_jax_batch_coupled(
-            jnp.asarray(lat_ok), jnp.asarray(stacked.grid),
-            jnp.asarray(price_d), jnp.asarray(cap_d),
-            jnp.asarray(alive0), jnp.asarray(cost),
-            jnp.asarray(load_d), jnp.asarray(coupling.link_capacity),
-            jnp.asarray(inc_d), jnp.asarray(group),
+            dev.lat_ok, dev.grid, dev.price, dev.capacity, dev.alive0,
+            dev.cost, dev.link_load, dev.link_cap, dev.incidence, dev.group,
             flexible=flexible, inner=inner)
     else:
         admitted, alloc_idx, _ = _greedy_jax_batch(
-            jnp.asarray(lat_ok), jnp.asarray(stacked.grid),
-            jnp.asarray(price_d), jnp.asarray(cap_d),
-            jnp.asarray(alive0), jnp.asarray(cost), flexible=flexible,
-            inner=inner)
+            dev.lat_ok, dev.grid, dev.price, dev.capacity, dev.alive0,
+            dev.cost, flexible=flexible, inner=inner)
     admitted = np.asarray(admitted)[:B]
     alloc_idx = np.asarray(alloc_idx, np.int64)[:B]
 

@@ -14,8 +14,13 @@ from typing import Sequence
 
 import numpy as np
 
-from repro.core import (CouplingSpec, ResourcePool, check_solution, next_pow2,
-                        restack, solve, solve_greedy_batch, stack_instances)
+from repro.core import (CouplingSpec, ResourcePool, check_solution,
+                        default_z_grid, make_allocation_grid, next_pow2,
+                        restack, semantics, solve, solve_greedy_batch,
+                        stack_instances)
+from repro.core import latency as lat_mod
+from repro.core.greedy import solve_device_batch
+from repro.core.sfesp import DeviceStack, empty_device_stack
 from .request import SliceRequest
 from .sdla import SDLA
 
@@ -37,6 +42,48 @@ class SliceDecision:
     evicted: bool = False
 
 
+@dataclasses.dataclass
+class _ServeSession:
+    """Device-resident serving state persisted across re-slice ticks.
+
+    One per (batch size, Tmax bucket, algorithm, latency-scale epoch): the
+    :class:`~repro.core.sfesp.DeviceStack` holds the solver inputs on device,
+    the host mirrors hold the per-slot scalars the decision unpack needs
+    (compression, app class, stream rate), and ``pending`` accumulates dirty
+    slots until a live solve consumes them — deltas reported on a tick whose
+    solve is skipped (transiently all-empty batch) must survive to the next.
+    """
+
+    dev: DeviceStack
+    grid: np.ndarray                 # host copy, for alloc unpack
+    z_grid: np.ndarray
+    names: list[tuple[str, ...]]     # per-cell resource names
+    pools_ref: object                # identity guards: the engine passes the
+    coupling_ref: object             # same objects every tick
+    pool_state: np.ndarray           # (B, 2m) price|capacity VALUE snapshot —
+    # ResourcePool is frozen but its arrays are not; an in-place capacity
+    # edit must invalidate the session, not silently solve stale pools
+    scale: float
+    semantic: bool
+    flexible: bool
+    # host mirrors, (B, Tmax) each
+    z_star: np.ndarray
+    has_z: np.ndarray
+    app_idx: np.ndarray
+    bits: np.ndarray
+    rate: np.ndarray
+    gpu_t: np.ndarray
+    pending: set[tuple[int, int]]
+
+    @property
+    def batch_size(self) -> int:
+        return self.z_star.shape[0]
+
+    @property
+    def max_tasks(self) -> int:
+        return self.z_star.shape[1]
+
+
 class SESM:
     def __init__(self, pool: ResourcePool, sdla: SDLA | None = None,
                  backend: str = "numpy", inner: str = "jnp"):
@@ -48,11 +95,17 @@ class SESM:
         # padded stacking buffers reused across solve_batch calls (the
         # closed-loop re-slice case: only tasks/capacities change per call)
         self._batch_cache = None
+        # device-resident serving session reused across solve_slots ticks
+        self._serve_session: _ServeSession | None = None
         # stacking-cache telemetry: fresh_stacks counts (re)allocations of the
         # padded buffers, restacks counts in-place refills — a healthy closed
-        # loop shows fresh_stacks == 1 after the first tick (zero cache misses)
+        # loop shows fresh_stacks == 1 after the first tick (zero cache
+        # misses). On the fast path a "refill" is a delta sync; delta_rows
+        # counts the task rows actually recomputed + scattered (zero per
+        # steady-state tick).
         self.fresh_stacks = 0
         self.restacks = 0
+        self.delta_rows = 0
 
     def slice(self, requests: list[SliceRequest]) -> list[SliceDecision]:
         if not requests:
@@ -128,6 +181,201 @@ class SESM:
         sols = solve_greedy_batch(stacked, **self.algorithm)
         for i, (rs, inst, sol) in enumerate(zip(request_sets, insts, sols)):
             out[i] = self._decisions(rs, inst, sol, cell=i)
+        return out
+
+    # ------------------------------------------------- delta fast path
+    def solve_slots(self, slot_rows: list[list[SliceRequest | None]],
+                    dirty: list[list[int]],
+                    coupling: CouplingSpec | None = None,
+                    pools: Sequence[ResourcePool] | None = None
+                    ) -> list[list[SliceDecision]]:
+        """Device-resident re-slice: solve the slotted candidate sets,
+        recomputing and re-uploading ONLY the dirty rows.
+
+        The fast-path twin of :meth:`solve_batch` for a closed serving loop:
+        ``slot_rows[b]`` is cell ``b``'s candidate set in stable slot order
+        (``None`` = cleared row; see ``CellRuntime.sync_slots``) and
+        ``dirty[b]`` the slots whose content changed since the previous call.
+        Invariant tables (grid, lexicographic cost, prices, capacities,
+        coupling topology) upload once per session; per-tick work is one
+        bucketed scatter of the dirty rows plus ONE fused device program that
+        returns the packed decisions (admitted bitmask, s*, residual
+        capacities, link loads) in a single small buffer. Decisions per live
+        slot are identical to :meth:`solve_batch` on the compacted request
+        sets (cleared rows are never feasible and cannot shift tie-breaks).
+
+        The session rebuilds (a fresh stack) when the Tmax bucket overflows,
+        the batch size / algorithm / coupling / pools change, or the SDLA
+        latency scale moves (every cached row depends on it); ``pools`` and
+        ``coupling`` are identity-compared — pass the same objects per tick,
+        as :class:`~repro.serving.multicell.MultiCellEngine` does.
+        """
+        B = len(slot_rows)
+        if coupling is not None and coupling.num_cells != B:
+            raise ValueError(
+                f"coupling.incidence has {coupling.num_cells} rows for "
+                f"{B} slot sets")
+        if pools is not None and len(pools) != B:
+            raise ValueError(
+                f"got {len(pools)} pools for {B} slot sets")
+        out: list[list[SliceDecision]] = [[] for _ in range(B)]
+        live = any(r is not None for rows in slot_rows for r in rows)
+        tneed = max([len(rows) for rows in slot_rows] + [1])
+        scale = self.sdla.latency_scale
+        semantic = bool(self.algorithm["semantic"])
+        flexible = bool(self.algorithm["flexible"])
+        sess = self._serve_session
+        if sess is not None and (
+                sess.batch_size != B or tneed > sess.max_tasks
+                or sess.scale != scale or sess.semantic != semantic
+                or sess.flexible != flexible
+                or sess.coupling_ref is not coupling
+                or sess.pools_ref is not pools
+                or not np.array_equal(sess.pool_state,
+                                      self._pool_state(B, pools))):
+            sess = self._serve_session = None
+        if sess is None:
+            if not live:
+                return out
+            sess = self._build_session(slot_rows, coupling, pools, scale)
+            self._serve_session = sess
+            self.fresh_stacks += 1
+        else:
+            for b, d in enumerate(dirty):
+                sess.pending.update((b, t) for t in d)
+            if not live:
+                return out
+            self.restacks += 1
+        self._sync_rows(sess, slot_rows)
+        res = solve_device_batch(sess.dev, flexible=flexible,
+                                 inner=self.inner)
+        return self._slot_decisions(sess, slot_rows, res, out)
+
+    def _pool_state(self, B: int, pools) -> np.ndarray:
+        cell_pools = [self.pool] * B if pools is None else pools
+        return np.concatenate(
+            [np.stack([p.price for p in cell_pools]),
+             np.stack([p.capacity for p in cell_pools])], axis=1)
+
+    def _build_session(self, slot_rows, coupling, pools,
+                       scale) -> _ServeSession:
+        B = len(slot_rows)
+        cell_pools = [self.pool] * B if pools is None else list(pools)
+        for pool in cell_pools[1:]:
+            # the same stacking contract solve_batch enforces: one shared
+            # enumerated allocation grid, capacities may differ per cell
+            if len(pool.levels) != len(cell_pools[0].levels) or not all(
+                    np.array_equal(a, b)
+                    for a, b in zip(pool.levels, cell_pools[0].levels)):
+                raise ValueError(
+                    "all slotted cells must share one allocation grid "
+                    "(identical pool.levels); capacities may differ")
+        grid = make_allocation_grid(cell_pools[0].levels)
+        tmax = next_pow2(max([len(rows) for rows in slot_rows] + [1]))
+        price = np.stack([p.price for p in cell_pools])
+        cap = np.stack([p.capacity for p in cell_pools])
+        dev = empty_device_stack(grid, price, cap, tmax, coupling=coupling,
+                                 semantic=bool(self.algorithm["semantic"]))
+        return _ServeSession(
+            dev=dev, grid=grid, z_grid=default_z_grid(),
+            names=[p.names for p in cell_pools],
+            pools_ref=pools, coupling_ref=coupling,
+            pool_state=self._pool_state(B, pools), scale=scale,
+            semantic=bool(self.algorithm["semantic"]),
+            flexible=bool(self.algorithm["flexible"]),
+            z_star=np.ones((B, tmax)), has_z=np.zeros((B, tmax), bool),
+            app_idx=np.zeros((B, tmax), np.int64),
+            bits=np.zeros((B, tmax)), rate=np.zeros((B, tmax)),
+            gpu_t=np.zeros((B, tmax)),
+            pending={(b, t) for b, rows in enumerate(slot_rows)
+                     for t, r in enumerate(rows) if r is not None},
+        )
+
+    def _sync_rows(self, sess: _ServeSession, slot_rows):
+        """Recompute + scatter the pending dirty rows (host AND device)."""
+        if not sess.pending:
+            return
+        items = sorted(sess.pending)
+        reqs, live_pos = [], []
+        for i, (b, t) in enumerate(items):
+            rows = slot_rows[b]
+            r = rows[t] if t < len(rows) else None
+            if r is not None:
+                live_pos.append(i)
+                reqs.append(r)
+        d = len(items)
+        A = sess.grid.shape[0]
+        # cleared-row defaults: never feasible, never alive, padding scalars
+        lat_ok = np.zeros((d, A), bool)
+        alive = np.zeros(d, bool)
+        load = np.zeros(d)
+        z = np.ones(d)
+        has_z = np.zeros(d, bool)
+        app = np.zeros(d, np.int64)
+        bits = np.zeros(d)
+        rate = np.zeros(d)
+        gpu_t = np.zeros(d)
+        if reqs:
+            # the same per-task pipeline as sdla.build_instance, restricted
+            # to the changed rows (unchanged requests cost zero recompute)
+            ts = self.sdla.task_set(reqs)
+            z_app = ts.app_idx if sess.semantic \
+                else semantics.agnostic_app(ts.app_idx)
+            zi = semantics.min_z_for_accuracy(z_app, ts.min_accuracy,
+                                              sess.z_grid)
+            z_row = np.where(zi >= 0, sess.z_grid[np.clip(zi, 0, None)], 1.0)
+            lat = lat_mod.latency_table(self.sdla.lat_params, ts, z_row,
+                                        sess.grid)
+            lok = lat <= ts.max_latency[:, None]
+            li = np.asarray(live_pos, np.int64)
+            lat_ok[li] = lok
+            alive[li] = (zi >= 0) & lok.any(axis=1)
+            load[li] = ts.bits_per_job * ts.jobs_per_sec * z_row
+            z[li] = z_row
+            has_z[li] = zi >= 0
+            app[li] = ts.app_idx
+            bits[li] = ts.bits_per_job
+            rate[li] = ts.jobs_per_sec
+            gpu_t[li] = ts.gpu_time_per_job
+        bb = np.fromiter((b for b, _ in items), np.int64, d)
+        tt = np.fromiter((t for _, t in items), np.int64, d)
+        sess.z_star[bb, tt] = z
+        sess.has_z[bb, tt] = has_z
+        sess.app_idx[bb, tt] = app
+        sess.bits[bb, tt] = bits
+        sess.rate[bb, tt] = rate
+        sess.gpu_t[bb, tt] = gpu_t
+        sess.dev.update_rows(bb, tt, lat_ok, alive, load)
+        self.delta_rows += d
+        sess.pending.clear()
+
+    def _slot_decisions(self, sess: _ServeSession, slot_rows, res, out):
+        """Unpack the compact device output into per-cell SliceDecisions."""
+        pos = [(b, t) for b, rows in enumerate(slot_rows)
+               for t, r in enumerate(rows) if r is not None]
+        if not pos:
+            return out
+        bb = np.fromiter((b for b, _ in pos), np.int64, len(pos))
+        tt = np.fromiter((t for _, t in pos), np.int64, len(pos))
+        adm = res["admitted"][bb, tt]
+        safe = np.clip(res["alloc_idx"][bb, tt], 0, None)
+        z = np.where(adm & sess.has_z[bb, tt], sess.z_star[bb, tt], 1.0)
+        alloc = sess.grid[safe] * adm[:, None]
+        # the identical first-principles report as _decisions/check_solution
+        lat = lat_mod.latency(self.sdla.lat_params, sess.bits[bb, tt],
+                              sess.rate[bb, tt], sess.gpu_t[bb, tt], z, alloc)
+        acc = semantics.accuracy(sess.app_idx[bb, tt], z)
+        for i, (b, t) in enumerate(pos):
+            names = sess.names[b]
+            out[b].append(SliceDecision(
+                request=slot_rows[b][t],
+                admitted=bool(adm[i]),
+                z=float(z[i]),
+                alloc={n: float(alloc[i, k]) for k, n in enumerate(names)},
+                expected_latency_s=float(lat[i]),
+                expected_accuracy=float(acc[i]),
+                cell=b,
+            ))
         return out
 
     def _decisions(self, requests, inst, sol,

@@ -87,6 +87,15 @@ class CellRuntime:
         self._retries: dict[int, int] = {}         # rejections left
         self._pinned: dict[int, float] = {}        # handover warm-start bound
         self._carry: dict[int, TaskRuntime] = {}   # handover runtime carry
+        # stable solver-row slots for the delta re-slice fast path: slot
+        # index → request id (None = cleared row), per-slot change signature,
+        # and a per-arrival generation so a reused request id (departed, then
+        # resubmitted) can never alias its predecessor's cached row
+        self._slots: list[int | None] = []
+        self._slot_sig: list[tuple | None] = []
+        self._dirty_slots: set[int] = set()
+        self._gen: dict[int, int] = {}
+        self._arrivals = 0
         self.frames = FrameStream()
         self._models: dict[str, tuple] = {}
         self.step = 0
@@ -115,6 +124,8 @@ class CellRuntime:
         self._requests[rid] = request
         self._queue.append(rid)
         self._retries.setdefault(rid, self.max_retries)
+        self._arrivals += 1
+        self._gen[rid] = self._arrivals
 
     def remove(self, request_id: int) -> TaskRuntime | None:
         """Withdraw a task (departure): no retry, no drop accounting."""
@@ -124,6 +135,8 @@ class CellRuntime:
         self._queue = [r for r in self._queue if r != request_id]
         self._retries.pop(request_id, None)
         self._pinned.pop(request_id, None)
+        # safe to forget: a resubmission writes a fresh generation anyway
+        self._gen.pop(request_id, None)
         return rt
 
     def gather(self) -> list[SliceRequest]:
@@ -136,6 +149,74 @@ class CellRuntime:
             out.append(req if pin is None
                        else dataclasses.replace(req, min_accuracy=pin))
         return out
+
+    def sync_slots(self, consume: bool = False
+                   ) -> tuple[list[SliceRequest | None], list[int]]:
+        """Assign every candidate request a STABLE solver-row slot; report
+        which slots changed since the last CONSUMING sync.
+
+        The delta re-slice fast path keeps the stacked solver tables
+        device-resident across ticks, so a task's row only needs host
+        recompute + device scatter when the task itself changed. Slots are
+        sticky: a request keeps its row for as long as it stays a candidate
+        (running OR queued), a departure clears its row, and new candidates
+        fill the lowest free slots in candidate order. A slot is dirty when
+        it was cleared, newly assigned, its handover pin changed, or its id
+        was reused by a NEW submission (the per-arrival generation in the
+        signature — row-id reuse must never alias the predecessor's row).
+
+        Returns ``(rows, dirty)``: ``rows`` is the per-slot request list
+        (pins applied, ``None`` = cleared row), ``dirty`` the sorted indices
+        of changed slots. Dirty slots ACCUMULATE across non-consuming syncs
+        (``gather``-style introspection must not eat deltas the next
+        re-slice still needs) and clear only when ``consume=True`` — the
+        re-slice that actually delivers them to the solver session.
+        """
+        pin_of: dict[int, float | None] = {}
+        for rid in list(self.tasks) + self._queue:
+            if rid not in pin_of:
+                pin_of[rid] = self._pinned.get(rid)
+        dirty: set[int] = set()
+        seated: set[int] = set()
+        for t, rid in enumerate(self._slots):
+            if rid is None:
+                continue
+            if rid not in pin_of:                     # departed/dropped
+                self._slots[t] = None
+                self._slot_sig[t] = None
+                dirty.add(t)
+            else:
+                seated.add(rid)
+        free = [t for t, rid in enumerate(self._slots) if rid is None]
+        free.reverse()                                # pop() → lowest first
+        for rid in pin_of:
+            if rid in seated:
+                continue
+            if free:
+                t = free.pop()
+            else:
+                self._slots.append(None)
+                self._slot_sig.append(None)
+                t = len(self._slots) - 1
+            self._slots[t] = rid
+        rows: list[SliceRequest | None] = []
+        for t, rid in enumerate(self._slots):
+            if rid is None:
+                rows.append(None)
+                continue
+            req = self._requests[rid]
+            pin = pin_of[rid]
+            sig = (rid, self._gen.get(rid), pin)
+            if self._slot_sig[t] != sig:
+                self._slot_sig[t] = sig
+                dirty.add(t)
+            rows.append(req if pin is None
+                        else dataclasses.replace(req, min_accuracy=pin))
+        self._dirty_slots |= dirty
+        dirty_now = sorted(self._dirty_slots)
+        if consume:
+            self._dirty_slots.clear()
+        return rows, dirty_now
 
     def apply(self, decisions: list[SliceDecision]) -> list[SliceDecision]:
         """Apply one re-slice round's decisions (for this cell's gather set).
@@ -187,6 +268,7 @@ class CellRuntime:
                 self.drops += 1
                 self.dropped.append(self._requests.pop(rid))
                 self._retries.pop(rid, None)
+                self._gen.pop(rid, None)
         return decisions
 
     # ------------------------------------------------------ handover hooks
@@ -200,6 +282,7 @@ class CellRuntime:
         req = self._requests.pop(request_id)
         retries = self._retries.pop(request_id, self.max_retries)
         self._pinned.pop(request_id, None)
+        self._gen.pop(request_id, None)
         return req, rt, retries
 
     def hand_in(self, request: SliceRequest, runtime: TaskRuntime,
@@ -216,6 +299,8 @@ class CellRuntime:
         self._retries[rid] = retries
         self._pinned[rid] = pinned_accuracy
         self._carry[rid] = runtime
+        self._arrivals += 1
+        self._gen[rid] = self._arrivals
 
     # --------------------------------------------------------------- data
     def _run_vision_job(self, rt: TaskRuntime, batch: int):

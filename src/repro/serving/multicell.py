@@ -98,16 +98,39 @@ class MultiCellEngine:
         return self.cells[cell].remove(request_id)
 
     def gather(self) -> list[list[SliceRequest]]:
-        """Every cell's candidate set (running + retry queue, pins applied).
+        """Every cell's candidate set (running + retry queue, pins applied),
+        in the STABLE SLOT ORDER the fast-path re-slice solves (see
+        ``CellRuntime.sync_slots``; cleared slots are dropped).
 
         Idempotent — tests re-gather the same sets to assert the engine's
         admissions against ``solve_coupled_ref`` on the gathered instances.
         """
-        return [cell.gather() for cell in self.cells]
+        return [[r for r in cell.sync_slots()[0] if r is not None]
+                for cell in self.cells]
 
     def reslice(self) -> list[list[SliceDecision]]:
-        """One joint re-slice: gather all cells → ONE coupled solve_batch →
-        apply per-cell (evictions flagged, rejected requests re-queued)."""
+        """One joint re-slice: sync every cell's solver-row slots → ONE
+        coupled device program over the DEVICE-RESIDENT session (only dirty
+        rows are recomputed and scattered — a steady tick re-uploads
+        nothing) → apply per-cell (evictions flagged, rejected requests
+        re-queued). Decisions are identical to the full-rebuild
+        :meth:`reslice_rebuild` path; ``sesm.fresh_stacks``/``restacks``/
+        ``delta_rows`` expose the session-cache health."""
+        rows, dirty = [], []
+        for cell in self.cells:
+            r, d = cell.sync_slots(consume=True)
+            rows.append(r)
+            dirty.append(d)
+        decisions = self.sesm.solve_slots(rows, dirty,
+                                          coupling=self.coupling,
+                                          pools=self.pools)
+        return [cell.apply(ds) for cell, ds in zip(self.cells, decisions)]
+
+    def reslice_rebuild(self) -> list[list[SliceDecision]]:
+        """The pre-fast-path re-slice: rebuild every cell's instance and
+        restack the full host tables through ``SESM.solve_batch``. Kept as
+        the reference implementation the fast path is tested (and benched)
+        against."""
         decisions = self.sesm.solve_batch(self.gather(),
                                           coupling=self.coupling,
                                           pools=self.pools)

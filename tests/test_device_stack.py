@@ -1,0 +1,224 @@
+"""Delta-restack contract of the device-resident stacking cache.
+
+The serving fast path keeps the batched solver inputs on device and scatters
+only changed task rows (arrivals, departures, handovers) between solves. The
+contract under test: after ANY sequence of row deltas, the device buffers
+must solve bit-identically to a fresh ``stack_instances`` + full solve of the
+same (compacted) task sets — for the jnp round AND the fused Pallas inner —
+and the invalidation rules (Tmax bucket overflow, grid change, restack
+invalidating the memoized device half) must hold.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (CouplingSpec, TaskSet, build_instance, device_stack,
+                        empty_device_stack, restack, scenarios,
+                        solve_device_batch, solve_greedy_batch,
+                        stack_instances)
+from repro.core.sfesp import _solver_tables
+
+TMAX = 16
+
+
+def _task_pool(rng, n=40):
+    """A pool of task dicts the churn draws from."""
+    apps = ["coco_bags", "coco_animals", "cityscapes_flat", "coco_person"]
+    return [dict(app=apps[int(rng.integers(len(apps)))],
+                 acc=float(rng.uniform(0.2, 0.55)),
+                 lat=float(rng.uniform(0.5, 0.9)),
+                 fps=float(rng.uniform(3.0, 9.0)))
+            for _ in range(n)]
+
+
+def _task_set(tasks):
+    from repro.core import semantics
+    return TaskSet(
+        app_idx=np.array([semantics.APP_INDEX[t["app"]] for t in tasks],
+                         np.int64),
+        min_accuracy=np.array([t["acc"] for t in tasks]),
+        max_latency=np.array([t["lat"] for t in tasks]),
+        bits_per_job=np.full(len(tasks), 0.8),
+        jobs_per_sec=np.array([t["fps"] for t in tasks]),
+        gpu_time_per_job=np.full(len(tasks), 0.06),
+        n_ues=np.ones(len(tasks), np.int64),
+    )
+
+
+def _fresh_solution(pools, slots, spec):
+    """Fresh-stack reference: compacted per-cell instances, full solve."""
+    insts = []
+    for b, pool in enumerate(pools):
+        tasks = [t for t in slots[b] if t is not None]
+        inst = build_instance(pool, _task_set(tasks))
+        if spec is not None:
+            inst = dataclasses.replace(inst, coupling=spec.row(b))
+        insts.append(inst)
+    return insts, solve_greedy_batch(stack_instances(insts, tmax=TMAX))
+
+
+def _scatter_dirty(dev, pools, slots, dirty):
+    """Recompute ONLY the dirty rows (the serving _sync_rows pipeline: a
+    build_instance restricted to the changed tasks) and delta-scatter them."""
+    bb, tt = [], []
+    lat_ok = np.zeros((0, dev.grid.shape[0]), bool)
+    alive = np.zeros(0, bool)
+    load = np.zeros(0)
+    for b, d in dirty:
+        bb.append(b)
+        tt.append(d)
+        task = slots[b][d]
+        if task is None:
+            lat_ok = np.concatenate(
+                [lat_ok, np.zeros((1, dev.grid.shape[0]), bool)])
+            alive = np.concatenate([alive, [False]])
+            load = np.concatenate([load, [0.0]])
+            continue
+        inst = build_instance(pools[b], _task_set([task]))
+        st1 = stack_instances([inst])
+        lok, alv, _ = _solver_tables(st1, True)
+        lat_ok = np.concatenate([lat_ok, lok[0]])
+        alive = np.concatenate([alive, alv[0]])
+        z = inst.z_grid[max(int(inst.z_star_idx[0]), 0)] \
+            if inst.z_star_idx[0] >= 0 else 1.0
+        load = np.concatenate(
+            [load, [0.8 * task["fps"] * z]])
+    dev.update_rows(np.array(bb), np.array(tt), lat_ok, alive, load)
+
+
+@pytest.mark.parametrize("coupled", [False, True])
+def test_delta_scatter_bitmatches_fresh_stack_under_churn(coupled):
+    """Randomized arrival/departure/handover churn: after every step the
+    delta-scattered device buffers solve bit-identically to a fresh stack of
+    the same candidate sets."""
+    rng = np.random.default_rng(7)
+    pools = scenarios.multi_cell_pools(4, seed=1)
+    spec = CouplingSpec(np.array([4.0]), np.ones((4, 1), bool)) \
+        if coupled else None
+    bag = _task_pool(rng)
+    slots = [[None] * TMAX for _ in range(4)]
+    price = np.stack([p.price for p in pools])
+    cap = np.stack([p.capacity for p in pools])
+    grid = build_instance(pools[0], _task_set(bag[:1])).grid
+    dev = empty_device_stack(grid, price, cap, TMAX, coupling=spec)
+
+    def place(b, task):
+        t = slots[b].index(None)
+        slots[b][t] = task
+        return (b, t)
+
+    # seed load
+    dirty = [place(b, bag[int(rng.integers(len(bag)))])
+             for b in range(4) for _ in range(4)]
+    for step in range(6):
+        _scatter_dirty(dev, pools, slots, dirty)
+        res = solve_device_batch(dev)
+        insts, ref = _fresh_solution(pools, slots, spec)
+        for b in range(4):
+            live = [t for t, task in enumerate(slots[b]) if task is not None]
+            assert (res["admitted"][b, live] == ref[b].admitted).all(), \
+                (step, b)
+            gi = np.clip(res["alloc_idx"][b, live], 0, None)
+            alloc = np.asarray(dev.grid)[gi] \
+                * res["admitted"][b, live][:, None]
+            assert np.allclose(alloc, ref[b].alloc, atol=1e-5), (step, b)
+        # churn: departures, arrivals, one "handover" (move between cells)
+        dirty = []
+        for b in range(4):
+            live = [t for t, task in enumerate(slots[b]) if task is not None]
+            if len(live) > 2 and rng.random() < 0.8:
+                t = live[int(rng.integers(len(live)))]
+                slots[b][t] = None
+                dirty.append((b, t))
+            if rng.random() < 0.8:
+                dirty.append(place(b, bag[int(rng.integers(len(bag)))]))
+        src = int(rng.integers(4))
+        live = [t for t, task in enumerate(slots[src]) if task is not None]
+        if live:
+            t = live[0]
+            task, slots[src][t] = slots[src][t], None
+            dirty.append((src, t))
+            dirty.append(place((src + 1) % 4, task))
+
+
+def test_delta_scatter_bitmatches_pallas_inner():
+    """The fused Pallas batch-round kernel consumes the delta-scattered
+    device buffers bit-identically to the jnp round."""
+    rng = np.random.default_rng(3)
+    pools = scenarios.multi_cell_pools(2, seed=0)
+    bag = _task_pool(rng, n=12)
+    slots = [[None] * 8 for _ in range(2)]
+    price = np.stack([p.price for p in pools])
+    cap = np.stack([p.capacity for p in pools])
+    grid = build_instance(pools[0], _task_set(bag[:1])).grid
+    dev = empty_device_stack(grid, price, cap, 8)
+    dirty = []
+    for b in range(2):
+        for t in range(3):
+            slots[b][t] = bag[int(rng.integers(len(bag)))]
+            dirty.append((b, t))
+    _scatter_dirty(dev, pools, slots, dirty)
+    jnp_res = solve_device_batch(dev)
+    pal_res = solve_device_batch(dev, inner="pallas")
+    assert (jnp_res["admitted"] == pal_res["admitted"]).all()
+    adm = jnp_res["admitted"]
+    assert (jnp_res["alloc_idx"][adm] == pal_res["alloc_idx"][adm]).all()
+    # and a delta on top solves identically through both inners
+    slots[0][1] = None
+    slots[1][4] = bag[0]
+    _scatter_dirty(dev, pools, slots, [(0, 1), (1, 4)])
+    jnp_res = solve_device_batch(dev)
+    pal_res = solve_device_batch(dev, inner="pallas")
+    assert (jnp_res["admitted"] == pal_res["admitted"]).all()
+
+
+def test_bucket_overflow_rejected():
+    """A slot beyond the device Tmax bucket must be rejected, not silently
+    dropped — the caller rebuilds at a larger bucket."""
+    pools = scenarios.multi_cell_pools(1, seed=0)
+    grid = build_instance(pools[0], _task_set(_task_pool(
+        np.random.default_rng(0), 1))).grid
+    dev = empty_device_stack(grid, pools[0].price[None], pools[0].capacity[None], 4)
+    with pytest.raises(ValueError, match="bucket"):
+        dev.update_rows(np.array([0]), np.array([4]),
+                        np.zeros((1, grid.shape[0]), bool),
+                        np.zeros(1, bool))
+
+
+def test_device_half_memoized_and_invalidated_by_restack():
+    """device_stack memoizes per (batch, mode); restack hands back a NEW
+    batch object whose device half is rebuilt — the grid/bucket/buffer
+    invalidation rule of the stacking-cache contract."""
+    insts, _ = scenarios.fig6_sweep(2, n_tasks=(6, 8), acc_levels=("low",),
+                                    lat_levels=("low",), seeds=(0,))
+    st = stack_instances(insts)
+    d1 = device_stack(st)
+    assert device_stack(st) is d1                     # memo hit
+    assert device_stack(st, semantic=False) is not d1  # per-mode entry
+    assert device_stack(st, pad_batch_to=4) is not d1  # per-bucket entry
+    st2 = restack(st, insts[::-1])
+    d2 = device_stack(st2)
+    assert d2 is not d1, "restack must invalidate the old device half"
+    # the rebuilt half reflects the refilled buffers
+    sols = solve_greedy_batch(st2)
+    from repro.core import solve_greedy
+    for inst, sol in zip(insts[::-1], sols):
+        ref = solve_greedy(inst)
+        assert (sol.admitted == ref.admitted).all()
+
+
+def test_mixed_grid_stacks_have_distinct_device_halves():
+    """Grid change ⇒ different stacked batch ⇒ different device half (the
+    grouped dispatcher never shares device buffers across grids)."""
+    insts, _ = scenarios.multi_cell_trace(2, 2, seed=0, n_grids=2)
+    grids = {}
+    for inst in insts:
+        grids.setdefault(inst.grid.tobytes(), inst)
+    assert len(grids) == 2
+    stacks = [stack_instances([i]) for i in grids.values()]
+    devs = [device_stack(s) for s in stacks]
+    assert devs[0].grid.shape != devs[1].grid.shape \
+        or not np.array_equal(np.asarray(devs[0].grid),
+                              np.asarray(devs[1].grid))

@@ -14,7 +14,7 @@ import numpy as np
 import pytest
 
 from repro.core import CouplingSpec, scenarios, semantics, solve_coupled_ref
-from repro.core.greedy import _greedy_jax_batch_coupled
+from repro.core.greedy import _serve_batch_coupled
 from repro.serving import MultiCellEngine, SliceRequest, drive_closed_loop
 
 
@@ -79,12 +79,12 @@ def test_three_cell_shared_backhaul_closed_loop():
             rejected0 = {d.request.request_id
                          for ds in decisions for d in ds if not d.admitted}
             assert rejected0, "budget must bind to exercise the retry queue"
-            compiled_after_first = _greedy_jax_batch_coupled._cache_size()
+            compiled_after_first = _serve_batch_coupled._cache_size()
     # one fresh stack (tick 0), all later ticks restack in place: ZERO misses
     assert eng.sesm.fresh_stacks == 1
     assert eng.sesm.restacks == 5
     # ... and the pow2 buckets kept the device program cached: no recompiles
-    assert _greedy_jax_batch_coupled._cache_size() == compiled_after_first
+    assert _serve_batch_coupled._cache_size() == compiled_after_first
     # retry queue drained: every tick-0 reject re-offered max_retries times,
     # then dropped — never silently discarded
     assert all(not cell.pending for cell in eng.cells)
@@ -206,6 +206,101 @@ def test_drive_closed_loop_records():
     assert recs[0]["restacked"]
     assert sum(r["handovers"] for r in recs) > 0
     assert run() == recs
+
+
+def test_fastpath_matches_rebuild_under_churn():
+    """The device-resident delta re-slice and the full-rebuild path make
+    IDENTICAL decisions tick for tick under arrival/departure/handover
+    churn (same structure driven through twin engines)."""
+    def build():
+        pools = scenarios.multi_cell_pools(3, seed=2)
+        spec = CouplingSpec(np.array([2.0]), np.ones((3, 1), bool))
+        eng = MultiCellEngine(pools, coupling=spec, max_retries=2)
+        for c in range(3):
+            _submit_mix(eng, c)
+        return eng
+
+    fast, slow = build(), build()
+    rng = np.random.default_rng(11)
+    for tick in range(6):
+        df = fast.reslice()
+        ds = slow.reslice_rebuild()
+        for cf, cs in zip(df, ds):
+            assert [(d.admitted, d.z, d.alloc, d.evicted) for d in cf] \
+                == [(d.admitted, d.z, d.alloc, d.evicted) for d in cs], tick
+        # identical churn on both engines (ids differ, structure matches)
+        for eng in (fast, slow):
+            running = [(c, rid) for c, cell in enumerate(eng.cells)
+                       for rid in cell.tasks]
+            state = rng.bit_generator.state
+            if running and rng.random() < 0.7:
+                c, rid = running[int(rng.integers(len(running)))]
+                eng.handover(rid, c, (c + 1) % 3)
+            if running and rng.random() < 0.5:
+                c, rid = running[int(rng.integers(len(running)))]
+                if rid in eng.cells[c]._requests:
+                    eng.remove(rid, c)
+            if rng.random() < 0.7:
+                eng.submit(_req("coco_person", acc=0.25, fps=4.0),
+                           int(rng.integers(3)))
+            if eng is fast:                 # replay the same draws for slow
+                rng.bit_generator.state = state
+    # every tick either delta-synced the session or (at most once, when the
+    # churn outgrew the initial pow2 bucket) rebuilt it at the next bucket
+    assert fast.sesm.fresh_stacks <= 2
+    assert fast.sesm.fresh_stacks + fast.sesm.restacks == 6
+
+
+def test_rowid_reuse_invalidates_slot():
+    """A request id reused by a NEW submission after departure must get a
+    fresh solver row — never its predecessor's cached one."""
+    eng = MultiCellEngine(scenarios.multi_cell_pools(2, seed=0))
+    first = _req("coco_bags", acc=0.25)
+    eng.submit(first, 0)
+    eng.submit(_req("cityscapes_flat"), 1)
+    d0 = next(d for d in eng.reslice()[0]
+              if d.request.request_id == first.request_id)
+    assert d0.admitted
+    eng.remove(first.request_id, 0)
+    eng.reslice()
+    # same id, different requirements: unreachable accuracy → must reject
+    reused = _req("coco_bags", acc=0.999)
+    reused.request_id = first.request_id
+    eng.submit(reused, 0)
+    d1 = next(d for d in eng.reslice()[0]
+              if d.request.request_id == first.request_id)
+    assert not d1.admitted and d1.z == 1.0
+    assert eng.sesm.fresh_stacks == 1, "id reuse must not rebuild the stack"
+
+
+def test_inplace_pool_mutation_invalidates_session():
+    """ResourcePool is frozen but its arrays are not: an in-place capacity
+    edit between ticks must rebuild the device session (value snapshot), so
+    the fast path never admits against stale pool state."""
+    pools = scenarios.multi_cell_pools(2, seed=0)
+    eng = MultiCellEngine(pools)
+    eng.submit(_req("coco_bags"), 0)
+    eng.reslice()
+    eng.reslice()
+    assert eng.sesm.fresh_stacks == 1
+    pools[0].capacity[:] = pools[0].capacity * 0.5
+    eng.reslice()
+    assert eng.sesm.fresh_stacks == 2, \
+        "capacity edit must invalidate the device session"
+
+
+def test_latency_scale_change_invalidates_session():
+    """Every cached row depends on the SDLA latency scale: a radio-status
+    update must rebuild the device session, and the next re-slice must match
+    the oracle built at the NEW scale."""
+    eng, pools, spec = _coupled_engine(budget=1.0, max_retries=2)
+    _assert_matches_oracle(eng, pools, spec)
+    assert eng.sesm.fresh_stacks == 1
+    eng.sdla.update_radio_status(2.0)       # halves every latency budget
+    decisions = _assert_matches_oracle(eng, pools, spec)
+    assert eng.sesm.fresh_stacks == 2, \
+        "scale change must invalidate the device session"
+    assert any(d.admitted for ds in decisions for d in ds)
 
 
 def test_drive_closed_loop_tolerates_preexisting_tasks():
