@@ -13,6 +13,10 @@ Poisson traces and multi-cell traces through
   * the coupled path — a 4-cell trace with per-step shared backhaul links
     (``multi_cell_trace(shared_backhaul=...)``) through the cell-coupled
     engine, vs the numpy coupled oracle,
+  * the metro path — 256 cells in 32 backhaul domains at the diurnal peak
+    (``metro_diurnal_trace``), stacked group-major and dispatched through
+    ``solve_greedy_sharded`` over a "cells" mesh of all visible devices
+    (sampled coupling groups asserted against the coupled oracle),
   * the fused-kernel path — ``solve_greedy_batch(inner="pallas")``, the whole
     admission round in one Pallas kernel (interpret mode off-TPU, so on CPU
     this row measures the interpreter, not the hardware win),
@@ -172,6 +176,43 @@ def _bench_coupled():
         batched_speedup=round(us_np / us_cpl, 1))
 
 
+def _bench_metro():
+    """Metro-scale sharded solve: 256 cells, 32 backhaul domains, one
+    near-peak diurnal snapshot (``scenarios.metro_diurnal_trace``).
+
+    The trace stacks group-major and dispatches through
+    ``solve_greedy_sharded`` over a 1-D "cells" mesh of all visible devices
+    (on the 1-device CI runner this times the group-major fallback — the
+    same coupled device program, so the row still gates the layout's cost).
+    Decisions are oracle-asserted per sampled coupling group: 4 domains are
+    re-solved with ``solve_coupled_ref`` and must bit-match.
+    """
+    from repro.core import solve_greedy_sharded
+    from repro.launch.mesh import make_cells_mesh
+
+    insts, meta = scenarios.metro_diurnal_trace(
+        n_cells=256, n_domains=32, hours=(13,), seed=0)
+    n = len(insts)
+    mesh = make_cells_mesh()
+    st = stack_instances(insts, group_major=True)
+    # the front door undoes the stacking permutation: solutions are in
+    # `insts` order even from the pre-built group-major stack
+    sols = solve_greedy_sharded(st, mesh=mesh)
+    for d in (0, 11, 21, 31):            # sampled coupling groups
+        idxs = [i for i, m in enumerate(meta) if m["domain"] == d]
+        refs = solve_coupled_ref([insts[i] for i in idxs])
+        for i, ref in zip(idxs, refs):
+            assert (sols[i].admitted == ref.admitted).all()
+
+    us = time_fn(lambda: solve_greedy_sharded(st, mesh=mesh), iters=3)
+    devices = int(mesh.shape["cells"])
+    row("sweep/metro_256cell", us, per_instance_us=round(us / n, 1), B=n,
+        Tmax=st.max_tasks, A=st.num_allocs, groups=st.num_groups,
+        devices=devices,
+        groups_per_shard=round(st.num_groups / devices, 1),
+        tasks=int(sum(i.num_tasks for i in insts)))
+
+
 def _bench_engine_tick():
     """Closed-loop serving hot path: one coupled 4-cell engine re-slice.
 
@@ -295,6 +336,7 @@ def main():
 
     mixed_speedup = _bench_mixed_grid()
     _bench_coupled()
+    _bench_metro()
     _bench_engine_tick()
     _bench_pallas_inner()
     _bench_restack()

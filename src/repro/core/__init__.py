@@ -2,24 +2,31 @@
 
 from .types import (CouplingSpec, ProblemInstance, ResourcePool, Solution,
                     StackedInstances, TaskSet, make_allocation_grid)
-from .sfesp import (DeviceStack, build_instance, check_solution,
-                    default_z_grid, device_stack, empty_device_stack,
+from .sfesp import (DeviceStack, ShardedStack, build_instance, check_solution,
+                    default_z_grid, device_stack, device_stack_sharded,
+                    empty_device_stack, group_major_order, group_offsets_of,
                     lexicographic_cost, merge_coupling, next_pow2,
-                    objective_value, restack, stack_instances, task_link_load)
+                    objective_value, restack, shard_plan, stack_instances,
+                    task_link_load)
 from .greedy import (primal_gradient, solve, solve_device_batch, solve_greedy,
-                     solve_greedy_batch, solve_greedy_jax, solve_greedy_many)
+                     solve_greedy_batch, solve_greedy_jax, solve_greedy_many,
+                     solve_greedy_sharded)
 from .exact import solve_exact
 from .baselines import ALGORITHMS, run_algorithm, solve_coupled_ref
 from . import latency, scenarios, semantics
 
 __all__ = [
     "CouplingSpec", "DeviceStack", "ProblemInstance", "ResourcePool",
-    "Solution", "StackedInstances", "TaskSet", "make_allocation_grid",
+    "ShardedStack", "Solution", "StackedInstances", "TaskSet",
+    "make_allocation_grid",
     "build_instance", "check_solution", "default_z_grid", "device_stack",
-    "empty_device_stack", "lexicographic_cost", "merge_coupling", "next_pow2",
-    "objective_value", "restack", "stack_instances", "task_link_load",
+    "device_stack_sharded", "empty_device_stack", "group_major_order",
+    "group_offsets_of", "lexicographic_cost", "merge_coupling", "next_pow2",
+    "objective_value", "restack", "shard_plan", "stack_instances",
+    "task_link_load",
     "primal_gradient", "solve", "solve_device_batch", "solve_greedy",
     "solve_greedy_batch", "solve_greedy_jax", "solve_greedy_many",
+    "solve_greedy_sharded",
     "solve_exact", "solve_coupled_ref",
     "ALGORITHMS", "run_algorithm", "latency", "scenarios", "semantics",
 ]

@@ -25,13 +25,14 @@ import jax
 import jax.numpy as jnp
 
 from . import semantics
-from .sfesp import (DeviceStack, device_stack, lexicographic_cost, next_pow2,
-                    objective_value, stack_instances)
+from .sfesp import (DeviceStack, device_stack, device_stack_sharded,
+                    lexicographic_cost, next_pow2, objective_value,
+                    stack_instances)
 from .types import ProblemInstance, Solution, StackedInstances
 
 __all__ = ["primal_gradient", "solve_greedy", "solve_greedy_jax",
-           "solve_greedy_batch", "solve_greedy_many", "solve",
-           "solve_device_batch", "lexicographic_cost"]
+           "solve_greedy_batch", "solve_greedy_sharded", "solve_greedy_many",
+           "solve", "solve_device_batch", "lexicographic_cost"]
 
 _EPS_DEN = 1e-9
 
@@ -597,12 +598,6 @@ def solve_greedy_batch(insts, *, semantic: bool = True, flexible: bool = True,
     """
     stacked = insts if isinstance(insts, StackedInstances) \
         else stack_instances(insts)
-    if semantic:
-        lat, z_idx = stacked.lat, stacked.z_star_idx
-        z_star = stacked.z_star
-    else:
-        lat, z_idx = stacked.lat_agnostic, stacked.z_star_idx_agnostic
-        z_star = stacked.z_star_agnostic
     B = stacked.batch_size
     # device-resident half, memoized on the batch: repeated solves of the
     # same stacked batch (sweep reruns, what-if studies) re-upload nothing
@@ -618,9 +613,22 @@ def solve_greedy_batch(insts, *, semantic: bool = True, flexible: bool = True,
             dev.cost, flexible=flexible, inner=inner)
     admitted = np.asarray(admitted)[:B]
     alloc_idx = np.asarray(alloc_idx, np.int64)[:B]
+    return _pack_batch_solutions(stacked, admitted, alloc_idx, semantic)
 
-    # vectorized _pack_solution over the whole batch (per-instance Python
-    # packing would dwarf the device solve at sweep sizes)
+
+def _pack_batch_solutions(stacked: StackedInstances, admitted: np.ndarray,
+                          alloc_idx: np.ndarray,
+                          semantic: bool) -> list[Solution]:
+    """Vectorized _pack_solution over a whole batch (per-instance Python
+    packing would dwarf the device solve at sweep sizes). ``admitted`` /
+    ``alloc_idx`` are host (B, Tmax) decision tables in STACKED row order;
+    returns one :class:`Solution` per stacked instance, same order."""
+    if semantic:
+        lat, z_idx = stacked.lat, stacked.z_star_idx
+        z_star = stacked.z_star
+    else:
+        lat, z_idx = stacked.lat_agnostic, stacked.z_star_idx_agnostic
+        z_star = stacked.z_star_agnostic
     grid = stacked.grid
     safe_idx = np.clip(alloc_idx, 0, None)
     alloc = grid[safe_idx] * admitted[:, :, None]                 # (B, T, m)
@@ -641,6 +649,93 @@ def solve_greedy_batch(insts, *, semantic: bool = True, flexible: bool = True,
             admitted=admitted[b, :t], alloc=alloc[b, :t], z=z[b, :t],
             objective=float(objective[b]), satisfied=satisfied[b, :t]))
     return out
+
+
+def _to_input_order(stacked: StackedInstances, sols: list) -> list:
+    """Undo a group-major stacking permutation: ``out[perm[b]] = sols[b]``."""
+    if stacked.perm is None:
+        return sols
+    out = [None] * len(sols)
+    for b, sol in enumerate(sols):
+        out[int(stacked.perm[b])] = sol
+    return out
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_solve_fn(mesh, axis: str, flexible: bool, inner: str):
+    """Jitted shard_map entry of the metro solve, cached per (mesh, mode).
+
+    Each shard runs the UNMODIFIED coupled batch core on its block of the
+    group-major batch: local group ids keep every ``segment_max`` /
+    ``segment_min`` reduction shard-local, so no collective appears in the
+    loop and each shard's ``while_loop`` converges independently — a
+    congested group never serializes the fleet (per-group round
+    convergence, no global barrier).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.compat import shard_map_nocheck
+
+    def body(lat_ok, grid, price, cap, alive0, cost, load, link_cap,
+             incidence, group):
+        admitted, alloc_idx, _, _ = _batch_solve_coupled(
+            lat_ok, grid, price, cap, alive0, cost, load, link_cap,
+            incidence, group, flexible, inner)
+        return admitted, alloc_idx
+
+    cells, rep = P(axis), P()
+    fn = shard_map_nocheck(
+        body, mesh=mesh,
+        in_specs=(cells, rep, cells, cells, cells, rep, cells, rep, cells,
+                  cells),
+        out_specs=(cells, cells))
+    return jax.jit(fn)
+
+
+def solve_greedy_sharded(insts, *, mesh=None, semantic: bool = True,
+                         flexible: bool = True, inner: str = "jnp",
+                         axis: str = "cells") -> list[Solution]:
+    """Metro-scale front door: the coupled batched solve sharded over a
+    device mesh, one block of coupling groups per device.
+
+    ``insts`` is a sequence of :class:`ProblemInstance` (stacked group-major
+    on the fly) or a pre-built :class:`StackedInstances` (any layout — the
+    sharded device half permutes group-major itself). ``mesh`` is a 1-D mesh
+    whose ``axis`` names the batch split (``launch.mesh.make_cells_mesh``);
+    ``None`` builds one over all visible devices. Solutions come back in
+    INPUT order regardless of layout.
+
+    Decisions are bit-identical to :func:`solve_greedy_batch` on the same
+    instances (asserted in tests): the group-major permutation is stable, so
+    within-group cell order — the coupled tie-break — is preserved, and each
+    shard runs the same per-round core on its groups. With one device (or a
+    size-1 mesh) this IS the single-device solve, reordered.
+    """
+    stacked = insts if isinstance(insts, StackedInstances) \
+        else stack_instances(
+            insts, group_major=True,
+            tmax=next_pow2(max((i.num_tasks for i in insts), default=1)))
+    if mesh is None:
+        from repro.launch.mesh import make_cells_mesh
+        mesh = make_cells_mesh(axis=axis)
+    if int(mesh.shape[axis]) == 1:
+        sols = solve_greedy_batch(stacked, semantic=semantic,
+                                  flexible=flexible, inner=inner)
+        return _to_input_order(stacked, sols)
+    shd = device_stack_sharded(stacked, mesh, semantic=semantic, axis=axis)
+    admitted_p, alloc_p = _sharded_solve_fn(mesh, axis, flexible, inner)(
+        shd.lat_ok, shd.grid, shd.price, shd.capacity, shd.alive0, shd.cost,
+        shd.link_load, shd.link_cap, shd.incidence, shd.group)
+    admitted_p = np.asarray(admitted_p)
+    alloc_p = np.asarray(alloc_p, np.int64)
+    B, tmax = stacked.batch_size, stacked.max_tasks
+    admitted = np.zeros((B, tmax), bool)
+    alloc_idx = np.full((B, tmax), -1, np.int64)
+    live = shd.row_of >= 0
+    admitted[shd.row_of[live]] = admitted_p[live]
+    alloc_idx[shd.row_of[live]] = alloc_p[live]
+    sols = _pack_batch_solutions(stacked, admitted, alloc_idx, semantic)
+    return _to_input_order(stacked, sols)
 
 
 def solve_greedy_many(insts, *, semantic: bool = True, flexible: bool = True,

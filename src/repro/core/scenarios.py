@@ -49,8 +49,8 @@ __all__ = [
     "ACC_THRESHOLDS", "LAT_THRESHOLDS",
     "numerical_pool", "numerical_tasks", "colosseum_pool", "colosseum_tasks",
     "fig6_sweep", "poisson_trace", "fps_trace", "fps_trace_instances",
-    "multi_cell_pools", "multi_cell_trace", "mixed_workload_tasks",
-    "closed_loop_trace", "closed_loop_arrivals",
+    "multi_cell_pools", "multi_cell_trace", "metro_diurnal_trace",
+    "mixed_workload_tasks", "closed_loop_trace", "closed_loop_arrivals",
 ]
 
 # paper Section V-B threshold definitions ("lm" extends them to the
@@ -337,6 +337,69 @@ def multi_cell_trace(n_cells: int, horizon: int, *, m: int = 2,
             insts.append(inst)
             meta.append(dict(step=step, cell=cell) if link_cap is None
                         else dict(step=step, cell=cell, link=step))
+    return insts, meta
+
+
+def metro_diurnal_trace(n_cells: int = 256, *, n_domains: int = 32,
+                        hours=None, m: int = 2, acc: str = "med",
+                        lat: str = "high", seed: int = 0,
+                        base_rate: float = 2.0, peak_rate: float = 8.0,
+                        backhaul_per_cell: float = 1.2,
+                        ) -> tuple[list[ProblemInstance], list[dict]]:
+    """Metro-scale deployment: hundreds of cells in disjoint backhaul
+    domains under a diurnal load curve — the workload of the sharded solve.
+
+    The metro is ``n_cells`` heterogeneous cells (``multi_cell_pools``,
+    shared allocation grid) partitioned into ``n_domains`` CONTIGUOUS
+    aggregation domains (cell ``c`` belongs to domain
+    ``c * n_domains // n_cells`` — a ring deployment where neighboring cells
+    share a metro-aggregation link). Each domain owns one backhaul link per
+    hour with budget ``backhaul_per_cell * domain_size``; domains never share
+    links, so the coupling groups of one hour are exactly the domains —
+    ``len(hours) * n_domains`` independent groups a mesh can solve in
+    parallel (``greedy.solve_greedy_sharded``).
+
+    Traffic follows a sinusoidal day curve: each cell's Poisson arrival rate
+    ramps from ``base_rate`` (night) to ``peak_rate`` over a 12 h daytime
+    window whose start is offset by a per-cell phase in [-2 h, +4 h)
+    (business districts peak around noon, residential cells toward the
+    evening), so domains hit their backhaul ceilings at different hours.
+
+    ``hours`` defaults to the full 24; pass e.g. ``(13,)`` for one
+    near-peak snapshot (the ``sweep/metro_256cell`` benchmark). Returns
+    hour-major instances (cells adjacent within an hour — group-major up to
+    domain order) and matching
+    ``{"step", "hour", "cell", "domain", "link"}`` metadata.
+    """
+    hours = list(range(24)) if hours is None else [int(h) % 24 for h in hours]
+    if n_cells < n_domains:
+        raise ValueError(f"n_cells={n_cells} < n_domains={n_domains}")
+    pools = multi_cell_pools(n_cells, m=m, seed=seed)
+    rng = np.random.default_rng(seed + 7)
+    domain = (np.arange(n_cells) * n_domains) // n_cells
+    dom_size = np.bincount(domain, minlength=n_domains)
+    # one shared link_capacity array: merge_coupling identifies a common
+    # link set by array identity, so every instance must reference THIS one
+    link_cap = np.tile(dom_size * float(backhaul_per_cell), len(hours))
+    L = len(link_cap)
+    phase = rng.uniform(-2.0, 4.0, size=n_cells)
+    n_paper = len(semantics.PAPER_APPS)
+    insts, meta = [], []
+    for step, h in enumerate(hours):
+        day = np.sin(np.pi * ((h - 6.0 - phase) % 24.0) / 12.0)
+        rate = base_rate + (peak_rate - base_rate) * np.maximum(0.0, day)
+        for c in range(n_cells):
+            k = int(rng.poisson(rate[c]))
+            app_idx = rng.integers(0, n_paper, size=k)
+            link = step * n_domains + int(domain[c])
+            row = np.zeros((1, L), bool)
+            row[0, link] = True
+            insts.append(build_instance(
+                pools[c], _tasks_from_apps(app_idx, acc, lat,
+                                           np.full(k, 5.0)),
+                coupling=CouplingSpec(link_cap, row)))
+            meta.append(dict(step=step, hour=h, cell=c,
+                             domain=int(domain[c]), link=link))
     return insts, meta
 
 

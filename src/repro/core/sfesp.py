@@ -5,6 +5,24 @@ resource pool and a task set, by (i) solving Eq. (2) for z*_τ on both the
 semantic and the agnostic accuracy curve, and (ii) tabulating l_τ(z*, s) over
 the enumerated allocation grid. Also hosts the shared solution validator used
 by every solver, the property tests, and the serving admission controller.
+
+The second half of this module is the STACKING CACHE the batched engines run
+on — three layers, each reusing the one below (lifecycle diagram in
+``docs/ARCHITECTURE.md``):
+
+1. **Host stack** — :func:`stack_instances` pads a batch into shared
+   ``(B, Tmax, A)`` buffers (optionally group-major for the sharded solve);
+   :func:`restack` refills them in place when only tasks/capacities change.
+2. **Device half** — :func:`device_stack` memoizes the uploaded solver
+   inputs ON the stacked batch; :func:`empty_device_stack` +
+   :meth:`DeviceStack.update_rows` give the serving loop a delta-scatter
+   path that re-uploads only dirty task rows.
+3. **Sharded half** — :func:`device_stack_sharded` lays a group-major batch
+   out across a device mesh (one contiguous block of coupling groups per
+   shard) for ``greedy.solve_greedy_sharded``.
+
+Cache keys and invalidation triggers are documented on the "Device half"
+section banner below.
 """
 
 from __future__ import annotations
@@ -26,7 +44,9 @@ from .types import (CouplingSpec, ProblemInstance, ResourcePool, Solution,
 __all__ = ["build_instance", "check_solution", "objective_value",
            "default_z_grid", "stack_instances", "restack", "next_pow2",
            "task_link_load", "merge_coupling", "lexicographic_cost",
-           "DeviceStack", "device_stack", "empty_device_stack"]
+           "group_major_order", "group_offsets_of",
+           "DeviceStack", "device_stack", "empty_device_stack",
+           "ShardedStack", "shard_plan", "device_stack_sharded"]
 
 
 def next_pow2(n: int) -> int:
@@ -130,6 +150,44 @@ def merge_coupling(insts: Sequence[ProblemInstance]) -> CouplingSpec | None:
     return CouplingSpec(ref.link_capacity, inc, ref.names)
 
 
+def group_major_order(insts: Sequence[ProblemInstance]) -> np.ndarray:
+    """Permutation putting every coupling group's instances contiguous.
+
+    The stable sort by group id (``CouplingSpec.groups`` on the merged batch
+    spec): instances of one connected component become a contiguous span of
+    the batch axis while their RELATIVE order — the cell-major order the
+    coupled round's first-cell tie-break scans — is preserved, so solving
+    the permuted batch yields bit-identical per-instance decisions.
+    Uncoupled instances are singleton groups keyed by their own index.
+    """
+    insts = tuple(insts)
+    coupling = merge_coupling(insts)
+    if coupling is None:
+        return np.arange(len(insts), dtype=np.int64)
+    return np.argsort(coupling.groups(), kind="stable").astype(np.int64)
+
+
+def group_offsets_of(coupling: CouplingSpec | None,
+                     batch_size: int) -> np.ndarray:
+    """Span boundaries (G+1,) of a GROUP-MAJOR batch's coupling groups.
+
+    Requires the batch to already be in group-major order (each connected
+    component contiguous — e.g. after :func:`group_major_order`); raises
+    otherwise, because silently returning spans of an interleaved batch
+    would let a sharded solve split a coupling group across devices.
+    """
+    if coupling is None:
+        return np.arange(batch_size + 1, dtype=np.int64)
+    gid = coupling.groups()
+    changed = np.r_[True, gid[1:] != gid[:-1]]
+    starts = np.flatnonzero(changed)
+    if len(np.unique(gid)) != len(starts):
+        raise ValueError(
+            "batch is not group-major: a coupling group occupies "
+            "non-contiguous rows; permute via group_major_order first")
+    return np.r_[starts, batch_size].astype(np.int64)
+
+
 def _check_shared_grid(insts: Sequence[ProblemInstance], grid: np.ndarray,
                        what: str):
     for inst in insts:
@@ -183,7 +241,8 @@ def _fill_stacked(st: StackedInstances, insts: tuple[ProblemInstance, ...],
 
 
 def stack_instances(insts: Sequence[ProblemInstance], *,
-                    tmax: int | None = None) -> StackedInstances:
+                    tmax: int | None = None,
+                    group_major: bool = False) -> StackedInstances:
     """Stack instances into one padded batch for the sweep engine.
 
     Instances must share the allocation grid (identical ``pool.levels``);
@@ -193,10 +252,21 @@ def stack_instances(insts: Sequence[ProblemInstance], *,
     natural padding target (must be >= the largest task count) — the grouped
     dispatcher passes power-of-two buckets so repeated sweeps share device
     programs.
+
+    ``group_major=True`` permutes the instances so every coupling group is a
+    contiguous span of the batch axis (the sharded solve's layout; see
+    :class:`~repro.core.types.StackedInstances`), recording ``perm`` (stacked
+    row → input index) and ``group_offsets`` on the result. Per-instance
+    decisions are unaffected — the stable permutation preserves each group's
+    internal cell order, hence the coupled tie-breaks.
     """
     insts = tuple(insts)
     if not insts:
         raise ValueError("stack_instances needs at least one instance")
+    perm = None
+    if group_major:
+        perm = group_major_order(insts)
+        insts = tuple(insts[i] for i in perm)
     grid = insts[0].grid
     _check_shared_grid(insts[1:], grid, "stacked")
     B = len(insts)
@@ -223,6 +293,9 @@ def stack_instances(insts: Sequence[ProblemInstance], *,
         link_load_agnostic=np.zeros((B, tmax)),
         coupling=merge_coupling(insts),
     )
+    if group_major:
+        st = dataclasses.replace(
+            st, perm=perm, group_offsets=group_offsets_of(st.coupling, B))
     _fill_stacked(st, insts, n_tasks)
     return st
 
@@ -239,13 +312,20 @@ def restack(stacked: StackedInstances,
     (otherwise a ValueError asks the caller to re-stack at a larger bucket).
 
     The returned :class:`StackedInstances` SHARES the buffers of ``stacked``,
-    which must not be used afterwards.
+    which must not be used afterwards. A group-major batch stays group-major:
+    the new instances are re-permuted against their OWN coupling topology
+    (which may differ from the old batch's), and ``perm``/``group_offsets``
+    are refreshed accordingly.
     """
     insts = tuple(insts)
     if len(insts) != stacked.batch_size:
         raise ValueError(
             f"restack needs the original batch size {stacked.batch_size}, "
             f"got {len(insts)} instances; re-stack instead")
+    perm = None
+    if stacked.group_major:
+        perm = group_major_order(insts)
+        insts = tuple(insts[i] for i in perm)
     _check_shared_grid(insts, stacked.grid, "restacked")
     n_tasks = np.array([inst.num_tasks for inst in insts], np.int64)
     if n_tasks.max(initial=0) > stacked.max_tasks:
@@ -266,14 +346,40 @@ def restack(stacked: StackedInstances,
     stacked.task_mask.fill(False)
     stacked.link_load.fill(0.0)
     stacked.link_load_agnostic.fill(0.0)
-    st = dataclasses.replace(stacked, instances=insts, num_tasks=n_tasks,
-                             coupling=merge_coupling(insts))
+    coupling = merge_coupling(insts)
+    st = dataclasses.replace(
+        stacked, instances=insts, num_tasks=n_tasks, coupling=coupling,
+        perm=perm,
+        group_offsets=(group_offsets_of(coupling, len(insts))
+                       if stacked.group_major else None))
     _fill_stacked(st, insts, n_tasks)
     return st
 
 
 # ---------------------------------------------------------------------------
 # Device half of the stacking cache
+#
+# Contracts at a glance (the serving fast path and the sharded solve both
+# build on these; tests/test_device_stack.py pins them):
+#
+# * CACHE KEYS — ``device_stack`` memoizes per stacked-batch OBJECT, keyed by
+#   ``(semantic, pad_batch_to)``; ``device_stack_sharded`` likewise, keyed by
+#   ``(mesh, axis, semantic)``. A cache entry lives exactly as long as the
+#   stacked batch object does.
+# * INVALIDATION / REBUILD TRIGGERS — ``restack`` returns a NEW
+#   StackedInstances (fresh, empty caches), so any in-place refill
+#   invalidates the device halves by construction; mutating a stacked
+#   batch's buffers after its first solve is undefined. A
+#   ``DeviceStack.update_rows`` call whose slot index exceeds the Tmax
+#   bucket raises — the caller must rebuild at a larger bucket (the serving
+#   session does; see ``serving.admission._ServeSession`` for the
+#   session-level triggers: batch size, algorithm, coupling/pools identity,
+#   latency-scale change).
+# * DIRTY-BIT ACCUMULATION — delta consumers (``CellRuntime.sync_slots`` →
+#   ``SESM.solve_slots``) accumulate dirty slots until a LIVE solve consumes
+#   them; a skipped tick must carry its deltas forward. ``update_rows``
+#   itself is stateless per call: it scatters exactly the rows it is given,
+#   pow2-bucketed, with out-of-bucket padding indices dropped on device.
 # ---------------------------------------------------------------------------
 
 @functools.partial(jax.jit, donate_argnums=(0, 1, 2))
@@ -497,6 +603,184 @@ def empty_device_stack(grid: np.ndarray, price: np.ndarray,
         link_cap=link[0], incidence=link[1], group=link[2],
         semantic=bool(semantic), batch_size=B,
     )
+
+
+# --------------------------------------------------------------- sharded half
+
+@dataclasses.dataclass
+class ShardedStack:
+    """Group-major device half laid out across a 1-D device mesh.
+
+    The metro-scale layout: the batch axis is split into ``num_shards``
+    equal blocks of ``shard_rows`` rows, every coupling group lives WHOLLY
+    inside one block (``shard_plan``), and each per-cell table is placed
+    with a ``NamedSharding`` that puts block ``s`` on mesh device ``s``.
+    ``greedy.solve_greedy_sharded`` then runs the unmodified coupled batch
+    core per shard under ``shard_map`` — no collective appears in the round,
+    so every shard's admission ``while_loop`` converges independently (a
+    congested group never serializes the fleet).
+
+    ``group`` holds shard-LOCAL group ids (each group's local span start),
+    ``row_of`` maps every padded row back to its stacked-batch row (``-1``
+    marks inert balance padding: never-alive, unit-capacity, link-free).
+    Built/memoized per stacked batch via :func:`device_stack_sharded`.
+    """
+
+    mesh: object                     # jax.sharding.Mesh
+    axis: str                        # mesh axis the batch is split over
+    grid: jax.Array                  # (A, m) replicated
+    cost: jax.Array                  # (A,) replicated
+    price: jax.Array                 # (B', m) sharded
+    capacity: jax.Array              # (B', m) sharded
+    lat_ok: jax.Array                # (B', Tmax, A) sharded
+    alive0: jax.Array                # (B', Tmax) sharded
+    link_load: jax.Array             # (B', Tmax) sharded
+    link_cap: jax.Array              # (L,) replicated
+    incidence: jax.Array             # (B', L) sharded
+    group: jax.Array                 # (B',) shard-local group ids
+    row_of: np.ndarray               # (B',) stacked row per padded row, -1 pad
+    batch_size: int                  # real B
+    shard_rows: int                  # rows per shard (B' / num_shards)
+    groups_per_shard: np.ndarray     # (num_shards,) assigned group counts
+
+    @property
+    def num_shards(self) -> int:
+        return len(self.groups_per_shard)
+
+    @property
+    def max_tasks(self) -> int:
+        return self.lat_ok.shape[1]
+
+
+def shard_plan(group_offsets: np.ndarray,
+               n_shards: int) -> tuple[list[list[int]], np.ndarray]:
+    """Balanced groups→shards assignment: largest group first, into the
+    currently least-loaded shard (LPT scheduling). Returns the per-shard
+    group-index lists and the per-shard row loads; the device block size is
+    ``loads.max()`` and lighter shards are padded with inert rows. Groups
+    are never split — a coupling group is the atomic unit of parallelism.
+    """
+    sizes = np.diff(np.asarray(group_offsets, np.int64))
+    shards: list[list[int]] = [[] for _ in range(n_shards)]
+    loads = np.zeros(n_shards, np.int64)
+    for g in np.argsort(-sizes, kind="stable"):
+        s = int(np.argmin(loads))
+        shards[s].append(int(g))
+        loads[s] += int(sizes[g])
+    return shards, loads
+
+
+def _group_major_view(stacked: StackedInstances
+                      ) -> tuple[np.ndarray, np.ndarray]:
+    """(order, offsets) presenting ``stacked`` in group-major order.
+
+    Identity order when the batch already carries the layout (or is
+    uncoupled); otherwise the stable group permutation is derived on the
+    fly so plainly-stacked batches can still dispatch sharded.
+    """
+    B = stacked.batch_size
+    if stacked.group_major:
+        return np.arange(B, dtype=np.int64), \
+            np.asarray(stacked.group_offsets, np.int64)
+    coupling = stacked.coupling
+    if coupling is None or not bool(coupling.incidence.any()):
+        return np.arange(B, dtype=np.int64), np.arange(B + 1, dtype=np.int64)
+    gid = coupling.groups()
+    order = np.argsort(gid, kind="stable").astype(np.int64)
+    gs = gid[order]
+    starts = np.flatnonzero(np.r_[True, gs[1:] != gs[:-1]])
+    return order, np.r_[starts, B].astype(np.int64)
+
+
+def device_stack_sharded(stacked: StackedInstances, mesh, *,
+                         semantic: bool = True,
+                         axis: str = "cells") -> ShardedStack:
+    """The memoized SHARDED device half of ``stacked`` for one solver mode.
+
+    Same cache discipline as :func:`device_stack` (entry keyed by
+    ``(mesh, axis, semantic)`` on the stacked batch object; ``restack``
+    invalidates by returning a new object), but the batch axis is permuted
+    group-major, balanced over ``mesh.shape[axis]`` blocks (``shard_plan``),
+    padded with inert rows to a uniform block size, and uploaded with a
+    block-cyclic ``NamedSharding`` so shard ``s`` of the solve reads only
+    device ``s``'s rows. Uncoupled batches shard as singleton groups over a
+    single dummy link of infinite budget (bit-identical admissions — an
+    all-zero incidence row never constrains).
+    """
+    cache = stacked.__dict__.get("_sharded_half")
+    if cache is None:
+        cache = {}
+        object.__setattr__(stacked, "_sharded_half", cache)
+    key = (mesh, axis, bool(semantic))
+    if key in cache:
+        return cache[key]
+
+    order, offsets = _group_major_view(stacked)
+    n_shards = int(mesh.shape[axis])
+    shards, loads = shard_plan(offsets, n_shards)
+    rows = max(1, int(loads.max()))
+    bp = n_shards * rows
+
+    row_of = np.full(bp, -1, np.int64)
+    local_gid = np.zeros(bp, np.int64)
+    for s, group_list in enumerate(shards):
+        pos = s * rows
+        for g in group_list:
+            span = order[offsets[g]:offsets[g + 1]]
+            n = len(span)
+            row_of[pos:pos + n] = span
+            local_gid[pos:pos + n] = pos - s * rows
+            pos += n
+        # inert padding rows: singleton groups that never admit
+        local_gid[pos:(s + 1) * rows] = np.arange(pos, (s + 1) * rows) - s * rows
+
+    lat_ok, alive0, load = _solver_tables(stacked, semantic)
+    coupling = stacked.coupling
+    coupled = coupling is not None and bool(coupling.incidence.any())
+    if coupled:
+        link_cap = np.asarray(coupling.link_capacity, np.float64)
+        inc = coupling.incidence
+    else:
+        # one dummy link nobody traverses keeps the coupled core's per-link
+        # reductions well-shaped without constraining anything
+        link_cap = np.array([np.inf])
+        inc = np.zeros((stacked.batch_size, 1), bool)
+
+    live = row_of >= 0
+    src = np.clip(row_of, 0, None)
+
+    def pad(table, fill):
+        out = table[src].copy()
+        out[~live] = fill
+        return out
+
+    from repro.distributed.sharding import named_sharding_for
+    rules = {"cells": axis}
+
+    def put(host, logical):
+        arr = jnp.asarray(host)
+        return jax.device_put(
+            arr, named_sharding_for(arr.shape, logical, mesh, rules))
+
+    shd = ShardedStack(
+        mesh=mesh, axis=axis,
+        grid=put(stacked.grid, (None, None)),
+        cost=put(lexicographic_cost(stacked.grid), (None,)),
+        price=put(pad(stacked.price, 0.0), ("cells", None)),
+        # unit capacity keeps the padded rows' gradient NaN-free, exactly as
+        # device_stack's pad_batch_to convention
+        capacity=put(pad(stacked.capacity, 1.0), ("cells", None)),
+        lat_ok=put(pad(lat_ok, False), ("cells", None, None)),
+        alive0=put(pad(alive0, False), ("cells", None)),
+        link_load=put(pad(load, 0.0), ("cells", None)),
+        link_cap=put(link_cap, (None,)),
+        incidence=put(pad(inc, False), ("cells", None)),
+        group=put(local_gid, ("cells",)),
+        row_of=row_of, batch_size=stacked.batch_size, shard_rows=rows,
+        groups_per_shard=np.array([len(g) for g in shards], np.int64),
+    )
+    cache[key] = shd
+    return shd
 
 
 def objective_value(inst: ProblemInstance, admitted: np.ndarray,

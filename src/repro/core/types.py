@@ -245,6 +245,19 @@ class StackedInstances:
     :func:`repro.core.sfesp.restack` (same grid/batch size, task counts
     within ``Tmax`` — the refilled batch shares these buffers and the old
     object must not be used afterwards).
+
+    **Group-major layout** (``stack_instances(..., group_major=True)``): the
+    instances are permuted so every coupling group (connected component of
+    the cell–link graph, ``CouplingSpec.groups``) occupies a CONTIGUOUS span
+    of the batch axis. ``group_offsets`` carries the span boundaries and
+    ``perm`` maps each stacked row back to its position in the caller's
+    input order. The permutation is the stable sort by group id, so the
+    within-group (cell-major) order — and therefore the coupled round's
+    first-cell tie-break — is preserved: decisions per instance are
+    bit-identical to the unpermuted layout. This is the layout the sharded
+    metro-scale solve (``greedy.solve_greedy_sharded``) consumes: a
+    contiguous group is a shardable unit, so independent groups dispatch to
+    different devices of a mesh without any cross-device traffic.
     """
 
     instances: tuple[ProblemInstance, ...]
@@ -267,6 +280,12 @@ class StackedInstances:
     link_load: np.ndarray | None = None           # (B, Tmax)
     link_load_agnostic: np.ndarray | None = None  # (B, Tmax)
     coupling: CouplingSpec | None = None          # merged (B, L) batch view
+    # group-major layout metadata (None on plainly-stacked batches):
+    # perm[b] = input-order index of the instance stored at stacked row b;
+    # group_offsets (G+1,) = contiguous [start, end) span of each coupling
+    # group along the batch axis, ascending, group_offsets[-1] == B
+    perm: np.ndarray | None = None                # (B,) int
+    group_offsets: np.ndarray | None = None       # (G+1,) int
 
     @property
     def batch_size(self) -> int:
@@ -283,6 +302,17 @@ class StackedInstances:
     @property
     def m(self) -> int:
         return self.grid.shape[1]
+
+    @property
+    def group_major(self) -> bool:
+        return self.group_offsets is not None
+
+    @property
+    def num_groups(self) -> int:
+        """Coupling groups of the batch (B when no layout metadata)."""
+        if self.group_offsets is None:
+            return self.batch_size
+        return len(self.group_offsets) - 1
 
 
 @dataclasses.dataclass(frozen=True)

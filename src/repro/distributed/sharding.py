@@ -40,6 +40,9 @@ DEFAULT_RULES = {
     "rnn": "model",
     "seq_sp": None,          # → "model" under Megatron-SP (launch --opt)
     "fsdp": None,            # → ("pod", "data") for ZeRO-3 MoE weights
+    "cells": "cells",        # metro sharded solve: batch axis of the
+                             # group-major coupled stack (launch.mesh
+                             # make_cells_mesh / greedy.solve_greedy_sharded)
 }
 
 

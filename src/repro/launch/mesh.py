@@ -14,7 +14,7 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_test_mesh", "HW"]
+__all__ = ["make_production_mesh", "make_test_mesh", "make_cells_mesh", "HW"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -26,6 +26,16 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_test_mesh(n_data: int = 2, n_model: int = 4):
     """Small mesh for CI-scale sharding tests (8 fake devices)."""
     return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+def make_cells_mesh(n_devices: int | None = None, *, axis: str = "cells"):
+    """1-D mesh over the local devices for the metro-scale sharded coupled
+    solve (``core.greedy.solve_greedy_sharded``): the batch axis is split
+    over ``axis``, one block of coupling groups per device. Defaults to all
+    visible devices; pass ``n_devices`` to restrict (must divide nothing —
+    any count works, lighter shards are padded)."""
+    n = len(jax.devices()) if n_devices is None else int(n_devices)
+    return jax.make_mesh((n,), (axis,))
 
 
 class HW:

@@ -17,7 +17,7 @@ import numpy as np
 from repro.core import (CouplingSpec, ResourcePool, check_solution,
                         default_z_grid, make_allocation_grid, next_pow2,
                         restack, semantics, solve, solve_greedy_batch,
-                        stack_instances)
+                        solve_greedy_sharded, stack_instances)
 from repro.core import latency as lat_mod
 from repro.core.greedy import solve_device_batch
 from repro.core.sfesp import DeviceStack, empty_device_stack
@@ -29,6 +29,8 @@ __all__ = ["SliceDecision", "SESM"]
 
 @dataclasses.dataclass
 class SliceDecision:
+    """One task's re-slice outcome: admission, compression z, slice."""
+
     request: SliceRequest
     admitted: bool
     z: float
@@ -85,12 +87,25 @@ class _ServeSession:
 
 
 class SESM:
+    """The SESM xApp: SF-ESP admission over live request sets.
+
+    Front doors: :meth:`slice` (one cell, one solve), :meth:`solve_batch`
+    (many request sets — what-if studies or the cells of one coupled
+    deployment — in ONE device program, restack-cached across calls) and
+    :meth:`solve_slots` (the device-resident delta fast path over sticky
+    solver-row slots). A configured ``mesh`` routes ``solve_batch``
+    through the sharded metro solve (``core.greedy.solve_greedy_sharded``).
+    """
+
     def __init__(self, pool: ResourcePool, sdla: SDLA | None = None,
-                 backend: str = "numpy", inner: str = "jnp"):
+                 backend: str = "numpy", inner: str = "jnp", mesh=None):
         self.pool = pool
         self.sdla = sdla or SDLA()
         self.backend = backend
         self.inner = inner
+        # metro mode: a 1-D "cells" device mesh routes solve_batch through
+        # the sharded coupled solve (launch.mesh.make_cells_mesh)
+        self.mesh = mesh
         self.algorithm = {"semantic": True, "flexible": True}
         # padded stacking buffers reused across solve_batch calls (the
         # closed-loop re-slice case: only tasks/capacities change per call)
@@ -178,7 +193,15 @@ class SESM:
             stacked = stack_instances(insts, tmax=next_pow2(tneed))
             self.fresh_stacks += 1
         self._batch_cache = stacked
-        sols = solve_greedy_batch(stacked, **self.algorithm)
+        if self.mesh is not None:
+            # metro mode: shard the coupled solve over the configured mesh
+            # (decisions identical to the single-device engine; the sharded
+            # front door re-derives the group-major permutation itself and
+            # returns solutions in this batch's row order)
+            sols = solve_greedy_sharded(stacked, mesh=self.mesh,
+                                        inner=self.inner, **self.algorithm)
+        else:
+            sols = solve_greedy_batch(stacked, **self.algorithm)
         for i, (rs, inst, sol) in enumerate(zip(request_sets, insts, sols)):
             out[i] = self._decisions(rs, inst, sol, cell=i)
         return out

@@ -21,6 +21,35 @@ bounded retry queue (drop after ``max_retries`` rejections), and
 pinned as a warm-start accuracy bound. Enforcing solver decisions in a live
 loop rather than per-snapshot follows the O-RAN slicing-enforcement
 literature (arXiv:2103.10277, arXiv:2202.06439).
+
+Cache lifecycle (what persists across ticks, and what invalidates it):
+
+* ``SESM._batch_cache`` — the padded HOST stack of the previous
+  :meth:`MultiCellEngine.reslice_rebuild`. Key: (batch size, pow2 Tmax
+  bucket). Refilled in place via ``core.sfesp.restack`` when the key
+  matches (counter ``sesm.restacks``); rebuilt fresh — and therefore with
+  fresh device halves — when the batch size changes or a cell's task count
+  overflows the bucket (``sesm.fresh_stacks``).
+* The DEVICE halves — ``core.sfesp.device_stack`` (single-device) and
+  ``device_stack_sharded`` (metro mesh) — are memoized ON the host stack
+  object, so a restack (a NEW object sharing the old buffers) implicitly
+  drops them; see the "Device half" section of ``core/sfesp.py`` for the
+  cache keys.
+* ``SESM._serve_session`` — the fully device-resident state of the
+  :meth:`MultiCellEngine.reslice` fast path. Dirty slot indices reported by
+  ``CellRuntime.sync_slots(consume=True)`` ACCUMULATE in
+  ``_ServeSession.pending`` until a live solve consumes them (a tick with
+  zero live requests keeps them pending); only those rows are recomputed on
+  the host and scattered into the device tables (``sesm.delta_rows``). The
+  session rebuilds when the batch size / Tmax bucket / algorithm / coupling
+  / pools identity / SDLA latency scale changes.
+
+With a device ``mesh`` configured the engine is in METRO mode: every
+re-slice routes through the full-rebuild path and
+``core.greedy.solve_greedy_sharded`` splits the coupled solve's batch axis
+over the mesh (one block of coupling groups per device). The delta fast
+path stays single-device — its scatter targets one ``DeviceStack`` — so
+metro mode trades the per-tick delta upload for solve parallelism.
 """
 
 from __future__ import annotations
@@ -48,12 +77,17 @@ class MultiCellEngine:
         per cell. ``None`` re-slices the cells as independent what-ifs
         (still one device program).
       max_retries: per-request rejection budget of every cell's retry queue.
+      mesh: optional 1-D "cells" device mesh
+        (``launch.mesh.make_cells_mesh``). When set, re-slices solve through
+        ``core.greedy.solve_greedy_sharded`` — one block of coupling groups
+        per device — instead of the single-device engine (metro mode; see
+        the module docstring). Decisions are identical either way.
     """
 
     def __init__(self, pools: list[ResourcePool], *,
                  coupling: CouplingSpec | None = None, lat_params=None,
                  max_batch: int = 8, max_retries: int = 2,
-                 solver_backend: str = "numpy"):
+                 solver_backend: str = "numpy", mesh=None):
         pools = list(pools)
         if not pools:
             raise ValueError("MultiCellEngine needs at least one cell pool")
@@ -71,7 +105,8 @@ class MultiCellEngine:
         self.pools = pools
         self.coupling = coupling
         self.sdla = SDLA(lat_params or LatencyParams())
-        self.sesm = SESM(pools[0], self.sdla, backend=solver_backend)
+        self.sesm = SESM(pools[0], self.sdla, backend=solver_backend,
+                         mesh=mesh)
         self.cells = [CellRuntime(p, self.sdla, max_batch=max_batch,
                                   max_retries=max_retries, cell=c)
                       for c, p in enumerate(pools)]
@@ -115,7 +150,14 @@ class MultiCellEngine:
         nothing) → apply per-cell (evictions flagged, rejected requests
         re-queued). Decisions are identical to the full-rebuild
         :meth:`reslice_rebuild` path; ``sesm.fresh_stacks``/``restacks``/
-        ``delta_rows`` expose the session-cache health."""
+        ``delta_rows`` expose the session-cache health.
+
+        In metro mode (a ``mesh`` was configured) this delegates to
+        :meth:`reslice_rebuild`: the delta fast path's scatter targets one
+        single-device ``DeviceStack``, while the mesh solves the rebuilt
+        batch sharded — same decisions, different residency trade-off."""
+        if self.sesm.mesh is not None:
+            return self.reslice_rebuild()
         rows, dirty = [], []
         for cell in self.cells:
             r, d = cell.sync_slots(consume=True)

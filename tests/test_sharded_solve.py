@@ -1,0 +1,228 @@
+"""Metro-scale sharded coupled solve: group-major layout + shard_map.
+
+Fast half (single device): the group-major permutation is a pure relabeling
+— solving the permuted stack yields bit-identical per-instance decisions
+(jnp AND Pallas inners, surviving a restack), ``solve_greedy_sharded`` on
+one device IS ``solve_greedy_batch`` (the acceptance fallback), and the
+shard planner never splits a coupling group. Slow half: subprocesses with 8
+fake host devices run the REAL shard_map path and the metro serving engine,
+asserting decisions against the single-device solve and the coupled oracle.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import (scenarios, solve_coupled_ref, solve_greedy_batch,
+                        solve_greedy_sharded, stack_instances)
+from repro.core.sfesp import (group_major_order, group_offsets_of, restack,
+                              shard_plan)
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _trace(n_cells=4, horizon=3, seed=11, backhaul=2.0):
+    insts, _ = scenarios.multi_cell_trace(n_cells, horizon, seed=seed,
+                                          shared_backhaul=backhaul)
+    return insts
+
+
+def _assert_same(a, b):
+    assert np.array_equal(a.admitted, b.admitted)
+    assert np.array_equal(a.alloc, b.alloc)
+    assert np.array_equal(a.z, b.z)
+    assert abs(a.objective - b.objective) < 1e-9
+
+
+# ---------------------------------------------------------------- layout
+@pytest.mark.parametrize("inner", ["jnp", "pallas"])
+def test_group_major_layout_preserves_decisions(inner):
+    """Property: permuting a coupled batch group-major (stable, so each
+    group's internal cell order — the coupled tie-break — is unchanged)
+    preserves every instance's decisions bit-for-bit."""
+    for seed in (0, 7, 23):
+        insts = _trace(n_cells=3, horizon=4, seed=seed, backhaul=1.5)
+        base = solve_greedy_batch(insts, inner=inner)
+        st = stack_instances(insts, group_major=True)
+        assert st.group_major and st.num_groups == 4
+        # stacked rows are a permutation of the input; spans are contiguous
+        assert sorted(map(int, st.perm)) == list(range(len(insts)))
+        assert int(st.group_offsets[-1]) == len(insts)
+        sols = solve_greedy_batch(st, inner=inner)
+        for b in range(st.batch_size):
+            _assert_same(sols[b], base[int(st.perm[b])])
+
+
+@pytest.mark.parametrize("inner", ["jnp", "pallas"])
+def test_group_major_restack_preserves_decisions(inner):
+    """Restacking a group-major batch with NEW instances re-derives the
+    permutation against the new coupling and still bit-matches the plain
+    solve of those instances."""
+    st = stack_instances(_trace(seed=1), group_major=True)
+    solve_greedy_batch(st, inner=inner)              # warm the device half
+    fresh = _trace(seed=99)
+    st2 = restack(st, fresh)
+    assert st2.group_major and st2.perm is not None
+    base = solve_greedy_batch(fresh, inner=inner)
+    sols = solve_greedy_batch(st2, inner=inner)
+    for b in range(st2.batch_size):
+        _assert_same(sols[b], base[int(st2.perm[b])])
+
+
+def test_group_offsets_rejects_interleaved_batch():
+    insts = _trace(n_cells=2, horizon=2)
+    interleaved = [insts[0], insts[2], insts[1], insts[3]]  # groups 0,1,0,1
+    st = stack_instances(interleaved)
+    with pytest.raises(ValueError, match="not group-major"):
+        group_offsets_of(st.coupling, st.batch_size)
+    order = group_major_order(interleaved)
+    regrouped = [interleaved[i] for i in order]
+    offs = group_offsets_of(stack_instances(regrouped).coupling, 4)
+    assert list(offs) == [0, 2, 4]
+
+
+def test_shard_plan_balances_and_never_splits_groups():
+    offsets = np.array([0, 5, 6, 9, 10, 16, 18])     # sizes 5,1,3,1,6,2
+    shards, loads = shard_plan(offsets, 3)
+    assert sorted(g for s in shards for g in s) == list(range(6))
+    assert int(loads.sum()) == 18
+    assert int(loads.max()) == 6                     # LPT: 6 | 5+1 | 3+2+1
+    # every group lands on exactly one shard
+    assert sum(len(s) for s in shards) == 6
+
+
+# ------------------------------------------------------------- fallback
+def test_sharded_single_device_falls_back_to_batch_solve():
+    """Acceptance: with one device the sharded front door returns the
+    single-device solve's decisions, in input order, coupled and not."""
+    for insts in (_trace(seed=5), _trace(seed=5, backhaul=None)):
+        base = solve_greedy_batch(insts)
+        sh = solve_greedy_sharded(insts)             # 1 visible device
+        for a, b in zip(base, sh):
+            _assert_same(b, a)
+
+
+# ----------------------------------------------------------- metro trace
+def test_metro_diurnal_trace_shape_and_groups():
+    insts, meta = scenarios.metro_diurnal_trace(
+        n_cells=24, n_domains=6, hours=(3, 13), seed=0)
+    assert len(insts) == 48 and len(meta) == 48
+    # domains are contiguous blocks of 4 cells; one link per (hour, domain)
+    assert all(m["domain"] == m["cell"] * 6 // 24 for m in meta)
+    assert all(m["link"] == m["step"] * 6 + m["domain"] for m in meta)
+    st = stack_instances(insts, group_major=True)
+    assert st.num_groups == 12                       # hours x domains
+    # diurnal curve: the 13:00 snapshot carries more traffic than 03:00
+    night = sum(insts[i].num_tasks for i, m in enumerate(meta)
+                if m["step"] == 0)
+    day = sum(insts[i].num_tasks for i, m in enumerate(meta)
+              if m["step"] == 1)
+    assert day > night
+
+
+def test_metro_trace_matches_coupled_oracle_per_domain():
+    insts, meta = scenarios.metro_diurnal_trace(
+        n_cells=12, n_domains=3, hours=(13,), seed=1)
+    sols = solve_greedy_sharded(insts)
+    for d in range(3):
+        idxs = [i for i, m in enumerate(meta) if m["domain"] == d]
+        refs = solve_coupled_ref([insts[i] for i in idxs])
+        for i, ref in zip(idxs, refs):
+            assert np.array_equal(sols[i].admitted, ref.admitted)
+
+
+# ------------------------------------------------- real mesh (subprocess)
+def _run(body: str):
+    prog = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, numpy as np
+        from repro.core import (scenarios, solve_coupled_ref,
+                                solve_greedy_batch, solve_greedy_sharded,
+                                stack_instances)
+        from repro.core.sfesp import device_stack_sharded
+        from repro.launch.mesh import make_cells_mesh
+        assert len(jax.devices()) == 8
+        mesh = make_cells_mesh()
+    """) + textwrap.dedent(body)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    r = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                       text=True, env=env, timeout=600)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    return r.stdout
+
+
+@pytest.mark.slow
+def test_sharded_solve_matches_batch_on_8_devices():
+    """The shard_map path (8 fake devices, uneven group counts, both
+    inners) bit-matches the single-device batched solve."""
+    _run("""
+        cases = [
+            (8, dict(seed=11, shared_backhaul=2.0)),  # 8 groups of 4
+            (3, dict(seed=2, shared_backhaul=1.5)),   # 3 groups on 8 devs
+            (8, dict(seed=7)),                        # uncoupled singletons
+        ]
+        for horizon, kw in cases:
+            insts, _ = scenarios.multi_cell_trace(4, horizon, **kw)
+            base = solve_greedy_batch(insts)
+            for inner in ("jnp", "pallas"):
+                sh = solve_greedy_sharded(insts, mesh=mesh, inner=inner)
+                for a, b in zip(base, sh):
+                    assert np.array_equal(a.admitted, b.admitted), inner
+                    assert np.array_equal(a.alloc, b.alloc), inner
+        # memoized sharded half: re-solving the same stack reuses it
+        st = stack_instances(insts, group_major=True)
+        s1 = solve_greedy_sharded(st, mesh=mesh)
+        assert "_sharded_half" in st.__dict__
+        s2 = solve_greedy_sharded(st, mesh=mesh)
+        assert all(np.array_equal(a.admitted, b.admitted)
+                   for a, b in zip(s1, s2))
+        print("sharded == batch on 8 devices")
+    """)
+
+
+@pytest.mark.slow
+def test_metro_serving_engine_mesh_routing():
+    """MultiCellEngine(mesh=...) re-slices through the sharded solve with
+    decisions identical to the meshless engine, and still bit-matches the
+    coupled oracle on the gathered instances."""
+    _run("""
+        import dataclasses
+        from repro.core import CouplingSpec
+        from repro.serving import MultiCellEngine, SliceRequest
+
+        def req(app, acc, fps):
+            return SliceRequest("object-recognition", "yolox", app,
+                                max_latency_s=0.7, min_accuracy=acc,
+                                jobs_per_sec=fps)
+
+        def build(mesh):
+            pools = scenarios.multi_cell_pools(4, seed=2)
+            spec = CouplingSpec(np.array([1.0, 1.2]),
+                                np.array([[1, 0], [1, 0], [0, 1], [0, 1]],
+                                         bool))
+            eng = MultiCellEngine(pools, coupling=spec, mesh=mesh)
+            for c in range(4):
+                eng.submit(req("coco_bags", 0.35, 8.0), c)
+                eng.submit(req("coco_animals", 0.50, 6.0), c)
+            return eng, pools, spec
+
+        metro, pools, spec = build(mesh)
+        ref_eng, _, _ = build(None)
+        sets = metro.gather()
+        insts = [dataclasses.replace(
+            metro.sdla.build_instance(rs, pools[i]), coupling=spec.row(i))
+            for i, rs in enumerate(sets)]
+        oracle = solve_coupled_ref(insts)
+        md = metro.reslice()            # metro mode -> reslice_rebuild
+        rd = ref_eng.reslice()
+        for cell, (m_ds, r_ds, ref) in enumerate(zip(md, rd, oracle)):
+            assert [d.admitted for d in m_ds] == [d.admitted for d in r_ds]
+            assert [d.admitted for d in m_ds] == \
+                [bool(a) for a in ref.admitted]
+        print("metro engine == single-device engine == oracle")
+    """)

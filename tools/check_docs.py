@@ -1,0 +1,97 @@
+"""Docs consistency gate: links resolve, named code symbols exist.
+
+Scans README.md, ROADMAP.md and docs/*.md for
+
+* relative markdown links — the target file must exist (external URLs,
+  pure anchors, and paths that escape the repo root — e.g. the CI badge's
+  ``../../actions/...`` — are skipped),
+* backticked dotted code symbols starting with ``repro.`` — each must
+  resolve in the tree: the longest importable module prefix is imported
+  and the remainder walked with ``getattr``. This keeps
+  ``docs/ARCHITECTURE.md``'s paper-to-code map honest: renaming
+  ``solve_greedy_sharded`` without updating the doc fails CI.
+
+Run from the repo root: ``PYTHONPATH=src python tools/check_docs.py``.
+Exit status 1 with a per-problem listing on any failure.
+"""
+
+from __future__ import annotations
+
+import importlib
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SYMBOL_RE = re.compile(r"`(repro(?:\.\w+)+)(?:\(\))?`")
+
+
+def doc_files() -> list[pathlib.Path]:
+    files = [ROOT / "README.md", ROOT / "ROADMAP.md"]
+    files += sorted((ROOT / "docs").glob("*.md"))
+    return [f for f in files if f.exists()]
+
+
+def check_links(path: pathlib.Path) -> list[str]:
+    problems = []
+    for target in LINK_RE.findall(path.read_text()):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        resolved = (path.parent / rel).resolve()
+        if ROOT not in resolved.parents and resolved != ROOT:
+            continue                     # escapes the repo (CI badge etc.)
+        if not resolved.exists():
+            problems.append(f"{path.name}: broken link -> {target}")
+    return problems
+
+
+def resolve_symbol(dotted: str) -> bool:
+    parts = dotted.split(".")
+    for cut in range(len(parts), 0, -1):
+        try:
+            obj = importlib.import_module(".".join(parts[:cut]))
+        except ImportError:
+            continue
+        try:
+            for attr in parts[cut:]:
+                obj = getattr(obj, attr)
+        except AttributeError:
+            return False
+        return True
+    return False
+
+
+def check_symbols(path: pathlib.Path) -> list[str]:
+    problems = []
+    for dotted in sorted(set(SYMBOL_RE.findall(path.read_text()))):
+        if not resolve_symbol(dotted):
+            problems.append(f"{path.name}: unresolved symbol `{dotted}`")
+    return problems
+
+
+def main() -> int:
+    problems: list[str] = []
+    files = doc_files()
+    n_links = n_syms = 0
+    for f in files:
+        n_links += len(LINK_RE.findall(f.read_text()))
+        n_syms += len(set(SYMBOL_RE.findall(f.read_text())))
+        problems += check_links(f)
+        problems += check_symbols(f)
+    if problems:
+        print("docs check FAILED:")
+        for p in problems:
+            print(f"  {p}")
+        return 1
+    print(f"docs check OK: {len(files)} files, {n_links} links, "
+          f"{n_syms} unique repro.* symbols resolved")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
