@@ -26,6 +26,11 @@ Poisson traces and multi-cell traces through
     steady-state contract (zero fresh stacks, zero dirty-row scatters, zero
     device-program recompiles after tick 0) and reports the legacy
     full-rebuild tick for comparison,
+  * the fault-plane path — ``serving/degraded_tick_coupled_4cell`` flips the
+    shared backhaul budget every tick (``set_link_budgets`` →
+    ``CouplingSpec.set_budgets`` in place) and ASSERTS that degradation
+    stays on the delta fast path: zero session rebuilds, zero dirty rows,
+    zero recompiles — just one (L,) device refresh per budget change,
 
 plus the host-side stacking fast path (``stack_instances`` vs ``restack`` vs
 the ``delta_restack`` device scatter of a few dirty rows). Decisions are
@@ -280,6 +285,74 @@ def _bench_engine_tick():
             lambda: eng.reslice_rebuild(), iters=3), 1))
 
 
+def _bench_degraded_tick():
+    """Fault-plane hot path: budget-only link degradation between ticks.
+
+    Every tick flips the shared backhaul budget (``set_link_budgets``)
+    before the coupled re-slice. The contract asserted here is that the
+    degradation rides the delta fast path end to end: the in-place
+    ``CouplingSpec.set_budgets`` mutation preserves array identity, so the
+    live ``_ServeSession`` sees a budget-only change and refreshes the (L,)
+    device buffer (``SESM.link_updates``) instead of rebuilding — zero
+    fresh stacks, zero session rebuilds, zero dirty rows (rejected requests
+    re-queue with unchanged slot signatures), zero recompiles.
+    """
+    from repro.core.types import CouplingSpec
+    from repro.serving import MultiCellEngine, SliceRequest
+
+    pools = scenarios.multi_cell_pools(4, seed=1)
+    spec = CouplingSpec(np.array([3.0]), np.ones((4, 1), bool),
+                        names=("backhaul",))
+    # effectively-infinite retries: requests rejected under the squeezed
+    # budget re-queue forever with unchanged slot signatures, so admissions
+    # flip every tick while the dirty-row count stays pinned at zero
+    eng = MultiCellEngine(pools, coupling=spec, max_retries=10**9)
+    mix = [("coco_bags", 0.35, 8.0), ("coco_animals", 0.50, 6.0),
+           ("cityscapes_flat", 0.35, 5.0), ("coco_person", 0.20, 5.0)]
+    for c in range(4):
+        for app, acc, fps in mix:
+            eng.submit(SliceRequest("object-recognition", "yolox", app,
+                                    max_latency_s=0.7, min_accuracy=acc,
+                                    jobs_per_sec=fps), c)
+    eng.reslice()                               # warm: builds the session
+    eng.set_link_budgets(scale=0.5)
+    admitted_degraded = sum(
+        d.admitted for ds in eng.reslice() for d in ds)
+    eng.set_link_budgets(scale=1.0)
+    admitted_nominal = sum(
+        d.admitted for ds in eng.reslice() for d in ds)
+    assert admitted_degraded < admitted_nominal, \
+        "the squeezed budget must actually evict shared-link load"
+
+    ticks = 48
+    updates_before = eng.sesm.link_updates
+    rows_before = eng.sesm.delta_rows
+    compiles_before = _serve_batch_coupled._cache_size()
+
+    def degraded_loop():
+        for k in range(ticks):
+            eng.set_link_budgets(scale=0.5 if k % 2 == 0 else 1.0)
+            eng.reslice()
+
+    us = time_fn(degraded_loop, iters=5)
+    assert eng.sesm.fresh_stacks == 1, "degradation must not restack"
+    assert eng.sesm.session_rebuilds == 0, \
+        "budget-only change must keep the device session alive"
+    assert eng.sesm.delta_rows == rows_before, \
+        "requeued rejections must not dirty any solver rows"
+    recompiles = _serve_batch_coupled._cache_size() - compiles_before
+    assert recompiles == 0, "budget refresh must not retrace"
+    link_updates = eng.sesm.link_updates - updates_before
+    row("serving/degraded_tick_coupled_4cell", us,
+        per_instance_us=round(us / ticks, 1), cells=4,
+        ticks_per_sample=ticks,
+        link_updates_per_sample=link_updates,
+        session_rebuilds=eng.sesm.session_rebuilds,
+        dirty_rows_per_tick=0, recompiles=recompiles,
+        admitted_nominal=admitted_nominal,
+        admitted_degraded=admitted_degraded)
+
+
 def _bench_restack():
     """Host-side stacking fast path: fresh buffers vs buffer reuse vs the
     device-resident delta scatter."""
@@ -338,6 +411,7 @@ def main():
     _bench_coupled()
     _bench_metro()
     _bench_engine_tick()
+    _bench_degraded_tick()
     _bench_pallas_inner()
     _bench_restack()
 

@@ -31,6 +31,18 @@ allocation grid, so a whole trace/sweep solves as ONE stacked device program.
 * :func:`closed_loop_arrivals` — the closed loop's exogenous traffic as a
   plain event stream, so the SERVING engine can be driven by the same
   generators (``repro.serving.driver.drive_closed_loop`` consumes it).
+
+Fault schedules (the serving engine's fault plane, ``faults=`` of
+``repro.serving.driver.drive_closed_loop``): a schedule is a plain
+``{step: [event, ...]}`` dict whose events are ``{"kind": "fail"|"recover",
+"cell": c}``, ``{"kind": "link_scale", "scale": f}`` / ``{"kind":
+"link_budgets", "budgets": (L,)}``, or ``{"kind": "arrivals", "cell": c,
+"events": [...]}`` (extra traffic in the :func:`closed_loop_arrivals` event
+format). Build them with :func:`outage_schedule` /
+:func:`random_outage_schedule` (cell outage + recovery windows),
+:func:`stepped_link_degradation` (staircase budget squeeze), and
+:func:`flash_crowd` (burst overlay); overlay independently-built schedules
+with :func:`compose_faults`. All generators are deterministic per seed.
 """
 
 from __future__ import annotations
@@ -51,6 +63,8 @@ __all__ = [
     "fig6_sweep", "poisson_trace", "fps_trace", "fps_trace_instances",
     "multi_cell_pools", "multi_cell_trace", "metro_diurnal_trace",
     "mixed_workload_tasks", "closed_loop_trace", "closed_loop_arrivals",
+    "outage_schedule", "random_outage_schedule", "stepped_link_degradation",
+    "flash_crowd", "compose_faults",
 ]
 
 # paper Section V-B threshold definitions ("lm" extends them to the
@@ -449,6 +463,137 @@ def closed_loop_arrivals(n_cells: int, horizon: int, *,
             per_cell.append(evs)
         events.append(per_cell)
     return events
+
+
+# ---------------------------------------------------------------------------
+# Fault schedules — disturbance event streams for the serving fault plane
+# ---------------------------------------------------------------------------
+
+def outage_schedule(windows) -> dict[int, list[dict]]:
+    """Explicit cell outage/recovery windows as a fault schedule.
+
+    ``windows`` is an iterable of ``(cell, start, end)``: the cell fails at
+    step ``start`` and recovers at step ``end`` (exclusive — an ``end`` past
+    the driving horizon simply never recovers). Overlapping windows for one
+    cell are the caller's bug; the engine raises on double-fail.
+    """
+    sched: dict[int, list[dict]] = {}
+    for cell, start, end in windows:
+        if end <= start:
+            raise ValueError(
+                f"outage window ({cell}, {start}, {end}) is empty")
+        sched.setdefault(int(start), []).append(
+            dict(kind="fail", cell=int(cell)))
+        sched.setdefault(int(end), []).append(
+            dict(kind="recover", cell=int(cell)))
+    return sched
+
+
+def random_outage_schedule(n_cells: int, horizon: int, *,
+                           n_outages: int = 2, duration: int = 3,
+                           seed: int = 0,
+                           spare_cells=()) -> dict[int, list[dict]]:
+    """``n_outages`` non-overlapping random cell outages over the horizon.
+
+    Each outage picks a uniformly-random victim cell (never one of
+    ``spare_cells``, and never a cell already down) and a uniformly-random
+    start such that the ``duration``-step window fits the horizon.
+    Deterministic per seed.
+    """
+    eligible = [c for c in range(n_cells) if c not in set(spare_cells)]
+    if not eligible:
+        raise ValueError("every cell is spared: nothing to fail")
+    if duration >= horizon:
+        raise ValueError(f"duration {duration} >= horizon {horizon}")
+    rng = np.random.default_rng(seed)
+    windows, down = [], []        # down: (cell, start, end) already placed
+    for _ in range(n_outages):
+        for _attempt in range(64):
+            cell = int(rng.choice(eligible))
+            start = int(rng.integers(0, horizon - duration))
+            end = start + duration
+            if all(c != cell or end <= s or e <= start
+                   for c, s, e in down):
+                windows.append((cell, start, end))
+                down.append((cell, start, end))
+                break
+    return outage_schedule(windows)
+
+
+def stepped_link_degradation(horizon: int, *, start: int = 0,
+                             n_steps: int = 3, floor: float = 0.5,
+                             recover: bool = True) -> dict[int, list[dict]]:
+    """Staircase link-budget squeeze: scale the nominal budgets down in
+    ``n_steps`` equal steps from step ``start``, to ``floor`` of nominal,
+    then (optionally) restore to nominal one step after the last squeeze.
+
+    Emits ``link_scale`` events — the engine applies the factor to its
+    NOMINAL budgets, so schedules compose without compounding.
+    """
+    if not 0.0 <= floor < 1.0:
+        raise ValueError(f"floor {floor} outside [0, 1)")
+    if n_steps < 1:
+        raise ValueError("n_steps must be >= 1")
+    sched: dict[int, list[dict]] = {}
+    for k in range(n_steps):
+        step = start + k
+        if step >= horizon:
+            break
+        scale = 1.0 - (1.0 - floor) * (k + 1) / n_steps
+        sched.setdefault(step, []).append(
+            dict(kind="link_scale", scale=float(scale)))
+    if recover and start + n_steps < horizon:
+        sched.setdefault(start + n_steps, []).append(
+            dict(kind="link_scale", scale=1.0))
+    return sched
+
+
+def flash_crowd(n_cells: int, horizon: int, *, step: int, duration: int = 2,
+                cells=None, arrival_rate: float = 8.0, acc: str = "med",
+                lat: str = "high", jobs_per_sec: float = 5.0,
+                mean_holding: float = 5.0,
+                seed: int = 0) -> dict[int, list[dict]]:
+    """A localized traffic burst (stadium event) as an arrivals overlay.
+
+    For ``duration`` steps from ``step``, the affected ``cells`` (default:
+    all) receive EXTRA ``Poisson(arrival_rate)`` arrivals on top of the
+    driver's base traffic, in the :func:`closed_loop_arrivals` event format.
+    Deterministic per seed, independent of the base trace's stream.
+    """
+    cells = list(range(n_cells)) if cells is None else [int(c) for c in cells]
+    rng = np.random.default_rng(seed)
+    n_paper = len(semantics.PAPER_APPS)
+    sched: dict[int, list[dict]] = {}
+    for s in range(step, min(step + duration, horizon)):
+        for c in cells:
+            evs = []
+            for _ in range(rng.poisson(arrival_rate)):
+                app = int(rng.integers(0, n_paper))
+                cls = semantics.APPS[app]
+                evs.append(dict(
+                    app=app, app_class=cls.name, service=cls.service,
+                    min_accuracy=ACC_THRESHOLDS[acc][cls.service],
+                    max_latency_s=LAT_THRESHOLDS[lat],
+                    jobs_per_sec=float(jobs_per_sec),
+                    depart=s + float(rng.exponential(mean_holding))))
+            if evs:
+                sched.setdefault(s, []).append(
+                    dict(kind="arrivals", cell=c, events=evs))
+    return sched
+
+
+def compose_faults(*schedules: dict[int, list[dict]]) -> dict[int, list[dict]]:
+    """Overlay fault schedules into one ``{step: [event, ...]}`` dict.
+
+    Events of one step concatenate in argument order (earlier schedules
+    apply first), so e.g. an outage schedule composes with a link-degradation
+    staircase and a flash crowd into one scenario.
+    """
+    out: dict[int, list[dict]] = {}
+    for sched in schedules:
+        for step, events in sched.items():
+            out.setdefault(int(step), []).extend(events)
+    return out
 
 
 def closed_loop_trace(n_cells: int, horizon: int, *, m: int = 2,

@@ -397,6 +397,12 @@ def _scatter_rows(lat_ok, alive0, link_load, b_idx, t_idx,
     return lat_ok, alive0, link_load
 
 
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _scatter_budgets(link_cap, new_cap):
+    """Overwrite the (L,) device link-budget buffer in place (donated)."""
+    return link_cap.at[:].set(new_cap)
+
+
 @dataclasses.dataclass
 class DeviceStack:
     """Device-resident half of a stacked batch, for ONE solver mode.
@@ -429,6 +435,7 @@ class DeviceStack:
     batch_size: int                  # real B (B' may include inert padding)
     scatter_calls: int = 0
     rows_scattered: int = 0
+    budget_updates: int = 0
 
     @property
     def coupled(self) -> bool:
@@ -488,6 +495,30 @@ class DeviceStack:
             jnp.asarray(np.asarray(load_rows, np.float64)))
         self.scatter_calls += 1
         self.rows_scattered += d
+
+    def update_link_budgets(self, budgets):
+        """Refresh the (L,) per-link budgets on device, in place.
+
+        The budget-only half of link degradation: the link SET (incidence,
+        coupling groups) is invariant, only the capacities move, so the
+        device session survives with one tiny donated scatter — the
+        :meth:`update_rows` pattern applied to the coupling budgets. The
+        budgets are a traced input of the solve, so no recompile either.
+        Changing the link set itself is a topology change and needs a
+        rebuilt stack (ValueError here).
+        """
+        if not self.coupled:
+            raise ValueError(
+                "this stack is uncoupled (no link budgets to update); "
+                "introducing links is a topology change — rebuild")
+        new = np.asarray(budgets, np.float64)
+        if new.shape != self.link_cap.shape:
+            raise ValueError(
+                f"budget shape {new.shape} != device link set "
+                f"{self.link_cap.shape}; changing the link set is a "
+                "topology change — rebuild the stack")
+        self.link_cap = _scatter_budgets(self.link_cap, jnp.asarray(new))
+        self.budget_updates += 1
 
 
 def _solver_tables(stacked: StackedInstances, semantic: bool):

@@ -141,6 +141,25 @@ class CouplingSpec:
         return CouplingSpec(self.link_capacity, self.incidence[c:c + 1],
                             self.names)
 
+    def set_budgets(self, budgets) -> None:
+        """Overwrite the per-link budgets IN PLACE (same (L,) shape).
+
+        Time-varying link degradation must mutate the existing
+        ``link_capacity`` buffer rather than build a new spec: both
+        :func:`repro.core.sfesp.merge_coupling` (shared-link identification)
+        and the serving fast path's session guard compare the ARRAY OBJECT,
+        so a new array would read as a topology change and force a full
+        session rebuild where only an (L,)-sized device refresh is needed
+        (``repro.core.sfesp.DeviceStack.update_link_budgets``).
+        """
+        b = np.asarray(budgets, np.float64)
+        if b.shape != self.link_capacity.shape:
+            raise ValueError(
+                f"budget shape {b.shape} != link set shape "
+                f"{self.link_capacity.shape}; changing the LINK SET is a "
+                "topology change — build a new CouplingSpec for that")
+        self.link_capacity[:] = b
+
     def groups(self) -> np.ndarray:
         """Connected components of the cell–link graph → (C,) group ids.
 

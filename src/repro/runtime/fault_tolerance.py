@@ -36,6 +36,15 @@ class HeartbeatMonitor:
         self.last_seen[host] = step
         self.step = max(self.step, step)
 
+    def revive(self, host: int):
+        """Re-admit a recovered host: its silence window restarts NOW.
+
+        A host declared dead keeps its stale ``last_seen`` forever, so without
+        this hook it would re-enter :meth:`dead_hosts` on the very next check
+        even after a clean restart (the serving engine's
+        ``recover_cell`` calls this before the cell beats again)."""
+        self.last_seen[host] = self.step
+
     def dead_hosts(self) -> list[int]:
         return [h for h, s in self.last_seen.items()
                 if self.step - s >= self.timeout]
@@ -68,6 +77,11 @@ class StragglerMitigator:
 
     def chronic(self, min_flags: int = 3) -> list[int]:
         return [h for h, n in self.flagged.items() if n >= min_flags]
+
+    def reset(self, host: int):
+        """Forget a host's EWMA and flags (it was replaced/restarted)."""
+        self.ewma[host] = None
+        self.flagged.pop(host, None)
 
 
 @dataclasses.dataclass

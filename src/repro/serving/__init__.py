@@ -2,9 +2,9 @@ from .request import SliceRequest
 from .sdla import SDLA
 from .admission import SESM, SliceDecision
 from .engine import CellRuntime, EdgeServingEngine, TaskRuntime
-from .multicell import MultiCellEngine
-from .driver import drive_closed_loop
+from .multicell import MultiCellEngine, TierPolicy
+from .driver import drive_closed_loop, sla_scorecard
 
 __all__ = ["SliceRequest", "SDLA", "SESM", "SliceDecision", "CellRuntime",
            "EdgeServingEngine", "TaskRuntime", "MultiCellEngine",
-           "drive_closed_loop"]
+           "TierPolicy", "drive_closed_loop", "sla_scorecard"]

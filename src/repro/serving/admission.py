@@ -65,6 +65,11 @@ class _ServeSession:
     pool_state: np.ndarray           # (B, 2m) price|capacity VALUE snapshot —
     # ResourcePool is frozen but its arrays are not; an in-place capacity
     # edit must invalidate the session, not silently solve stale pools
+    link_cap_state: np.ndarray | None  # (L,) link-budget VALUE snapshot —
+    # unlike a pool edit, an in-place budget edit (CouplingSpec.set_budgets:
+    # link degradation) does NOT invalidate the session: the link set is
+    # unchanged, so the delta is one (L,) device refresh
+    # (DeviceStack.update_link_budgets), counted in ``sesm.link_updates``
     scale: float
     semantic: bool
     flexible: bool
@@ -121,6 +126,13 @@ class SESM:
         self.fresh_stacks = 0
         self.restacks = 0
         self.delta_rows = 0
+        # fault-plane telemetry: session_rebuilds counts LIVE serve sessions
+        # torn down by an invalidating change (batch/bucket/pools/coupling
+        # identity/latency scale — first-ever builds are not rebuilds);
+        # link_updates counts budget-only coupling refreshes that kept the
+        # session alive (the degradation fast path)
+        self.session_rebuilds = 0
+        self.link_updates = 0
 
     def slice(self, requests: list[SliceRequest]) -> list[SliceDecision]:
         if not requests:
@@ -231,7 +243,11 @@ class SESM:
         the batch size / algorithm / coupling / pools change, or the SDLA
         latency scale moves (every cached row depends on it); ``pools`` and
         ``coupling`` are identity-compared — pass the same objects per tick,
-        as :class:`~repro.serving.multicell.MultiCellEngine` does.
+        as :class:`~repro.serving.multicell.MultiCellEngine` does. The one
+        sanctioned in-place mutation is ``CouplingSpec.set_budgets`` (link
+        degradation): same coupling object, new budget VALUES — detected by
+        value snapshot and applied as a single (L,) device refresh
+        (``sesm.link_updates``) with the session kept alive.
         """
         B = len(slot_rows)
         if coupling is not None and coupling.num_cells != B:
@@ -257,6 +273,7 @@ class SESM:
                 or not np.array_equal(sess.pool_state,
                                       self._pool_state(B, pools))):
             sess = self._serve_session = None
+            self.session_rebuilds += 1
         if sess is None:
             if not live:
                 return out
@@ -266,6 +283,16 @@ class SESM:
         else:
             for b, d in enumerate(dirty):
                 sess.pending.update((b, t) for t in d)
+            if coupling is not None and not np.array_equal(
+                    sess.link_cap_state, coupling.link_capacity):
+                # budget-only degradation: the coupling OBJECT (and with it
+                # the link set) is unchanged — only the budgets moved
+                # (CouplingSpec.set_budgets). One (L,) device refresh keeps
+                # the whole session alive.
+                if sess.dev.coupled:
+                    sess.dev.update_link_budgets(coupling.link_capacity)
+                sess.link_cap_state = coupling.link_capacity.copy()
+                self.link_updates += 1
             if not live:
                 return out
             self.restacks += 1
@@ -303,7 +330,9 @@ class SESM:
             dev=dev, grid=grid, z_grid=default_z_grid(),
             names=[p.names for p in cell_pools],
             pools_ref=pools, coupling_ref=coupling,
-            pool_state=self._pool_state(B, pools), scale=scale,
+            pool_state=self._pool_state(B, pools),
+            link_cap_state=None if coupling is None
+            else coupling.link_capacity.copy(), scale=scale,
             semantic=bool(self.algorithm["semantic"]),
             flexible=bool(self.algorithm["flexible"]),
             z_star=np.ones((B, tmax)), has_z=np.zeros((B, tmax), bool),

@@ -7,6 +7,14 @@ model through the live serving engine instead: arrivals become
 :meth:`MultiCellEngine.handover`, and every step is one joint coupled
 re-slice — the control-plane decisions now land in the data plane they were
 computed for.
+
+The fault plane plugs in here too: a ``faults=`` schedule (built by the
+``repro.core.scenarios`` fault generators — cell outage windows, stepped
+link degradation, flash-crowd overlays) is applied at the top of each step,
+arrivals aimed at a failed cell re-home to its
+:meth:`MultiCellEngine.fallback_cell`, and :func:`sla_scorecard` reduces a
+run to the per-tier SLA report operators actually track (admission rate,
+deadline-hit rate, eviction/drop/shed counts, degraded-tick totals).
 """
 
 from __future__ import annotations
@@ -19,10 +27,24 @@ from repro.core import scenarios
 from .multicell import MultiCellEngine
 from .request import SliceRequest
 
-__all__ = ["drive_closed_loop"]
+__all__ = ["drive_closed_loop", "sla_scorecard"]
 
 _SERVICE_LABEL = {"detection": "object-recognition",
                   "segmentation": "segmentation", "lm": "lm-serving"}
+
+
+def _submit_event(engine: MultiCellEngine, ev: dict, cell: int,
+                  tier: int) -> SliceRequest:
+    req = SliceRequest(
+        service=_SERVICE_LABEL.get(ev["service"], ev["service"]),
+        model="yolox" if ev["service"] == "detection" else "bisenetv2",
+        app_class=ev["app_class"],
+        max_latency_s=ev["max_latency_s"],
+        min_accuracy=ev["min_accuracy"],
+        jobs_per_sec=ev["jobs_per_sec"],
+        tier=tier)
+    engine.submit(req, cell)
+    return req
 
 
 def drive_closed_loop(engine: MultiCellEngine, horizon: int, *,
@@ -30,32 +52,86 @@ def drive_closed_loop(engine: MultiCellEngine, horizon: int, *,
                       handover_prob: float = 0.0, acc: str = "med",
                       lat: str = "high", seed: int = 0,
                       process: bool = False,
-                      wall_dt: float = 1.0) -> list[dict]:
+                      wall_dt: float = 1.0,
+                      faults: dict[int, list[dict]] | None = None,
+                      tiers=None) -> list[dict]:
     """Run ``horizon`` closed-loop steps of Poisson traffic through ``engine``.
 
-    Per step: (i) departed tasks are withdrawn, (ii) each admitted task hands
-    over to a random other cell with probability ``handover_prob`` (achieved-z
-    accuracy pin — see :meth:`MultiCellEngine.handover`), (iii) fresh arrivals
-    from :func:`repro.core.scenarios.closed_loop_arrivals` are submitted,
-    (iv) the engine re-slices jointly, and optionally (v) ``process`` runs
-    the admitted jobs for ``wall_dt`` seconds of wall time.
+    Per step: (i) this step's fault events are applied (see below), (ii)
+    departed tasks are withdrawn — located first, since drains move tasks
+    between cells, (iii) each admitted task hands over to a random other
+    LIVE cell with probability ``handover_prob`` (achieved-z accuracy pin —
+    see :meth:`MultiCellEngine.handover`), (iv) fresh arrivals from
+    :func:`repro.core.scenarios.closed_loop_arrivals` are submitted —
+    arrivals aimed at a failed cell re-home to its fallback cell, or count
+    as ``lost`` when no cell is live, (v) the engine re-slices jointly, and
+    optionally (vi) ``process`` runs the admitted jobs for ``wall_dt``
+    seconds of wall time.
+
+    ``faults`` is a ``{step: [event, ...]}`` schedule (the
+    ``repro.core.scenarios`` fault generators): ``fail``/``recover`` toggle
+    cell outages — drain moves re-point the driver's departure schedules —
+    ``link_scale``/``link_budgets`` degrade the shared links in place, and
+    ``arrivals`` events overlay extra traffic (flash crowds).
+
+    ``tiers`` assigns each submitted request a priority tier drawn uniformly
+    from the given sequence (dedicated RNG at ``seed + 23``, so the base
+    traffic realization is unchanged vs. ``tiers=None``, which keeps every
+    request at tier 0).
 
     Returns one record per (step, cell): ``{"step", "cell", "offered",
-    "admitted", "evicted", "retrying", "dropped", "handovers", "restacked"}``
-    — ``restacked`` flags steps whose re-slice allocated fresh stacking
-    buffers (the first step, or a bucket overflow; a healthy loop shows it
-    only on step 0).
+    "admitted", "evicted", "retrying", "dropped", "shed", "handovers",
+    "lost", "dead", "degraded", "restacked"}`` — ``restacked`` flags steps
+    whose re-slice allocated fresh stacking buffers (the first step, or a
+    bucket overflow; a healthy loop shows it only on step 0), ``shed``
+    counts TierPolicy pressure drops (a subset of ``dropped``), ``lost``
+    arrivals that found no live cell, and ``dead``/``degraded`` snapshot the
+    fault-plane state after the step's events.
     """
     events = scenarios.closed_loop_arrivals(
         engine.num_cells, horizon, arrival_rate=arrival_rate,
         mean_holding=mean_holding, acc=acc, lat=lat, seed=seed)
     rng = np.random.default_rng(seed + 17)
+    tier_rng = np.random.default_rng(seed + 23)
+    tier_choices = None if tiers is None else list(tiers)
+
+    def draw_tier() -> int:
+        if tier_choices is None:
+            return 0
+        return int(tier_choices[tier_rng.integers(len(tier_choices))])
+
+    faults = faults or {}
     depart: dict[int, tuple[float, int]] = {}   # rid → (depart step, cell)
     records = []
     for step in range(horizon):
+        overlay: list[tuple[int, list[dict]]] = []   # flash-crowd arrivals
+        for ev in faults.get(step, ()):
+            kind = ev["kind"]
+            if kind == "fail":
+                moves = engine.fail_cell(ev["cell"])
+                for rid, dst in moves.items():
+                    if rid in depart:
+                        if dst is None:
+                            del depart[rid]
+                        else:
+                            depart[rid] = (depart[rid][0], dst)
+            elif kind == "recover":
+                engine.recover_cell(ev["cell"])
+            elif kind == "link_scale":
+                engine.set_link_budgets(scale=ev["scale"])
+            elif kind == "link_budgets":
+                engine.set_link_budgets(budgets=ev["budgets"])
+            elif kind == "arrivals":
+                overlay.append((ev["cell"], ev["events"]))
+            else:
+                raise ValueError(f"unknown fault event kind {kind!r}")
         for rid, (d, cell) in list(depart.items()):
             if d <= step:
-                engine.remove(rid, cell)
+                # heartbeat auto-failovers drain without telling the driver:
+                # locate the task before withdrawing it
+                where = engine.locate(rid)
+                if where is not None:
+                    engine.remove(rid, where)
                 del depart[rid]
         handed_in = [0] * engine.num_cells
         if handover_prob > 0.0 and engine.num_cells > 1:
@@ -64,25 +140,31 @@ def drive_closed_loop(engine: MultiCellEngine, horizon: int, *,
                     if rng.random() < handover_prob:
                         target = int(rng.integers(0, engine.num_cells - 1))
                         target += target >= c
+                        if target in engine.dead:
+                            continue       # no live neighbor drawn: stay put
                         engine.handover(rid, c, target)
                         # tasks submitted outside the driver have no departure
                         # schedule — they just move cells
                         if rid in depart:
                             depart[rid] = (depart[rid][0], target)
                         handed_in[target] += 1
-        for c, evs in enumerate(events[step]):
+        lost = [0] * engine.num_cells
+        step_arrivals = [(c, evs) for c, evs in enumerate(events[step])]
+        for c, evs in step_arrivals + overlay:
             for ev in evs:
-                req = SliceRequest(
-                    service=_SERVICE_LABEL.get(ev["service"], ev["service"]),
-                    model="yolox" if ev["service"] == "detection"
-                    else "bisenetv2", app_class=ev["app_class"],
-                    max_latency_s=ev["max_latency_s"],
-                    min_accuracy=ev["min_accuracy"],
-                    jobs_per_sec=ev["jobs_per_sec"])
-                engine.submit(req, c)
-                depart[req.request_id] = (ev["depart"], c)
+                tier = draw_tier()
+                target = c
+                if target in engine.dead:
+                    fb = engine.fallback_cell(target)
+                    if fb is None:
+                        lost[c] += 1
+                        continue
+                    target = fb
+                req = _submit_event(engine, ev, target, tier)
+                depart[req.request_id] = (ev["depart"], target)
         fresh_before = engine.sesm.fresh_stacks
         drops_before = [cell.drops for cell in engine.cells]
+        sheds_before = [cell.sheds for cell in engine.cells]
         decisions = engine.reslice()
         restacked = engine.sesm.fresh_stacks > fresh_before
         for c, (cell, ds) in enumerate(zip(engine.cells, decisions)):
@@ -100,7 +182,75 @@ def drive_closed_loop(engine: MultiCellEngine, horizon: int, *,
                 evicted=sum(d.evicted for d in ds),
                 retrying=len(cell.pending),
                 dropped=n_dropped,
-                handovers=handed_in[c], restacked=restacked))
+                shed=cell.sheds - sheds_before[c],
+                handovers=handed_in[c], lost=lost[c],
+                dead=c in engine.dead, degraded=engine.degraded,
+                restacked=restacked))
         if process:
             engine.process(wall_dt)
     return records
+
+
+def sla_scorecard(engine: MultiCellEngine,
+                  records: list[dict] | None = None) -> dict:
+    """Reduce a scenario run to the per-class SLA report operators track.
+
+    Returns ``{"tiers": {tier: {...}}, "run": {...}}``. Per tier:
+    ``offered``/``admitted`` (per-re-slice decision counts) and the derived
+    ``admission_rate``, ``evictions``/``drops``/``sheds``/``drain_drops``
+    event counts, and — over the live tasks' measured end-to-end latency
+    samples — ``deadline_hit_rate``, ``p95_latency_s`` and
+    ``latency_samples`` (``None``/0 when nothing ran, never a vacuous 100 %).
+    The ``run`` section aggregates the fault plane: degraded ticks, dead
+    cells, drain/recovery counts, retry depth, and the session-cache health
+    counters (``link_updates``, ``session_rebuilds``). With the driver's
+    ``records``, ``steps`` and ``degraded_steps`` are included too.
+    """
+    totals = engine.metrics()["totals"]
+    lat_by_tier: dict[int, list[tuple[float, float]]] = {}
+    for cell in engine.cells:
+        for rt in cell.tasks.values():
+            t = rt.decision.request.tier
+            dl = rt.decision.request.max_latency_s
+            lat_by_tier.setdefault(t, []).extend(
+                (float(s), dl) for s in rt.latencies)
+    tier_ids = set(lat_by_tier)
+    for key in ("offered_by_tier", "admitted_by_tier", "evictions_by_tier",
+                "drops_by_tier", "sheds_by_tier", "drain_drops_by_tier"):
+        tier_ids |= set(totals[key])
+    tiers = {}
+    for t in sorted(tier_ids):
+        offered = totals["offered_by_tier"].get(t, 0)
+        admitted = totals["admitted_by_tier"].get(t, 0)
+        samples = lat_by_tier.get(t, [])
+        tiers[t] = dict(
+            offered=offered, admitted=admitted,
+            admission_rate=admitted / offered if offered else None,
+            evictions=totals["evictions_by_tier"].get(t, 0),
+            drops=totals["drops_by_tier"].get(t, 0),
+            sheds=totals["sheds_by_tier"].get(t, 0),
+            drain_drops=totals["drain_drops_by_tier"].get(t, 0),
+            deadline_hit_rate=float(np.mean([s <= dl for s, dl in samples]))
+            if samples else None,
+            p95_latency_s=float(np.quantile([s for s, _ in samples], 0.95))
+            if samples else None,
+            latency_samples=len(samples),
+        )
+    run = dict(
+        degraded=totals["degraded"],
+        degraded_ticks=totals["degraded_ticks"],
+        dead_cells=totals["dead_cells"],
+        drained=totals["drained"], drain_drops=totals["drain_drops"],
+        recoveries=totals["recoveries"], handovers=totals["handovers"],
+        evictions=totals["evictions"], drops=totals["drops"],
+        sheds=totals["sheds"], retry_depth=totals["retry_depth"],
+        running=totals["running"],
+        link_updates=totals["link_updates"],
+        session_rebuilds=totals["session_rebuilds"],
+    )
+    if records:
+        run["steps"] = max(r["step"] for r in records) + 1
+        run["degraded_steps"] = len(
+            {r["step"] for r in records if r.get("degraded")})
+        run["lost_arrivals"] = sum(r.get("lost", 0) for r in records)
+    return {"tiers": tiers, "run": run}

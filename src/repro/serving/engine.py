@@ -82,6 +82,16 @@ class CellRuntime:
         self.drops = 0
         self.dropped: collections.deque[SliceRequest] = \
             collections.deque(maxlen=256)
+        # SLA accounting: monotone event counts overall and per priority
+        # tier (request.tier; the scorecard's per-class axis). `sheds` are
+        # POLICY drops (TierPolicy pressure shedding) — a subset of `drops`.
+        self.evictions = 0
+        self.sheds = 0
+        self.offered_by_tier: collections.Counter = collections.Counter()
+        self.admitted_by_tier: collections.Counter = collections.Counter()
+        self.evictions_by_tier: collections.Counter = collections.Counter()
+        self.drops_by_tier: collections.Counter = collections.Counter()
+        self.sheds_by_tier: collections.Counter = collections.Counter()
         self._requests: dict[int, SliceRequest] = {}   # originals, unpinned
         self._queue: list[int] = []                # pending request ids, FIFO
         self._retries: dict[int, int] = {}         # rejections left
@@ -106,6 +116,11 @@ class CellRuntime:
         """Read-only view of the retry/pending queue (a tuple on purpose:
         appending to it would silently go nowhere — use :meth:`submit`)."""
         return tuple(self._requests[rid] for rid in self._queue)
+
+    @property
+    def queue_depth(self) -> int:
+        """Current retry/pending queue length (the shedding pressure signal)."""
+        return len(self._queue)
 
     def register_model(self, name: str, cfg, params, infer_fn):
         """infer_fn(params, inputs) → outputs; used for LM-service tasks."""
@@ -244,7 +259,10 @@ class CellRuntime:
                 # departed (remove()d) between gather and apply: the decision
                 # is stale — do not resurrect or re-queue the task
                 continue
+            tier = self._requests[rid].tier
+            self.offered_by_tier[tier] += 1
             if d.admitted:
+                self.admitted_by_tier[tier] += 1
                 rt = self._carry.pop(rid, None) or prev.get(rid) \
                     or TaskRuntime(d)
                 rt.decision = d
@@ -252,6 +270,8 @@ class CellRuntime:
                 continue
             if rid in prev:
                 d.evicted = True
+                self.evictions += 1
+                self.evictions_by_tier[tier] += 1
             parked = prev.get(rid) or self._carry.pop(rid, None)
             # no served stream to warm-start from: a rejected task re-offers
             # at its class threshold, not the pinned one
@@ -266,10 +286,70 @@ class CellRuntime:
                     self._carry[rid] = parked
             else:
                 self.drops += 1
+                self.drops_by_tier[tier] += 1
                 self.dropped.append(self._requests.pop(rid))
                 self._retries.pop(rid, None)
                 self._gen.pop(rid, None)
         return decisions
+
+    def shed(self, request_id: int) -> SliceRequest:
+        """Policy-drop a QUEUED request immediately (tier-based shedding).
+
+        Graceful-degradation path: under pressure the engine sheds
+        low-priority queued requests BEFORE the solve, so the solver never
+        arbitrates between SLA classes it cannot see. Counted as a drop
+        (``drops``/``dropped``, so loops that diff drops see it) and
+        separately as a shed (``sheds``/``sheds_by_tier``) for attribution.
+        Running tasks cannot be shed — evicting them is the solver's call.
+        """
+        if request_id not in self._queue:
+            raise KeyError(
+                f"request {request_id} is not queued in cell {self.cell} "
+                "(running tasks are evicted by the solver, not shed)")
+        req = self._requests.pop(request_id)
+        self._queue.remove(request_id)
+        self._retries.pop(request_id, None)
+        self._pinned.pop(request_id, None)
+        self._carry.pop(request_id, None)
+        self._gen.pop(request_id, None)
+        self.drops += 1
+        self.drops_by_tier[req.tier] += 1
+        self.sheds += 1
+        self.sheds_by_tier[req.tier] += 1
+        self.dropped.append(req)
+        return req
+
+    def drain(self) -> list[tuple[SliceRequest, TaskRuntime | None, int,
+                                  float | None]]:
+        """Release the cell's ENTIRE candidate set for re-homing (outage).
+
+        Returns ``(request, runtime, retries_left, pinned_accuracy)`` tuples
+        in deterministic order — running tasks first (task order), then the
+        queue FIFO — with the same carry semantics as :meth:`hand_out`:
+        running tasks pin their achieved-``z`` accuracy bound and carry
+        their runtime; queued requests keep whatever pin/runtime they
+        already carried. No drop accounting here — the FAILED cell did not
+        drop anything; what cannot be re-homed is dropped by the caller.
+        The sticky solver-row slots are NOT touched: the next
+        :meth:`sync_slots` observes the departures and reports every vacated
+        slot dirty exactly once, so the device session sees the dead cell as
+        cleared rows instead of a rebuild.
+        """
+        items: list[tuple[SliceRequest, TaskRuntime | None, int,
+                          float | None]] = []
+        for rid in list(self.tasks):
+            req, rt, retries = self.hand_out(rid)
+            items.append((req, rt, retries, pinned_accuracy_at(req,
+                                                              rt.decision.z)))
+        for rid in list(self._queue):
+            req = self._requests.pop(rid)
+            self._queue.remove(rid)
+            retries = self._retries.pop(rid, self.max_retries)
+            pin = self._pinned.pop(rid, None)
+            rt = self._carry.pop(rid, None)
+            self._gen.pop(rid, None)
+            items.append((req, rt, retries, pin))
+        return items
 
     # ------------------------------------------------------ handover hooks
     def hand_out(self, request_id: int) -> tuple[SliceRequest, TaskRuntime,
@@ -285,10 +365,13 @@ class CellRuntime:
         self._gen.pop(request_id, None)
         return req, rt, retries
 
-    def hand_in(self, request: SliceRequest, runtime: TaskRuntime,
-                retries: int, pinned_accuracy: float):
-        """Accept a handed-over task: queue it with its warm-start pin; the
-        runtime (job/latency history) resumes if the next re-slice admits."""
+    def hand_in(self, request: SliceRequest, runtime: TaskRuntime | None,
+                retries: int, pinned_accuracy: float | None):
+        """Accept a handed-over (or outage-drained) task: queue it with its
+        warm-start pin; the runtime (job/latency history) resumes if the next
+        re-slice admits. ``runtime``/``pinned_accuracy`` are ``None`` for a
+        request that was merely QUEUED in the source cell (a drained retry
+        has no encoded stream or job history to carry)."""
         rid = request.request_id
         if rid in self._requests:
             raise ValueError(
@@ -297,8 +380,10 @@ class CellRuntime:
         self._requests[rid] = request
         self._queue.append(rid)
         self._retries[rid] = retries
-        self._pinned[rid] = pinned_accuracy
-        self._carry[rid] = runtime
+        if pinned_accuracy is not None:
+            self._pinned[rid] = pinned_accuracy
+        if runtime is not None:
+            self._carry[rid] = runtime
         self._arrivals += 1
         self._gen[rid] = self._arrivals
 

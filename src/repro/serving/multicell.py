@@ -50,20 +50,68 @@ re-slice routes through the full-rebuild path and
 over the mesh (one block of coupling groups per device). The delta fast
 path stays single-device — its scatter targets one ``DeviceStack`` — so
 metro mode trades the per-tick delta upload for solve parallelism.
+
+FAULT PLANE. The engine degrades gracefully instead of assuming healthy
+topologies:
+
+* :meth:`MultiCellEngine.fail_cell` / :meth:`MultiCellEngine.recover_cell`
+  — a dying cell's running tasks AND retry queue drain into live coupled
+  neighbors (accuracy pins and remaining retry budgets carried, exactly as
+  :meth:`MultiCellEngine.handover` does); with no live target they drop
+  (``drain_drops``). The dead cell stays IN the batch as zero-task rows —
+  its vacated slots are cleared by the ordinary dirty-row delta, so neither
+  the pow2 restack cache nor the device ``_ServeSession`` is invalidated.
+* time-varying link budgets — ``CouplingSpec.set_budgets`` mutates the
+  budget values in place (same array object = same link set), and
+  :meth:`MultiCellEngine.set_link_budgets` is the engine-level entry; the
+  session survives via one (L,) device refresh (``sesm.link_updates``).
+* heartbeats — every :meth:`MultiCellEngine.process` tick stamps
+  ``repro.runtime.fault_tolerance.HeartbeatMonitor`` per live cell (and
+  feeds ``repro.runtime.fault_tolerance.StragglerMitigator`` the measured
+  tick time); a cell silent for ``heartbeat_timeout`` ticks is auto-failed
+  and drained on the next re-slice (:meth:`MultiCellEngine.check_faults`).
+* priority tiers — :class:`TierPolicy` sheds LOW-priority queued requests
+  first when a cell's retry queue exceeds its pressure threshold, within
+  per-tier drop budgets, BEFORE the solve (the solver stays SLA-blind).
 """
 
 from __future__ import annotations
+
+import collections
+import dataclasses
+import time
 
 import numpy as np
 
 from repro.core import CouplingSpec, ResourcePool
 from repro.core.latency import LatencyParams
+from repro.runtime.fault_tolerance import HeartbeatMonitor, StragglerMitigator
 from .admission import SESM, SliceDecision
 from .engine import CellRuntime, TaskRuntime, pinned_accuracy_at
 from .request import SliceRequest
 from .sdla import SDLA
 
-__all__ = ["MultiCellEngine"]
+__all__ = ["MultiCellEngine", "TierPolicy"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TierPolicy:
+    """Graceful-degradation policy over request priority tiers.
+
+    A cell whose retry/pending queue grows past ``queue_threshold`` is under
+    pressure: before the next solve the engine sheds queued requests —
+    lowest-priority tier first, newest first within a tier — until the queue
+    is back at the threshold or the per-tier budgets are spent.
+
+    Attributes:
+      queue_threshold: max queue depth a cell tolerates before shedding.
+      drop_budgets: tier → max sheds per cell per re-slice. Tiers ABSENT
+        from the map are never shed, so the high-priority tier 0 is
+        protected unless explicitly budgeted.
+    """
+
+    queue_threshold: int = 4
+    drop_budgets: dict[int, int] = dataclasses.field(default_factory=dict)
 
 
 class MultiCellEngine:
@@ -87,7 +135,9 @@ class MultiCellEngine:
     def __init__(self, pools: list[ResourcePool], *,
                  coupling: CouplingSpec | None = None, lat_params=None,
                  max_batch: int = 8, max_retries: int = 2,
-                 solver_backend: str = "numpy", mesh=None):
+                 solver_backend: str = "numpy", mesh=None,
+                 tier_policy: TierPolicy | None = None,
+                 heartbeat_timeout: int = 3):
         pools = list(pools)
         if not pools:
             raise ValueError("MultiCellEngine needs at least one cell pool")
@@ -111,13 +161,217 @@ class MultiCellEngine:
                                   max_retries=max_retries, cell=c)
                       for c, p in enumerate(pools)]
         self.handovers = 0
+        # ----------------------------------------------------- fault plane
+        self.tier_policy = tier_policy
+        self.dead: set[int] = set()            # failed cells (zero-task rows)
+        self._silent: set[int] = set()         # injected hangs (skip process)
+        self.tick = 0                          # process() counter = heartbeat
+        self.monitor = HeartbeatMonitor(len(pools),
+                                        timeout_steps=heartbeat_timeout)
+        self.stragglers = StragglerMitigator(len(pools))
+        self._nominal_budgets = None if coupling is None \
+            else coupling.link_capacity.copy()
+        self._drain_rr = 0                     # round-robin drain cursor
+        self.drained = 0                       # tasks re-homed by fail_cell
+        self.drain_drops = 0                   # tasks lost (no live target)
+        self.drain_drops_by_tier: collections.Counter = collections.Counter()
+        self.recoveries = 0
+        self.degraded_ticks = 0                # re-slices run while degraded
+        self.sheds = 0                         # TierPolicy pressure sheds
+        self.fault_log: list[dict] = []        # fail/recover events, in order
 
     @property
     def num_cells(self) -> int:
         return len(self.cells)
 
+    @property
+    def live_cells(self) -> list[int]:
+        """Cell indices currently serving (not failed)."""
+        return [c for c in range(self.num_cells) if c not in self.dead]
+
+    @property
+    def degraded(self) -> bool:
+        """True while any cell is failed or any link budget is below its
+        nominal (construction-time) value."""
+        if self.dead:
+            return True
+        return self.coupling is not None and bool(
+            (self.coupling.link_capacity < self._nominal_budgets).any())
+
+    # --------------------------------------------------------- fault plane
+    def _check_cell(self, cell: int):
+        if not 0 <= cell < self.num_cells:
+            raise ValueError(
+                f"cell {cell} outside this engine's {self.num_cells} cells")
+
+    def _drain_targets(self, cell: int) -> list[int]:
+        """Live drain destinations for ``cell``'s tasks: coupled neighbors
+        (same coupling group) first, any live cell as fallback."""
+        live = [c for c in range(self.num_cells)
+                if c not in self.dead and c != cell]
+        if self.coupling is not None and live:
+            groups = self.coupling.groups()
+            peers = [c for c in live if groups[c] == groups[cell]]
+            if peers:
+                return peers
+        return live
+
+    def fallback_cell(self, cell: int) -> int | None:
+        """Where traffic aimed at ``cell`` goes while it is failed: the
+        first drain target (coupled neighbor preferred), ``None`` if no
+        cell is live. Drivers use this to re-home arrivals during outages."""
+        self._check_cell(cell)
+        targets = self._drain_targets(cell)
+        return targets[0] if targets else None
+
+    def fail_cell(self, cell: int,
+                  reason: str = "operator") -> dict[int, int | None]:
+        """Declare ``cell`` dead and drain its candidate set into live
+        coupled neighbors.
+
+        Running tasks drain with their achieved-``z`` accuracy pin and
+        runtime carried (the :meth:`handover` semantics); queued requests
+        keep their existing pin/runtime, and every drained request keeps its
+        REMAINING retry budget — a request one rejection from dropping is
+        still one rejection from dropping in its new cell. Re-homing is
+        deterministic: highest-priority tier first, round-robin over the
+        targets. With no live target, tasks drop (``drain_drops``).
+
+        The dead cell stays in the coupled batch as zero-task rows: its
+        vacated solver-row slots are reported dirty by the next
+        ``sync_slots`` and cleared by the ordinary delta scatter, so the
+        restack cache and the device session survive the outage. Until
+        :meth:`recover_cell`, submitting to the cell raises and
+        :meth:`process` skips it.
+
+        Returns ``{request_id: target_cell | None}`` (``None`` = dropped) so
+        drivers can re-point departure schedules.
+        """
+        self._check_cell(cell)
+        if cell in self.dead:
+            raise ValueError(f"cell {cell} is already failed")
+        self.dead.add(cell)
+        items = self.cells[cell].drain()
+        # stable by tier: high-priority tasks grab drain capacity first and
+        # keep the running-first order within their tier
+        items.sort(key=lambda it: it[0].tier)
+        targets = self._drain_targets(cell)
+        moves: dict[int, int | None] = {}
+        dropped = 0
+        for i, (req, rt, retries, pin) in enumerate(items):
+            if not targets:
+                moves[req.request_id] = None
+                dropped += 1
+                self.drain_drops += 1
+                self.drain_drops_by_tier[req.tier] += 1
+                continue
+            dst = targets[(self._drain_rr + i) % len(targets)]
+            self.cells[dst].hand_in(req, rt, retries, pin)
+            moves[req.request_id] = dst
+            self.drained += 1
+        self._drain_rr += len(items)
+        self.fault_log.append(dict(
+            tick=self.tick, cell=cell, event="fail", reason=reason,
+            moved=len(items) - dropped, dropped=dropped))
+        return moves
+
+    def recover_cell(self, cell: int):
+        """Bring a failed cell back: it rejoins the batch empty (its tasks
+        stayed where they drained to) and its heartbeat window restarts —
+        a recovered cell must not be instantly re-declared dead off its
+        stale pre-outage heartbeat."""
+        self._check_cell(cell)
+        if cell not in self.dead:
+            raise ValueError(f"cell {cell} is not failed")
+        self.dead.discard(cell)
+        self._silent.discard(cell)
+        self.monitor.revive(cell)
+        self.stragglers.reset(cell)
+        self.recoveries += 1
+        self.fault_log.append(dict(tick=self.tick, cell=cell,
+                                   event="recover"))
+
+    def silence_cell(self, cell: int):
+        """Fault injection: the cell hangs — it stops processing AND stops
+        stamping heartbeats, so :meth:`check_faults` auto-fails it after the
+        monitor's timeout (cleared by :meth:`recover_cell`)."""
+        self._check_cell(cell)
+        self._silent.add(cell)
+
+    def check_faults(self) -> dict[int, dict[int, int | None]]:
+        """Auto-fail cells the heartbeat monitor declares dead (silent for
+        ``heartbeat_timeout`` process ticks); runs at the top of every
+        re-slice. Returns ``{cell: drain moves}`` for newly failed cells."""
+        failed = {}
+        for h in self.monitor.dead_hosts():
+            if h not in self.dead:
+                failed[h] = self.fail_cell(h, reason="heartbeat")
+        return failed
+
+    def set_link_budgets(self, budgets=None, *, scale: float | None = None):
+        """Degrade (or restore) the shared-link budgets IN PLACE — the
+        budget-only coupling change the device session survives.
+
+        Pass explicit per-link ``budgets`` (L,) or a ``scale`` factor
+        applied to the NOMINAL (construction-time) budgets. The coupling
+        object is mutated via ``CouplingSpec.set_budgets`` so its array
+        identity — what the session's topology guard compares — is
+        preserved; the next re-slice refreshes the (L,) device buffer
+        without rebuilding (``sesm.link_updates``)."""
+        if self.coupling is None:
+            raise ValueError(
+                "engine has no coupling: no link budgets to degrade")
+        if (budgets is None) == (scale is None):
+            raise ValueError("pass exactly one of budgets= or scale=")
+        if scale is not None:
+            budgets = self._nominal_budgets * float(scale)
+        self.coupling.set_budgets(budgets)
+
+    def _shed_pressure(self) -> int:
+        """Apply the TierPolicy: shed low-tier queued requests from cells
+        whose queues exceed the pressure threshold (before the solve)."""
+        pol = self.tier_policy
+        if pol is None:
+            return 0
+        total = 0
+        for c in self.live_cells:
+            cell = self.cells[c]
+            over = cell.queue_depth - pol.queue_threshold
+            if over <= 0:
+                continue
+            budget = dict(pol.drop_budgets)
+            # lowest-priority tier first; newest arrival first within a tier
+            cands = sorted(
+                ((cell._requests[rid].tier, pos, rid)
+                 for pos, rid in enumerate(cell._queue)),
+                key=lambda x: (-x[0], -x[1]))
+            for tier, _, rid in cands:
+                if over <= 0:
+                    break
+                if budget.get(tier, 0) <= 0:
+                    continue
+                budget[tier] -= 1
+                cell.shed(rid)
+                over -= 1
+                total += 1
+        self.sheds += total
+        return total
+
+    def _pre_reslice(self):
+        """Per-re-slice fault preamble: promote heartbeat silence to
+        failures, shed queue pressure, count degraded ticks."""
+        self.check_faults()
+        self._shed_pressure()
+        if self.degraded:
+            self.degraded_ticks += 1
+
     # ------------------------------------------------------------- control
     def submit(self, request: SliceRequest, cell: int):
+        self._check_cell(cell)
+        if cell in self.dead:
+            raise ValueError(
+                f"cell {cell} is failed; recover_cell({cell}) first, or "
+                f"submit to fallback_cell({cell})")
         rid = request.request_id
         for c, other in enumerate(self.cells):
             if rid in other._requests:
@@ -131,6 +385,16 @@ class MultiCellEngine:
     def remove(self, request_id: int, cell: int) -> TaskRuntime | None:
         """Withdraw a departed task from a cell (no retry/drop accounting)."""
         return self.cells[cell].remove(request_id)
+
+    def locate(self, request_id: int) -> int | None:
+        """The cell a request is currently live in (running or queued),
+        ``None`` if it left the system. Drains and auto-failovers move
+        requests without their submitter's knowledge — departure logic
+        should locate before removing."""
+        for c, cell in enumerate(self.cells):
+            if request_id in cell._requests:
+                return c
+        return None
 
     def gather(self) -> list[list[SliceRequest]]:
         """Every cell's candidate set (running + retry queue, pins applied),
@@ -158,6 +422,7 @@ class MultiCellEngine:
         batch sharded — same decisions, different residency trade-off."""
         if self.sesm.mesh is not None:
             return self.reslice_rebuild()
+        self._pre_reslice()
         rows, dirty = [], []
         for cell in self.cells:
             r, d = cell.sync_slots(consume=True)
@@ -173,6 +438,7 @@ class MultiCellEngine:
         restack the full host tables through ``SESM.solve_batch``. Kept as
         the reference implementation the fast path is tested (and benched)
         against."""
+        self._pre_reslice()
         decisions = self.sesm.solve_batch(self.gather(),
                                           coupling=self.coupling,
                                           pools=self.pools)
@@ -192,6 +458,10 @@ class MultiCellEngine:
         """
         if src == dst:
             raise ValueError("handover requires distinct src and dst cells")
+        if dst in self.dead or src in self.dead:
+            raise ValueError(
+                f"handover {src}->{dst}: cell "
+                f"{dst if dst in self.dead else src} is failed")
         req, rt, retries = self.cells[src].hand_out(request_id)
         pin = pinned_accuracy_at(req, rt.decision.z)
         self.cells[dst].hand_in(req, rt, retries, pin)
@@ -200,10 +470,54 @@ class MultiCellEngine:
 
     # --------------------------------------------------------------- data
     def process(self, wall_dt: float = 1.0):
-        """One engine tick: every cell runs its admitted tasks' jobs."""
-        for cell in self.cells:
+        """One engine tick: every LIVE cell runs its admitted tasks' jobs,
+        stamps its heartbeat and feeds the straggler EWMA its measured tick
+        time. Failed and silenced cells skip — which is exactly how a hung
+        cell becomes heartbeat-silent and gets auto-failed."""
+        self.tick += 1
+        for c, cell in enumerate(self.cells):
+            if c in self.dead or c in self._silent:
+                continue
+            t0 = time.perf_counter()
             cell.process(wall_dt)
+            self.stragglers.record(c, time.perf_counter() - t0)
+            self.monitor.beat(c, self.tick)
 
-    def metrics(self) -> dict[int, dict]:
-        """Per-cell metrics keyed by cell index (see CellRuntime.metrics)."""
-        return {c: cell.metrics() for c, cell in enumerate(self.cells)}
+    def metrics(self) -> dict:
+        """Per-cell metrics keyed by cell index (see CellRuntime.metrics),
+        plus a ``"totals"`` entry aggregating the engine-wide SLA counters:
+        retry-queue depth, drops/evictions/sheds (overall and per tier),
+        drain and fault-plane state, and the session-cache health counters
+        the degradation fast path is asserted on."""
+        out: dict = {c: cell.metrics() for c, cell in enumerate(self.cells)}
+
+        def merged(name: str) -> dict[int, int]:
+            total: collections.Counter = collections.Counter()
+            for cell in self.cells:
+                total.update(getattr(cell, name))
+            return dict(total)
+
+        out["totals"] = dict(
+            running=sum(len(cell.tasks) for cell in self.cells),
+            retry_depth=sum(cell.queue_depth for cell in self.cells),
+            drops=sum(cell.drops for cell in self.cells),
+            evictions=sum(cell.evictions for cell in self.cells),
+            sheds=sum(cell.sheds for cell in self.cells),
+            handovers=self.handovers,
+            drained=self.drained,
+            drain_drops=self.drain_drops,
+            recoveries=self.recoveries,
+            dead_cells=sorted(self.dead),
+            degraded=self.degraded,
+            degraded_ticks=self.degraded_ticks,
+            link_updates=self.sesm.link_updates,
+            session_rebuilds=self.sesm.session_rebuilds,
+            stragglers=sorted(self.stragglers.chronic()),
+            offered_by_tier=merged("offered_by_tier"),
+            admitted_by_tier=merged("admitted_by_tier"),
+            evictions_by_tier=merged("evictions_by_tier"),
+            drops_by_tier=merged("drops_by_tier"),
+            sheds_by_tier=merged("sheds_by_tier"),
+            drain_drops_by_tier=dict(self.drain_drops_by_tier),
+        )
+        return out

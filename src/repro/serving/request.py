@@ -26,6 +26,11 @@ class SliceRequest:
     min_accuracy: float
     n_ues: int = 1
     jobs_per_sec: float = 5.0
+    # --- SLA class (serving fault plane) ---
+    # priority tier for graceful degradation: 0 = highest priority; larger
+    # tiers are shed first under pressure (see serving.multicell.TierPolicy).
+    # Solver semantics are tier-blind — tiers act at the queue, not in SF-ESP.
+    tier: int = 0
     # --- stream characteristics (filled by the SDLA if left None) ---
     bits_per_job: float | None = None      # Mbit
     gpu_time_per_job: float | None = None  # s on one reference accelerator
