@@ -8,9 +8,11 @@ from .sfesp import (DeviceStack, ShardedStack, build_instance, check_solution,
                     lexicographic_cost, merge_coupling, next_pow2,
                     objective_value, restack, shard_plan, stack_instances,
                     task_link_load)
-from .greedy import (primal_gradient, solve, solve_device_batch, solve_greedy,
+from .greedy import (dispatch_device_batch, primal_gradient, solve,
+                     solve_device_batch, solve_greedy, unpack_device_batch,
                      solve_greedy_batch, solve_greedy_jax, solve_greedy_many,
                      solve_greedy_sharded)
+from . import events
 from .exact import solve_exact
 from .baselines import ALGORITHMS, run_algorithm, solve_coupled_ref
 from . import latency, scenarios, semantics
@@ -24,9 +26,11 @@ __all__ = [
     "group_offsets_of", "lexicographic_cost", "merge_coupling", "next_pow2",
     "objective_value", "restack", "shard_plan", "stack_instances",
     "task_link_load",
+    "dispatch_device_batch", "unpack_device_batch",
     "primal_gradient", "solve", "solve_device_batch", "solve_greedy",
     "solve_greedy_batch", "solve_greedy_jax", "solve_greedy_many",
     "solve_greedy_sharded",
     "solve_exact", "solve_coupled_ref",
-    "ALGORITHMS", "run_algorithm", "latency", "scenarios", "semantics",
+    "ALGORITHMS", "run_algorithm", "events", "latency", "scenarios",
+    "semantics",
 ]

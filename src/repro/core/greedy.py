@@ -32,7 +32,8 @@ from .types import ProblemInstance, Solution, StackedInstances
 
 __all__ = ["primal_gradient", "solve_greedy", "solve_greedy_jax",
            "solve_greedy_batch", "solve_greedy_sharded", "solve_greedy_many",
-           "solve", "solve_device_batch", "lexicographic_cost"]
+           "solve", "solve_device_batch", "dispatch_device_batch",
+           "unpack_device_batch", "lexicographic_cost"]
 
 _EPS_DEN = 1e-9
 
@@ -527,19 +528,45 @@ def solve_device_batch(dev: DeviceStack, *, flexible: bool = True,
     shared-link load (zeros-length when uncoupled). Decisions are identical
     to :func:`solve_greedy_batch` on the equivalently stacked host batch.
     """
+    return unpack_device_batch(dispatch_device_batch(
+        dev, flexible=flexible, inner=inner))
+
+
+def dispatch_device_batch(dev: DeviceStack, *, flexible: bool = True,
+                          inner: str = "jnp") -> tuple:
+    """LAUNCH the fused device solve without awaiting its result.
+
+    The async half of :func:`solve_device_batch`: returns a handle of
+    still-device-resident (possibly in-flight) arrays plus the batch shape
+    captured at dispatch. The caller keeps mutating host state — e.g.
+    ingesting the next tick's events — while the device computes, and blocks
+    only in :func:`unpack_device_batch`. JAX arrays are futures under
+    asynchronous dispatch, so this is just the solve with the host
+    synchronisation point (``np.asarray``) deferred to the unpack — reading
+    from ``DeviceStack.inputs()``, the double-buffer snapshot that stays
+    valid while the serving loop scatters the next tick's rows.
+    """
+    (lat_ok, grid, price, cap, alive0, cost,
+     link_load, link_cap, incidence, group) = dev.inputs()
     if dev.coupled:
         packed, residual, used = _serve_batch_coupled(
-            dev.lat_ok, dev.grid, dev.price, dev.capacity, dev.alive0,
-            dev.cost, dev.link_load, dev.link_cap, dev.incidence, dev.group,
+            lat_ok, grid, price, cap, alive0, cost,
+            link_load, link_cap, incidence, group,
             flexible=flexible, inner=inner)
     else:
         packed, residual = _serve_batch(
-            dev.lat_ok, dev.grid, dev.price, dev.capacity, dev.alive0,
-            dev.cost, flexible=flexible, inner=inner)
+            lat_ok, grid, price, cap, alive0, cost,
+            flexible=flexible, inner=inner)
         used = np.zeros(0)
-    B = dev.batch_size                   # drop inert pad_batch_to rows
-    packed = np.asarray(packed)[:B]
-    tmax = dev.max_tasks
+    # capture the shape now: unpack must not depend on the (mutable) stack
+    return packed, residual, used, dev.batch_size, dev.max_tasks
+
+
+def unpack_device_batch(dispatched: tuple) -> dict:
+    """BLOCK on a :func:`dispatch_device_batch` handle and unpack it into
+    the ``solve_device_batch`` result dict (the host synchronisation point)."""
+    packed, residual, used, B, tmax = dispatched
+    packed = np.asarray(packed)[:B]      # drop inert pad_batch_to rows
     wt = -(-tmax // 32)
     bits = packed[:, :wt].astype(np.uint32)
     idx = np.arange(tmax)

@@ -34,15 +34,18 @@ allocation grid, so a whole trace/sweep solves as ONE stacked device program.
 
 Fault schedules (the serving engine's fault plane, ``faults=`` of
 ``repro.serving.driver.drive_closed_loop``): a schedule is a plain
-``{step: [event, ...]}`` dict whose events are ``{"kind": "fail"|"recover",
-"cell": c}``, ``{"kind": "link_scale", "scale": f}`` / ``{"kind":
-"link_budgets", "budgets": (L,)}``, or ``{"kind": "arrivals", "cell": c,
-"events": [...]}`` (extra traffic in the :func:`closed_loop_arrivals` event
-format). Build them with :func:`outage_schedule` /
-:func:`random_outage_schedule` (cell outage + recovery windows),
-:func:`stepped_link_degradation` (staircase budget squeeze), and
-:func:`flash_crowd` (burst overlay); overlay independently-built schedules
-with :func:`compose_faults`. All generators are deterministic per seed.
+``{step: [event, ...]}`` dict whose events are the TYPED serving events of
+``repro.core.events`` — :class:`~repro.core.events.CellFault` for
+outage/recovery, :class:`~repro.core.events.LinkScale` for link
+degradation, and :class:`~repro.core.events.Arrival` (with a raw
+:func:`closed_loop_arrivals` traffic dict as payload) for traffic overlays
+— so a schedule is directly feedable to ``MultiCellEngine.ingest``. Build
+them with :func:`outage_schedule` / :func:`random_outage_schedule` (cell
+outage + recovery windows), :func:`stepped_link_degradation` (staircase
+budget squeeze), :func:`flash_crowd` (burst overlay) and
+:func:`arrival_events` (the base traffic itself, as events); overlay
+independently-built schedules with :func:`compose_faults`. All generators
+are deterministic per seed.
 """
 
 from __future__ import annotations
@@ -53,6 +56,7 @@ import numpy as np
 
 from . import latency as lat_mod
 from . import semantics
+from .events import Arrival, CellFault, LinkScale
 from .greedy import solve_greedy_batch
 from .sfesp import build_instance, next_pow2, restack, stack_instances
 from .types import CouplingSpec, ProblemInstance, ResourcePool, TaskSet
@@ -63,8 +67,8 @@ __all__ = [
     "fig6_sweep", "poisson_trace", "fps_trace", "fps_trace_instances",
     "multi_cell_pools", "multi_cell_trace", "metro_diurnal_trace",
     "mixed_workload_tasks", "closed_loop_trace", "closed_loop_arrivals",
-    "outage_schedule", "random_outage_schedule", "stepped_link_degradation",
-    "flash_crowd", "compose_faults",
+    "arrival_events", "outage_schedule", "random_outage_schedule",
+    "stepped_link_degradation", "flash_crowd", "compose_faults",
 ]
 
 # paper Section V-B threshold definitions ("lm" extends them to the
@@ -469,23 +473,51 @@ def closed_loop_arrivals(n_cells: int, horizon: int, *,
 # Fault schedules — disturbance event streams for the serving fault plane
 # ---------------------------------------------------------------------------
 
-def outage_schedule(windows) -> dict[int, list[dict]]:
+def arrival_events(n_cells: int, horizon: int, *,
+                   arrival_rate: float = 4.0, mean_holding: float = 5.0,
+                   acc: str = "med", lat: str = "high",
+                   jobs_per_sec: float = 5.0,
+                   seed: int = 0) -> dict[int, list[Arrival]]:
+    """:func:`closed_loop_arrivals` as a typed event schedule.
+
+    The same traffic realization (identical draws per seed), emitted as
+    ``{step: [Arrival, ...]}`` with the raw traffic dict as each event's
+    payload — the event-stream shape fault schedules use, so base traffic
+    composes with outages and link squeezes via :func:`compose_faults`.
+    Payload dicts are resolved into :class:`~repro.serving.request.
+    SliceRequest` objects by the consumer (the driver draws the tier and
+    books the departure).
+    """
+    base = closed_loop_arrivals(
+        n_cells, horizon, arrival_rate=arrival_rate,
+        mean_holding=mean_holding, acc=acc, lat=lat,
+        jobs_per_sec=jobs_per_sec, seed=seed)
+    sched: dict[int, list[Arrival]] = {}
+    for step, per_cell in enumerate(base):
+        evs = [Arrival(request=e, cell=c)
+               for c, cell_evs in enumerate(per_cell) for e in cell_evs]
+        if evs:
+            sched[step] = evs
+    return sched
+
+
+def outage_schedule(windows) -> dict[int, list[CellFault]]:
     """Explicit cell outage/recovery windows as a fault schedule.
 
     ``windows`` is an iterable of ``(cell, start, end)``: the cell fails at
     step ``start`` and recovers at step ``end`` (exclusive — an ``end`` past
-    the driving horizon simply never recovers). Overlapping windows for one
-    cell are the caller's bug; the engine raises on double-fail.
+    the driving horizon simply never recovers). Emitted as typed
+    :class:`~repro.core.events.CellFault` events.
     """
-    sched: dict[int, list[dict]] = {}
+    sched: dict[int, list[CellFault]] = {}
     for cell, start, end in windows:
         if end <= start:
             raise ValueError(
                 f"outage window ({cell}, {start}, {end}) is empty")
         sched.setdefault(int(start), []).append(
-            dict(kind="fail", cell=int(cell)))
+            CellFault(int(cell), failed=True, reason="scheduled"))
         sched.setdefault(int(end), []).append(
-            dict(kind="recover", cell=int(cell)))
+            CellFault(int(cell), failed=False))
     return sched
 
 
@@ -534,17 +566,15 @@ def stepped_link_degradation(horizon: int, *, start: int = 0,
         raise ValueError(f"floor {floor} outside [0, 1)")
     if n_steps < 1:
         raise ValueError("n_steps must be >= 1")
-    sched: dict[int, list[dict]] = {}
+    sched: dict[int, list[LinkScale]] = {}
     for k in range(n_steps):
         step = start + k
         if step >= horizon:
             break
         scale = 1.0 - (1.0 - floor) * (k + 1) / n_steps
-        sched.setdefault(step, []).append(
-            dict(kind="link_scale", scale=float(scale)))
+        sched.setdefault(step, []).append(LinkScale(scale=float(scale)))
     if recover and start + n_steps < horizon:
-        sched.setdefault(start + n_steps, []).append(
-            dict(kind="link_scale", scale=1.0))
+        sched.setdefault(start + n_steps, []).append(LinkScale(scale=1.0))
     return sched
 
 
@@ -557,39 +587,37 @@ def flash_crowd(n_cells: int, horizon: int, *, step: int, duration: int = 2,
 
     For ``duration`` steps from ``step``, the affected ``cells`` (default:
     all) receive EXTRA ``Poisson(arrival_rate)`` arrivals on top of the
-    driver's base traffic, in the :func:`closed_loop_arrivals` event format.
+    driver's base traffic — typed :class:`~repro.core.events.Arrival` events
+    carrying :func:`closed_loop_arrivals` traffic dicts as payloads.
     Deterministic per seed, independent of the base trace's stream.
     """
     cells = list(range(n_cells)) if cells is None else [int(c) for c in cells]
     rng = np.random.default_rng(seed)
     n_paper = len(semantics.PAPER_APPS)
-    sched: dict[int, list[dict]] = {}
+    sched: dict[int, list[Arrival]] = {}
     for s in range(step, min(step + duration, horizon)):
         for c in cells:
-            evs = []
             for _ in range(rng.poisson(arrival_rate)):
                 app = int(rng.integers(0, n_paper))
                 cls = semantics.APPS[app]
-                evs.append(dict(
+                sched.setdefault(s, []).append(Arrival(request=dict(
                     app=app, app_class=cls.name, service=cls.service,
                     min_accuracy=ACC_THRESHOLDS[acc][cls.service],
                     max_latency_s=LAT_THRESHOLDS[lat],
                     jobs_per_sec=float(jobs_per_sec),
-                    depart=s + float(rng.exponential(mean_holding))))
-            if evs:
-                sched.setdefault(s, []).append(
-                    dict(kind="arrivals", cell=c, events=evs))
+                    depart=s + float(rng.exponential(mean_holding))),
+                    cell=c))
     return sched
 
 
-def compose_faults(*schedules: dict[int, list[dict]]) -> dict[int, list[dict]]:
+def compose_faults(*schedules: dict[int, list]) -> dict[int, list]:
     """Overlay fault schedules into one ``{step: [event, ...]}`` dict.
 
     Events of one step concatenate in argument order (earlier schedules
     apply first), so e.g. an outage schedule composes with a link-degradation
     staircase and a flash crowd into one scenario.
     """
-    out: dict[int, list[dict]] = {}
+    out: dict[int, list] = {}
     for sched in schedules:
         for step, events in sched.items():
             out.setdefault(int(step), []).extend(events)

@@ -445,6 +445,24 @@ class DeviceStack:
     def max_tasks(self) -> int:
         return self.lat_ok.shape[1]
 
+    def inputs(self) -> tuple:
+        """Capture the solver's input bindings — the DOUBLE-BUFFER hand-off.
+
+        A dispatched-but-unawaited solve must read tick N's tables even if
+        the serving loop starts preparing tick N+1 while it is in flight.
+        The mutable buffers here (``lat_ok``/``alive0``/``link_load``/
+        ``link_cap``) are replaced — not written through — by the donated
+        scatters of :meth:`update_rows` / :meth:`update_link_budgets`: the
+        scatter output becomes the NEW front buffer bound on ``self``, while
+        any solve dispatched from a previous capture keeps the old arrays
+        alive as its back buffer (XLA copies instead of aliasing a donated
+        buffer that still has a pending consumer). So an async dispatcher
+        takes this snapshot once at launch and never re-reads ``self``.
+        """
+        return (self.lat_ok, self.grid, self.price, self.capacity,
+                self.alive0, self.cost, self.link_load, self.link_cap,
+                self.incidence, self.group)
+
     def update_rows(self, b_idx, t_idx, lat_ok_rows, alive_rows,
                     load_rows=None):
         """Delta-scatter changed task rows into the device buffers.

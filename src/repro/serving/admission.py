@@ -19,12 +19,41 @@ from repro.core import (CouplingSpec, ResourcePool, check_solution,
                         restack, semantics, solve, solve_greedy_batch,
                         solve_greedy_sharded, stack_instances)
 from repro.core import latency as lat_mod
-from repro.core.greedy import solve_device_batch
+from repro.core.greedy import dispatch_device_batch, unpack_device_batch
 from repro.core.sfesp import DeviceStack, empty_device_stack
 from .request import SliceRequest
 from .sdla import SDLA
 
-__all__ = ["SliceDecision", "SESM"]
+__all__ = ["PendingSolve", "SliceDecision", "SESM"]
+
+
+class PendingSolve:
+    """Handle to a dispatched, not-yet-awaited re-slice solve.
+
+    Returned by ``SESM.solve_slots(..., wait=False)``: the device program is
+    launched and the host mirrors it unpacks against are snapshotted (the
+    back buffer), so the serving loop can keep mutating its slot tables —
+    ingesting tick N+1's events — while tick N solves. :meth:`wait` blocks
+    on the device result exactly once and returns the per-cell decisions;
+    repeat calls return the same list.
+    """
+
+    def __init__(self, resolve):
+        self._resolve = resolve
+        self._result = None
+
+    def wait(self):
+        if self._resolve is not None:
+            self._result = self._resolve()
+            self._resolve = None
+        return self._result
+
+    @classmethod
+    def ready(cls, decisions) -> "PendingSolve":
+        """An already-resolved handle (empty ticks, metro-mode rebuilds)."""
+        p = cls(None)
+        p._result = decisions
+        return p
 
 
 @dataclasses.dataclass
@@ -222,8 +251,8 @@ class SESM:
     def solve_slots(self, slot_rows: list[list[SliceRequest | None]],
                     dirty: list[list[int]],
                     coupling: CouplingSpec | None = None,
-                    pools: Sequence[ResourcePool] | None = None
-                    ) -> list[list[SliceDecision]]:
+                    pools: Sequence[ResourcePool] | None = None,
+                    wait: bool = True):
         """Device-resident re-slice: solve the slotted candidate sets,
         recomputing and re-uploading ONLY the dirty rows.
 
@@ -248,6 +277,13 @@ class SESM:
         degradation): same coupling object, new budget VALUES — detected by
         value snapshot and applied as a single (L,) device refresh
         (``sesm.link_updates``) with the session kept alive.
+
+        ``wait=False`` returns a :class:`PendingSolve` instead of decisions:
+        the dirty rows are consumed, the device program launches, and the
+        per-slot host mirrors the unpack needs are snapshotted into the
+        handle (the double-buffered back buffer) — the caller blocks only at
+        ``PendingSolve.wait()``, typically after ingesting the next tick's
+        events. Decisions are identical either way.
         """
         B = len(slot_rows)
         if coupling is not None and coupling.num_cells != B:
@@ -276,7 +312,7 @@ class SESM:
             self.session_rebuilds += 1
         if sess is None:
             if not live:
-                return out
+                return out if wait else PendingSolve.ready(out)
             sess = self._build_session(slot_rows, coupling, pools, scale)
             self._serve_session = sess
             self.fresh_stacks += 1
@@ -294,12 +330,23 @@ class SESM:
                 sess.link_cap_state = coupling.link_capacity.copy()
                 self.link_updates += 1
             if not live:
-                return out
+                return out if wait else PendingSolve.ready(out)
             self.restacks += 1
         self._sync_rows(sess, slot_rows)
-        res = solve_device_batch(sess.dev, flexible=flexible,
-                                 inner=self.inner)
-        return self._slot_decisions(sess, slot_rows, res, out)
+        dispatched = dispatch_device_batch(sess.dev, flexible=flexible,
+                                           inner=self.inner)
+        unpack = self._slot_unpacker(sess, slot_rows, out)
+        if wait:
+            return unpack(unpack_device_batch(dispatched))
+        return PendingSolve(lambda: unpack(unpack_device_batch(dispatched)))
+
+    def ready_solve(self, request_sets, coupling=None,
+                    pools=None) -> PendingSolve:
+        """:meth:`solve_batch` wrapped as an already-resolved
+        :class:`PendingSolve` — the dispatch-shaped front door for paths that
+        solve host-blocking (metro-mode sharded rebuilds)."""
+        return PendingSolve.ready(self.solve_batch(
+            request_sets, coupling=coupling, pools=pools))
 
     def _pool_state(self, B: int, pools) -> np.ndarray:
         cell_pools = [self.pool] * B if pools is None else pools
@@ -401,34 +448,59 @@ class SESM:
         self.delta_rows += d
         sess.pending.clear()
 
-    def _slot_decisions(self, sess: _ServeSession, slot_rows, res, out):
-        """Unpack the compact device output into per-cell SliceDecisions."""
+    def _slot_unpacker(self, sess: _ServeSession, slot_rows, out):
+        """Build the decision unpacker for one dispatched slot solve.
+
+        Snapshots everything the unpack needs from the session's host
+        mirrors AT DISPATCH TIME — live positions, per-row z*/app/stream
+        scalars, request objects, resource names, latency params — so the
+        returned closure depends only on the device result. That snapshot is
+        the host half of the double buffer: a ``wait=False`` caller keeps
+        ingesting events (which may dirty rows and later overwrite the
+        mirrors) while the solve is in flight, and the unpack still reports
+        against the state that was actually solved.
+        """
         pos = [(b, t) for b, rows in enumerate(slot_rows)
                for t, r in enumerate(rows) if r is not None]
         if not pos:
-            return out
+            return lambda res: out
         bb = np.fromiter((b for b, _ in pos), np.int64, len(pos))
         tt = np.fromiter((t for _, t in pos), np.int64, len(pos))
-        adm = res["admitted"][bb, tt]
-        safe = np.clip(res["alloc_idx"][bb, tt], 0, None)
-        z = np.where(adm & sess.has_z[bb, tt], sess.z_star[bb, tt], 1.0)
-        alloc = sess.grid[safe] * adm[:, None]
-        # the identical first-principles report as _decisions/check_solution
-        lat = lat_mod.latency(self.sdla.lat_params, sess.bits[bb, tt],
-                              sess.rate[bb, tt], sess.gpu_t[bb, tt], z, alloc)
-        acc = semantics.accuracy(sess.app_idx[bb, tt], z)
-        for i, (b, t) in enumerate(pos):
-            names = sess.names[b]
-            out[b].append(SliceDecision(
-                request=slot_rows[b][t],
-                admitted=bool(adm[i]),
-                z=float(z[i]),
-                alloc={n: float(alloc[i, k]) for k, n in enumerate(names)},
-                expected_latency_s=float(lat[i]),
-                expected_accuracy=float(acc[i]),
-                cell=b,
-            ))
-        return out
+        # fancy indexing copies: these are value snapshots, not views
+        has_z = sess.has_z[bb, tt]
+        z_star = sess.z_star[bb, tt]
+        app_idx = sess.app_idx[bb, tt]
+        bits = sess.bits[bb, tt]
+        rate = sess.rate[bb, tt]
+        gpu_t = sess.gpu_t[bb, tt]
+        reqs = [slot_rows[b][t] for b, t in pos]
+        names = list(sess.names)
+        grid = sess.grid
+        lat_params = self.sdla.lat_params
+
+        def unpack(res):
+            adm = res["admitted"][bb, tt]
+            safe = np.clip(res["alloc_idx"][bb, tt], 0, None)
+            z = np.where(adm & has_z, z_star, 1.0)
+            alloc = grid[safe] * adm[:, None]
+            # the identical first-principles report as
+            # _decisions/check_solution
+            lat = lat_mod.latency(lat_params, bits, rate, gpu_t, z, alloc)
+            acc = semantics.accuracy(app_idx, z)
+            for i, (b, t) in enumerate(pos):
+                out[b].append(SliceDecision(
+                    request=reqs[i],
+                    admitted=bool(adm[i]),
+                    z=float(z[i]),
+                    alloc={n: float(alloc[i, k])
+                           for k, n in enumerate(names[b])},
+                    expected_latency_s=float(lat[i]),
+                    expected_accuracy=float(acc[i]),
+                    cell=b,
+                ))
+            return out
+
+        return unpack
 
     def _decisions(self, requests, inst, sol,
                    cell: int | None = None) -> list[SliceDecision]:

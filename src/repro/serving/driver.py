@@ -2,19 +2,23 @@
 
 ``core.scenarios.closed_loop_trace`` evaluates the closed loop OFFLINE (build
 instances, solve, feed decisions back). This module runs the same traffic
-model through the live serving engine instead: arrivals become
-:class:`SliceRequest` submissions, departures withdraw tasks, mobility calls
-:meth:`MultiCellEngine.handover`, and every step is one joint coupled
-re-slice — the control-plane decisions now land in the data plane they were
-computed for.
+model through the live serving engine instead — as a thin EVENT-STREAM
+generator over :meth:`MultiCellEngine.ingest`: arrivals become typed
+:class:`~repro.core.events.Arrival` events carrying a :class:`SliceRequest`,
+departures :class:`~repro.core.events.Departure` events, mobility
+:class:`~repro.core.events.Handover` events, the data-plane tick a
+:class:`~repro.core.events.Tick` — and every step is one joint coupled
+re-slice. The driver's only jobs are realizing the traffic model (RNG draws,
+departure schedules) and bookkeeping the per-step records; every engine
+mutation flows through the one ingestion API.
 
 The fault plane plugs in here too: a ``faults=`` schedule (built by the
 ``repro.core.scenarios`` fault generators — cell outage windows, stepped
-link degradation, flash-crowd overlays) is applied at the top of each step,
-arrivals aimed at a failed cell re-home to its
-:meth:`MultiCellEngine.fallback_cell`, and :func:`sla_scorecard` reduces a
-run to the per-tier SLA report operators actually track (admission rate,
-deadline-hit rate, eviction/drop/shed counts, degraded-tick totals).
+link degradation, flash-crowd overlays) is a ``{step: [event, ...]}`` map of
+the SAME typed events, ingested at the top of each step; arrivals aimed at a
+failed cell re-home to the engine's fallback cell, and :func:`sla_scorecard`
+reduces a run to the per-tier SLA report operators actually track (admission
+rate, deadline-hit rate, eviction/drop/shed counts, degraded-tick totals).
 """
 
 from __future__ import annotations
@@ -24,6 +28,7 @@ import itertools
 import numpy as np
 
 from repro.core import scenarios
+from repro.core.events import Arrival, Departure, Handover, Tick
 from .multicell import MultiCellEngine
 from .request import SliceRequest
 
@@ -33,9 +38,9 @@ _SERVICE_LABEL = {"detection": "object-recognition",
                   "segmentation": "segmentation", "lm": "lm-serving"}
 
 
-def _submit_event(engine: MultiCellEngine, ev: dict, cell: int,
-                  tier: int) -> SliceRequest:
-    req = SliceRequest(
+def _request_of(ev: dict, tier: int) -> SliceRequest:
+    """Resolve a scenarios traffic-event dict into a submittable request."""
+    return SliceRequest(
         service=_SERVICE_LABEL.get(ev["service"], ev["service"]),
         model="yolox" if ev["service"] == "detection" else "bisenetv2",
         app_class=ev["app_class"],
@@ -43,8 +48,6 @@ def _submit_event(engine: MultiCellEngine, ev: dict, cell: int,
         min_accuracy=ev["min_accuracy"],
         jobs_per_sec=ev["jobs_per_sec"],
         tier=tier)
-    engine.submit(req, cell)
-    return req
 
 
 def drive_closed_loop(engine: MultiCellEngine, horizon: int, *,
@@ -53,26 +56,31 @@ def drive_closed_loop(engine: MultiCellEngine, horizon: int, *,
                       lat: str = "high", seed: int = 0,
                       process: bool = False,
                       wall_dt: float = 1.0,
-                      faults: dict[int, list[dict]] | None = None,
+                      faults: dict[int, list] | None = None,
                       tiers=None) -> list[dict]:
     """Run ``horizon`` closed-loop steps of Poisson traffic through ``engine``.
 
-    Per step: (i) this step's fault events are applied (see below), (ii)
-    departed tasks are withdrawn — located first, since drains move tasks
-    between cells, (iii) each admitted task hands over to a random other
-    LIVE cell with probability ``handover_prob`` (achieved-z accuracy pin —
-    see :meth:`MultiCellEngine.handover`), (iv) fresh arrivals from
-    :func:`repro.core.scenarios.closed_loop_arrivals` are submitted —
-    arrivals aimed at a failed cell re-home to its fallback cell, or count
-    as ``lost`` when no cell is live, (v) the engine re-slices jointly, and
-    optionally (vi) ``process`` runs the admitted jobs for ``wall_dt``
+    Per step, the driver generates one event batch per phase and feeds it to
+    :meth:`MultiCellEngine.ingest`: (i) this step's fault events (see below),
+    (ii) :class:`Departure` events for tasks whose holding time expired —
+    with ``cell=None``, since drains move tasks between cells without the
+    driver's knowledge, (iii) a :class:`Handover` to a random other LIVE
+    cell for each admitted task with probability ``handover_prob``
+    (achieved-z accuracy pin — see :meth:`MultiCellEngine.handover`), (iv)
+    :class:`Arrival` events for fresh
+    :func:`repro.core.scenarios.closed_loop_arrivals` traffic — arrivals
+    aimed at a failed cell re-home to its fallback cell, or count as
+    ``lost`` when no cell is live, (v) the engine re-slices jointly, and
+    optionally (vi) a :class:`Tick` runs the admitted jobs for ``wall_dt``
     seconds of wall time.
 
-    ``faults`` is a ``{step: [event, ...]}`` schedule (the
-    ``repro.core.scenarios`` fault generators): ``fail``/``recover`` toggle
-    cell outages — drain moves re-point the driver's departure schedules —
-    ``link_scale``/``link_budgets`` degrade the shared links in place, and
-    ``arrivals`` events overlay extra traffic (flash crowds).
+    ``faults`` is a ``{step: [event, ...]}`` schedule of typed
+    ``repro.core.events`` events (the ``repro.core.scenarios`` fault
+    generators): :class:`CellFault` toggles cell outages — drain moves
+    re-point the driver's departure schedules — :class:`LinkScale` degrades
+    the shared links in place, and :class:`Arrival` events with raw traffic
+    dicts overlay extra traffic (flash crowds; the driver resolves them into
+    requests with tier draws and departure schedules like base traffic).
 
     ``tiers`` assigns each submitted request a priority tier drawn uniformly
     from the given sequence (dedicated RNG at ``seed + 23``, so the base
@@ -104,37 +112,27 @@ def drive_closed_loop(engine: MultiCellEngine, horizon: int, *,
     depart: dict[int, tuple[float, int]] = {}   # rid → (depart step, cell)
     records = []
     for step in range(horizon):
-        overlay: list[tuple[int, list[dict]]] = []   # flash-crowd arrivals
-        for ev in faults.get(step, ()):
-            kind = ev["kind"]
-            if kind == "fail":
-                moves = engine.fail_cell(ev["cell"])
-                for rid, dst in moves.items():
-                    if rid in depart:
-                        if dst is None:
-                            del depart[rid]
-                        else:
-                            depart[rid] = (depart[rid][0], dst)
-            elif kind == "recover":
-                engine.recover_cell(ev["cell"])
-            elif kind == "link_scale":
-                engine.set_link_budgets(scale=ev["scale"])
-            elif kind == "link_budgets":
-                engine.set_link_budgets(budgets=ev["budgets"])
-            elif kind == "arrivals":
-                overlay.append((ev["cell"], ev["events"]))
-            else:
-                raise ValueError(f"unknown fault event kind {kind!r}")
-        for rid, (d, cell) in list(depart.items()):
-            if d <= step:
-                # heartbeat auto-failovers drain without telling the driver:
-                # locate the task before withdrawing it
-                where = engine.locate(rid)
-                if where is not None:
-                    engine.remove(rid, where)
-                del depart[rid]
+        # (i) fault events; flash-crowd Arrival overlays (raw traffic dicts)
+        # are deferred to the arrivals phase, after the base traffic
+        overlay = [f for f in faults.get(step, ()) if type(f) is Arrival]
+        summary = engine.ingest(
+            f for f in faults.get(step, ()) if type(f) is not Arrival)
+        for rid, dst in summary["moves"].items():
+            if rid in depart:
+                if dst is None:
+                    del depart[rid]
+                else:
+                    depart[rid] = (depart[rid][0], dst)
+        # (ii) departures — located by the engine (cell=None), since
+        # heartbeat auto-failovers drain without telling the driver
+        due = [rid for rid, (d, _) in depart.items() if d <= step]
+        engine.ingest(Departure(rid) for rid in due)
+        for rid in due:
+            del depart[rid]
+        # (iii) mobility
         handed_in = [0] * engine.num_cells
         if handover_prob > 0.0 and engine.num_cells > 1:
+            moves = []
             for c, cell in enumerate(engine.cells):
                 for rid in list(cell.tasks):
                     if rng.random() < handover_prob:
@@ -142,26 +140,28 @@ def drive_closed_loop(engine: MultiCellEngine, horizon: int, *,
                         target += target >= c
                         if target in engine.dead:
                             continue       # no live neighbor drawn: stay put
-                        engine.handover(rid, c, target)
+                        moves.append(Handover(rid, c, target))
                         # tasks submitted outside the driver have no departure
                         # schedule — they just move cells
                         if rid in depart:
                             depart[rid] = (depart[rid][0], target)
                         handed_in[target] += 1
+            engine.ingest(moves)
+        # (iv) arrivals: base traffic first, then flash-crowd overlays, one
+        # resolved Arrival event each (engine-side fallback re-homing)
+        offered = [(c, ev) for c, evs in enumerate(events[step])
+                   for ev in evs]
+        offered += [(a.cell, a.request) for a in overlay]
+        batch = [(c, ev, _request_of(ev, draw_tier())) for c, ev in offered]
+        engine.ingest(Arrival(req, c) for c, ev, req in batch)
         lost = [0] * engine.num_cells
-        step_arrivals = [(c, evs) for c, evs in enumerate(events[step])]
-        for c, evs in step_arrivals + overlay:
-            for ev in evs:
-                tier = draw_tier()
-                target = c
-                if target in engine.dead:
-                    fb = engine.fallback_cell(target)
-                    if fb is None:
-                        lost[c] += 1
-                        continue
-                    target = fb
-                req = _submit_event(engine, ev, target, tier)
-                depart[req.request_id] = (ev["depart"], target)
+        for c, ev, req in batch:
+            where = engine.locate(req.request_id)
+            if where is None:
+                lost[c] += 1               # no live cell to re-home to
+            else:
+                depart[req.request_id] = (ev["depart"], where)
+        # (v) one joint re-slice
         fresh_before = engine.sesm.fresh_stacks
         drops_before = [cell.drops for cell in engine.cells]
         sheds_before = [cell.sheds for cell in engine.cells]
@@ -186,8 +186,9 @@ def drive_closed_loop(engine: MultiCellEngine, horizon: int, *,
                 handovers=handed_in[c], lost=lost[c],
                 dead=c in engine.dead, degraded=engine.degraded,
                 restacked=restacked))
+        # (vi) the data-plane tick
         if process:
-            engine.process(wall_dt)
+            engine.ingest([Tick(wall_dt)])
     return records
 
 

@@ -18,32 +18,62 @@ The module is split control/data:
   the pending/retry queue (rejected requests re-offer up to ``max_retries``
   times before dropping, the ``closed_loop_trace`` semantics), handover
   warm-start pins, job execution, metrics. It never talks to a solver.
-* :class:`EdgeServingEngine` is the single-cell CONTROL loop: one
-  ``CellRuntime`` + one SESM, ``reslice()`` = gather → solve → apply.
+* :class:`EdgeServingEngine` is a deprecated thin 1-cell view over
+  :class:`repro.serving.multicell.MultiCellEngine` (kept as a shim).
 * The multi-cell control loop lives in
-  :class:`repro.serving.multicell.MultiCellEngine`, which gathers N cell
-  runtimes into ONE coupled ``SESM.solve_batch`` call per re-slice.
+  :class:`repro.serving.multicell.MultiCellEngine`, which syncs N cell
+  runtimes' solver-row slots into ONE coupled device program per re-slice.
+
+STRUCT-OF-ARRAYS DATA PLANE. ``CellRuntime`` stores per-request state in
+slot-indexed numpy tables that mirror the solver rows one-to-one: ``_rid``
+(request id, -1 = free), ``_state`` (free/queued/running), ``_tier``,
+``_retries_left``, ``_pin`` (handover warm-start accuracy bound, 0.0 =
+unpinned), ``_gen`` (per-arrival generation), ``_deadline`` / ``_bits``
+(SLA deadline and resolved stream size), ``_dirty`` (accumulated
+changed-row bits) and the ``_sig_gen`` / ``_sig_pin`` signatures of the
+last consumed sync. A request is seated in the lowest free slot at the
+first :meth:`CellRuntime.sync_slots` after it arrives (a min-heap of freed
+slots keeps assignment identical to the old candidate-order walk), keeps
+that slot for as long as it stays a candidate, and frees it on departure/
+drop/handover — so slot sync is a vectorized signature compare over the
+tables plus a ``flatnonzero`` of the dirty bits instead of a Python loop
+over request objects, and event ingestion between ticks costs O(1) numpy
+scalar writes per event. Three slot-indexed object tables ride along for
+the parts that are inherently per-object: ``_req`` (the original request),
+``_row`` (the solver-row view with the pin applied — what ``sync_slots``
+returns without re-deriving), and ``_rt`` (the live or parked
+:class:`TaskRuntime`).
+
+The FIFO queue is a list of ``(rid, gen)`` entries with LAZY deletion: a
+departure of a queued request only detaches its id from the tables (O(1));
+the stale queue entry is skipped by generation mismatch wherever the queue
+is read and physically purged by the per-tick rebuild in :meth:`apply` —
+so a churn-heavy event window never pays O(queue) per departure.
 """
 
 from __future__ import annotations
 
 import collections
 import dataclasses
+import heapq
 import time
 
 import jax
 import numpy as np
 
 from repro.core import ResourcePool, semantics
-from repro.core.latency import LatencyParams, latency as latency_model
+from repro.core.latency import latency as latency_model
 from repro.data.pipeline import FrameStream
 from repro.kernels.resize import ops as resize_ops
-from .admission import SESM, SliceDecision
+from .admission import SliceDecision
 from .request import SliceRequest
 from .sdla import SDLA
 
 __all__ = ["CellRuntime", "EdgeServingEngine", "TaskRuntime",
            "pinned_accuracy_at"]
+
+# slot states
+_FREE, _QUEUED, _RUNNING = 0, 1, 2
 
 
 @dataclasses.dataclass
@@ -66,10 +96,16 @@ class CellRuntime:
     its admitted ``z`` (the stream is already encoded — warm start); the pin
     clears on rejection, since an unserved task has no encoded stream to
     warm-start from.
+
+    ``registry`` is an optional shared ``{request_id: cell}`` index (the
+    engine-level O(1) ``locate``): every path a request enters or leaves the
+    cell through keeps it consistent — submit, hand-in, departure, handover,
+    drain, shed, retry-exhaustion drop.
     """
 
     def __init__(self, pool: ResourcePool, sdla: SDLA, *, max_batch: int = 8,
-                 max_retries: int = 2, cell: int | None = None):
+                 max_retries: int = 2, cell: int | None = None,
+                 registry: dict[int, int] | None = None):
         self.pool = pool
         self.sdla = sdla
         self.cell = cell
@@ -92,90 +128,245 @@ class CellRuntime:
         self.evictions_by_tier: collections.Counter = collections.Counter()
         self.drops_by_tier: collections.Counter = collections.Counter()
         self.sheds_by_tier: collections.Counter = collections.Counter()
-        self._requests: dict[int, SliceRequest] = {}   # originals, unpinned
-        self._queue: list[int] = []                # pending request ids, FIFO
-        self._retries: dict[int, int] = {}         # rejections left
-        self._pinned: dict[int, float] = {}        # handover warm-start bound
-        self._carry: dict[int, TaskRuntime] = {}   # handover runtime carry
-        # stable solver-row slots for the delta re-slice fast path: slot
-        # index → request id (None = cleared row), per-slot change signature,
-        # and a per-arrival generation so a reused request id (departed, then
-        # resubmitted) can never alias its predecessor's cached row
-        self._slots: list[int | None] = []
-        self._slot_sig: list[tuple | None] = []
-        self._dirty_slots: set[int] = set()
-        self._gen: dict[int, int] = {}
+        # ------------------------------------------------ SoA slot tables
+        # numpy halves (slot index == solver row; see the module docstring)
+        cap = 8
+        self._cap = cap
+        self._hi = 0                              # slot high-watermark
+        self._rid = np.full(cap, -1, np.int64)
+        self._state = np.zeros(cap, np.int8)
+        self._tier = np.zeros(cap, np.int32)
+        self._retries_left = np.zeros(cap, np.int32)
+        self._pin = np.zeros(cap)                 # 0.0 = unpinned
+        self._gen = np.zeros(cap, np.int64)
+        self._deadline = np.zeros(cap)            # request.max_latency_s
+        self._bits = np.zeros(cap)                # resolved stream Mbit/job
+        self._dirty = np.zeros(cap, bool)
+        self._sig_gen = np.full(cap, -1, np.int64)
+        self._sig_pin = np.full(cap, -1.0)
+        # object halves (slot-indexed)
+        self._req: list[SliceRequest | None] = [None] * cap
+        self._row: list[SliceRequest | None] = [None] * cap
+        self._rt: list[TaskRuntime | None] = [None] * cap
+        # maps / queues
+        self._slot_of: dict[int, int] = {}        # rid → seated slot
+        self._free_slots: list[int] = []          # min-heap of freed slots
+        # arrivals not yet seated: rid → (req, retries, pin, runtime, gen)
+        self._pending_in: dict[int, tuple] = {}
+        self._queue: list[tuple[int, int]] = []   # FIFO of (rid, gen)
+        self._registry = registry
         self._arrivals = 0
         self.frames = FrameStream()
         self._models: dict[str, tuple] = {}
         self.step = 0
+
+    # ------------------------------------------------------- SoA plumbing
+    def _grow(self, need: int):
+        new = max(self._cap * 2, need)
+        for name in ("_rid", "_state", "_tier", "_retries_left", "_pin",
+                     "_gen", "_deadline", "_bits", "_dirty", "_sig_gen",
+                     "_sig_pin"):
+            old = getattr(self, name)
+            arr = np.zeros(new, old.dtype)
+            arr[:self._cap] = old
+            if name == "_rid" or name == "_sig_gen":
+                arr[self._cap:] = -1
+            elif name == "_sig_pin":
+                arr[self._cap:] = -1.0
+            setattr(self, name, arr)
+        pad = [None] * (new - self._cap)
+        self._req += pad
+        self._row += pad
+        self._rt += pad
+        self._cap = new
+
+    def _free_slot(self, slot: int):
+        """Detach a slot: cleared row, dirty, signatures reset so a future
+        re-seating re-dirties it even across a consuming sync."""
+        self._rid[slot] = -1
+        self._state[slot] = _FREE
+        self._pin[slot] = 0.0
+        self._dirty[slot] = True
+        self._sig_gen[slot] = -1
+        self._sig_pin[slot] = -1.0
+        self._req[slot] = None
+        self._row[slot] = None
+        self._rt[slot] = None
+        heapq.heappush(self._free_slots, slot)
+
+    def _enter(self, request: SliceRequest, retries: int, pin: float,
+               runtime: TaskRuntime | None):
+        """Shared admission-to-the-cell path of submit/hand_in: park the
+        request as a pending (unseated) arrival; the next sync seats it."""
+        rid = request.request_id
+        if rid in self._slot_of or rid in self._pending_in:
+            raise ValueError(
+                f"request {rid} is already live in cell {self.cell} "
+                "(running or queued); clone it with a fresh request_id to "
+                "submit a second instance")
+        self._arrivals += 1
+        gen = self._arrivals
+        self._pending_in[rid] = (request, retries, pin, runtime, gen)
+        self._queue.append((rid, gen))
+        if self._registry is not None:
+            self._registry[rid] = self.cell
+        return gen
+
+    def _leave(self, rid: int):
+        if self._registry is not None:
+            self._registry.pop(rid, None)
+
+    def queued_ids(self) -> list[int]:
+        """The LIVE queue in FIFO order (stale lazy-deleted entries skipped
+        by generation mismatch; see the module docstring)."""
+        out = []
+        pend = self._pending_in
+        slot_of = self._slot_of
+        for rid, gen in self._queue:
+            p = pend.get(rid)
+            if p is not None:
+                if p[4] == gen:
+                    out.append(rid)
+                continue
+            slot = slot_of.get(rid)
+            if slot is not None and self._gen[slot] == gen \
+                    and self._state[slot] == _QUEUED:
+                out.append(rid)
+        return out
+
+    # ---------------------------------------------------------- accessors
+    def is_live(self, rid: int) -> bool:
+        """True while the request is a candidate here (running or queued)."""
+        return rid in self._slot_of or rid in self._pending_in
+
+    def live_ids(self) -> list[int]:
+        """All live request ids: running first (task order), then queue."""
+        return list(self.tasks) + self.queued_ids()
+
+    def request_of(self, rid: int) -> SliceRequest:
+        """The ORIGINAL (unpinned) request of a live id."""
+        p = self._pending_in.get(rid)
+        if p is not None:
+            return p[0]
+        return self._req[self._slot_of[rid]]
+
+    def tier_of(self, rid: int) -> int:
+        p = self._pending_in.get(rid)
+        if p is not None:
+            return p[0].tier
+        return int(self._tier[self._slot_of[rid]])
+
+    def pin_of(self, rid: int) -> float | None:
+        """The handover warm-start accuracy bound, ``None`` if unpinned."""
+        p = self._pending_in.get(rid)
+        pin = p[2] if p is not None else float(self._pin[self._slot_of[rid]])
+        return pin if pin > 0.0 else None
+
+    def retries_left(self, rid: int) -> int:
+        p = self._pending_in.get(rid)
+        if p is not None:
+            return p[1]
+        return int(self._retries_left[self._slot_of[rid]])
+
+    def carried(self, rid: int) -> TaskRuntime | None:
+        """The live (running) or parked (carry) runtime of a request."""
+        p = self._pending_in.get(rid)
+        if p is not None:
+            return p[3]
+        return self._rt[self._slot_of[rid]]
 
     # ------------------------------------------------------------- control
     @property
     def pending(self) -> tuple[SliceRequest, ...]:
         """Read-only view of the retry/pending queue (a tuple on purpose:
         appending to it would silently go nowhere — use :meth:`submit`)."""
-        return tuple(self._requests[rid] for rid in self._queue)
+        return tuple(self.request_of(rid) for rid in self.queued_ids())
 
     @property
     def queue_depth(self) -> int:
         """Current retry/pending queue length (the shedding pressure signal)."""
-        return len(self._queue)
+        return len(self.queued_ids())
 
     def register_model(self, name: str, cfg, params, infer_fn):
         """infer_fn(params, inputs) → outputs; used for LM-service tasks."""
         self._models[name] = (cfg, params, infer_fn)
 
     def submit(self, request: SliceRequest):
-        rid = request.request_id
-        if rid in self._requests:
-            # a live duplicate would be double-counted by every solve and
-            # corrupt the retry/queue bookkeeping; dropped/departed ids may
-            # be resubmitted (their state was cleaned up)
-            raise ValueError(
-                f"request {rid} is already live in cell {self.cell} "
-                "(running or queued); clone it with a fresh request_id to "
-                "submit a second instance")
-        self._requests[rid] = request
-        self._queue.append(rid)
-        self._retries.setdefault(rid, self.max_retries)
-        self._arrivals += 1
-        self._gen[rid] = self._arrivals
+        self._enter(request, self.max_retries, 0.0, None)
 
     def remove(self, request_id: int) -> TaskRuntime | None:
         """Withdraw a task (departure): no retry, no drop accounting."""
-        rt = self.tasks.pop(request_id, None) \
-            or self._carry.pop(request_id, None)
-        self._requests.pop(request_id, None)
-        self._queue = [r for r in self._queue if r != request_id]
-        self._retries.pop(request_id, None)
-        self._pinned.pop(request_id, None)
-        # safe to forget: a resubmission writes a fresh generation anyway
-        self._gen.pop(request_id, None)
+        p = self._pending_in.pop(request_id, None)
+        if p is not None:
+            self._leave(request_id)
+            return p[3]
+        slot = self._slot_of.pop(request_id, None)
+        if slot is None:
+            return None
+        rt = self._rt[slot]
+        if self._state[slot] == _RUNNING:
+            self.tasks.pop(request_id, None)
+        self._free_slot(slot)
+        self._leave(request_id)
         return rt
 
     def gather(self) -> list[SliceRequest]:
         """The cell's current candidate set: running tasks first, then the
         pending/retry queue, with handover pins applied (idempotent)."""
         out = []
-        for rid in list(self.tasks) + list(self._queue):
-            req = self._requests[rid]
-            pin = self._pinned.get(rid)
+        for rid in self.live_ids():
+            req = self.request_of(rid)
+            pin = self.pin_of(rid)
             out.append(req if pin is None
                        else dataclasses.replace(req, min_accuracy=pin))
         return out
 
+    def _seat_one(self, rid: int, entry: tuple) -> int:
+        """Seat one pending arrival in the lowest free slot; returns it."""
+        req, retries, pin, rt, gen = entry
+        free = self._free_slots
+        slot = heapq.heappop(free) if free else self._hi
+        if slot == self._hi:
+            self._hi += 1
+            if self._hi > self._cap:
+                self._grow(self._hi)
+        self._rid[slot] = rid
+        self._state[slot] = _QUEUED
+        self._tier[slot] = req.tier
+        self._retries_left[slot] = retries
+        self._pin[slot] = pin
+        self._gen[slot] = gen
+        self._deadline[slot] = req.max_latency_s
+        self._bits[slot] = self.sdla.bits_per_job(req)
+        self._req[slot] = req
+        self._row[slot] = req if pin == 0.0 \
+            else dataclasses.replace(req, min_accuracy=pin)
+        self._rt[slot] = rt
+        self._slot_of[rid] = slot
+        return slot
+
+    def _seat_pending(self):
+        """Seat every pending arrival in the lowest free slot, in arrival
+        order (the old candidate-order walk seated unseated candidates —
+        which are exactly the arrivals since the last sync — the same way)."""
+        if not self._pending_in:
+            return
+        for rid, entry in self._pending_in.items():
+            self._seat_one(rid, entry)
+        self._pending_in.clear()
+
     def sync_slots(self, consume: bool = False
                    ) -> tuple[list[SliceRequest | None], list[int]]:
-        """Assign every candidate request a STABLE solver-row slot; report
-        which slots changed since the last CONSUMING sync.
+        """Seat pending arrivals and report which solver-row slots changed
+        since the last CONSUMING sync — as a vectorized signature compare
+        over the slot tables.
 
         The delta re-slice fast path keeps the stacked solver tables
         device-resident across ticks, so a task's row only needs host
         recompute + device scatter when the task itself changed. Slots are
         sticky: a request keeps its row for as long as it stays a candidate
         (running OR queued), a departure clears its row, and new candidates
-        fill the lowest free slots in candidate order. A slot is dirty when
+        fill the lowest free slots in arrival order. A slot is dirty when
         it was cleared, newly assigned, its handover pin changed, or its id
         was reused by a NEW submission (the per-arrival generation in the
         signature — row-id reuse must never alias the predecessor's row).
@@ -187,51 +378,19 @@ class CellRuntime:
         re-slice still needs) and clear only when ``consume=True`` — the
         re-slice that actually delivers them to the solver session.
         """
-        pin_of: dict[int, float | None] = {}
-        for rid in list(self.tasks) + self._queue:
-            if rid not in pin_of:
-                pin_of[rid] = self._pinned.get(rid)
-        dirty: set[int] = set()
-        seated: set[int] = set()
-        for t, rid in enumerate(self._slots):
-            if rid is None:
-                continue
-            if rid not in pin_of:                     # departed/dropped
-                self._slots[t] = None
-                self._slot_sig[t] = None
-                dirty.add(t)
-            else:
-                seated.add(rid)
-        free = [t for t, rid in enumerate(self._slots) if rid is None]
-        free.reverse()                                # pop() → lowest first
-        for rid in pin_of:
-            if rid in seated:
-                continue
-            if free:
-                t = free.pop()
-            else:
-                self._slots.append(None)
-                self._slot_sig.append(None)
-                t = len(self._slots) - 1
-            self._slots[t] = rid
-        rows: list[SliceRequest | None] = []
-        for t, rid in enumerate(self._slots):
-            if rid is None:
-                rows.append(None)
-                continue
-            req = self._requests[rid]
-            pin = pin_of[rid]
-            sig = (rid, self._gen.get(rid), pin)
-            if self._slot_sig[t] != sig:
-                self._slot_sig[t] = sig
-                dirty.add(t)
-            rows.append(req if pin is None
-                        else dataclasses.replace(req, min_accuracy=pin))
-        self._dirty_slots |= dirty
-        dirty_now = sorted(self._dirty_slots)
+        self._seat_pending()
+        hi = self._hi
+        occ = self._state[:hi] != _FREE
+        changed = occ & ((self._gen[:hi] != self._sig_gen[:hi])
+                         | (self._pin[:hi] != self._sig_pin[:hi]))
+        if changed.any():
+            np.copyto(self._sig_gen[:hi], self._gen[:hi], where=changed)
+            np.copyto(self._sig_pin[:hi], self._pin[:hi], where=changed)
+            self._dirty[:hi] |= changed
+        dirty_now = np.flatnonzero(self._dirty[:hi]).tolist()
         if consume:
-            self._dirty_slots.clear()
-        return rows, dirty_now
+            self._dirty[:hi] = False
+        return self._row[:hi], dirty_now
 
     def apply(self, decisions: list[SliceDecision]) -> list[SliceDecision]:
         """Apply one re-slice round's decisions (for this cell's gather set).
@@ -242,54 +401,70 @@ class CellRuntime:
         this cell right before the re-slice is an eviction and is flagged on
         the returned decision (exactly once — later rejections of the same
         task while it is merely queued are plain rejections). Requests
-        submitted after the ``gather()`` that produced ``decisions`` are
+        submitted after the slot sync that produced ``decisions`` are
         untouched: they stay queued for the next round, and decisions for
         requests withdrawn (``remove()``) in the meantime are ignored.
         """
         prev = self.tasks
         decided = {d.request.request_id for d in decisions}
         # running tasks / queued requests the decisions do not cover (e.g.
-        # submitted between gather and apply) are carried forward untouched
+        # submitted between sync and apply) are carried forward untouched;
+        # this rebuild also purges the queue's lazy-deleted stale entries
         self.tasks = {rid: rt for rid, rt in prev.items()
                       if rid not in decided}
-        self._queue = [rid for rid in self._queue if rid not in decided]
+        requeued: list[tuple[int, int]] = []
+        for rid in self.queued_ids():
+            if rid not in decided:
+                p = self._pending_in.get(rid)
+                gen = p[4] if p is not None \
+                    else int(self._gen[self._slot_of[rid]])
+                requeued.append((rid, gen))
+        self._queue = requeued
         for d in decisions:
             rid = d.request.request_id
-            if rid not in self._requests:
-                # departed (remove()d) between gather and apply: the decision
-                # is stale — do not resurrect or re-queue the task
-                continue
-            tier = self._requests[rid].tier
+            slot = self._slot_of.get(rid)
+            if slot is None:
+                p = self._pending_in.pop(rid, None)
+                if p is None:
+                    # departed (remove()d) between sync and apply: the
+                    # decision is stale — do not resurrect or re-queue
+                    continue
+                # decided while still unseated (an apply without a prior
+                # slot sync — the gather()-based solve paths): seat now
+                slot = self._seat_one(rid, p)
+            tier = int(self._tier[slot])
             self.offered_by_tier[tier] += 1
             if d.admitted:
                 self.admitted_by_tier[tier] += 1
-                rt = self._carry.pop(rid, None) or prev.get(rid) \
-                    or TaskRuntime(d)
+                rt = self._rt[slot] or TaskRuntime(d)
                 rt.decision = d
                 self.tasks[rid] = rt
+                self._rt[slot] = rt
+                self._state[slot] = _RUNNING
                 continue
             if rid in prev:
                 d.evicted = True
                 self.evictions += 1
                 self.evictions_by_tier[tier] += 1
-            parked = prev.get(rid) or self._carry.pop(rid, None)
             # no served stream to warm-start from: a rejected task re-offers
             # at its class threshold, not the pinned one
-            self._pinned.pop(rid, None)
-            left = self._retries.get(rid, self.max_retries) - 1
-            self._retries[rid] = left
+            if self._pin[slot] != 0.0:
+                self._pin[slot] = 0.0
+                self._row[slot] = self._req[slot]
+            left = int(self._retries_left[slot]) - 1
+            self._retries_left[slot] = left
             if left >= 0:
-                self._queue.append(rid)
-                if parked is not None:
-                    # the task stays in the system: its job/latency history
-                    # resumes if a later re-slice re-admits it
-                    self._carry[rid] = parked
+                self._state[slot] = _QUEUED
+                self._queue.append((rid, int(self._gen[slot])))
+                # the task stays in the system: its job/latency history
+                # (kept in _rt as the parked carry) resumes on re-admission
             else:
                 self.drops += 1
                 self.drops_by_tier[tier] += 1
-                self.dropped.append(self._requests.pop(rid))
-                self._retries.pop(rid, None)
-                self._gen.pop(rid, None)
+                self.dropped.append(self._req[slot])
+                self._slot_of.pop(rid)
+                self._free_slot(slot)
+                self._leave(rid)
         return decisions
 
     def shed(self, request_id: int) -> SliceRequest:
@@ -302,16 +477,19 @@ class CellRuntime:
         separately as a shed (``sheds``/``sheds_by_tier``) for attribution.
         Running tasks cannot be shed — evicting them is the solver's call.
         """
-        if request_id not in self._queue:
-            raise KeyError(
-                f"request {request_id} is not queued in cell {self.cell} "
-                "(running tasks are evicted by the solver, not shed)")
-        req = self._requests.pop(request_id)
-        self._queue.remove(request_id)
-        self._retries.pop(request_id, None)
-        self._pinned.pop(request_id, None)
-        self._carry.pop(request_id, None)
-        self._gen.pop(request_id, None)
+        p = self._pending_in.pop(request_id, None)
+        if p is not None:
+            req = p[0]
+        else:
+            slot = self._slot_of.get(request_id)
+            if slot is None or self._state[slot] != _QUEUED:
+                raise KeyError(
+                    f"request {request_id} is not queued in cell {self.cell} "
+                    "(running tasks are evicted by the solver, not shed)")
+            req = self._req[slot]
+            self._slot_of.pop(request_id)
+            self._free_slot(slot)
+        self._leave(request_id)
         self.drops += 1
         self.drops_by_tier[req.tier] += 1
         self.sheds += 1
@@ -330,9 +508,8 @@ class CellRuntime:
         their runtime; queued requests keep whatever pin/runtime they
         already carried. No drop accounting here — the FAILED cell did not
         drop anything; what cannot be re-homed is dropped by the caller.
-        The sticky solver-row slots are NOT touched: the next
-        :meth:`sync_slots` observes the departures and reports every vacated
-        slot dirty exactly once, so the device session sees the dead cell as
+        Every vacated slot is reported dirty exactly once by the next
+        :meth:`sync_slots`, so the device session sees the dead cell as
         cleared rows instead of a rebuild.
         """
         items: list[tuple[SliceRequest, TaskRuntime | None, int,
@@ -341,14 +518,20 @@ class CellRuntime:
             req, rt, retries = self.hand_out(rid)
             items.append((req, rt, retries, pinned_accuracy_at(req,
                                                               rt.decision.z)))
-        for rid in list(self._queue):
-            req = self._requests.pop(rid)
-            self._queue.remove(rid)
-            retries = self._retries.pop(rid, self.max_retries)
-            pin = self._pinned.pop(rid, None)
-            rt = self._carry.pop(rid, None)
-            self._gen.pop(rid, None)
-            items.append((req, rt, retries, pin))
+        for rid in self.queued_ids():
+            p = self._pending_in.pop(rid, None)
+            if p is not None:
+                req, retries, pin, rt, _ = p
+            else:
+                slot = self._slot_of.pop(rid)
+                req = self._req[slot]
+                retries = int(self._retries_left[slot])
+                pin = float(self._pin[slot])
+                rt = self._rt[slot]
+                self._free_slot(slot)
+            self._leave(rid)
+            items.append((req, rt, retries, pin if pin > 0.0 else None))
+        self._queue.clear()
         return items
 
     # ------------------------------------------------------ handover hooks
@@ -359,10 +542,11 @@ class CellRuntime:
             raise KeyError(
                 f"request {request_id} is not running in cell {self.cell}")
         rt = self.tasks.pop(request_id)
-        req = self._requests.pop(request_id)
-        retries = self._retries.pop(request_id, self.max_retries)
-        self._pinned.pop(request_id, None)
-        self._gen.pop(request_id, None)
+        slot = self._slot_of.pop(request_id)
+        req = self._req[slot]
+        retries = int(self._retries_left[slot])
+        self._free_slot(slot)
+        self._leave(request_id)
         return req, rt, retries
 
     def hand_in(self, request: SliceRequest, runtime: TaskRuntime | None,
@@ -372,20 +556,14 @@ class CellRuntime:
         re-slice admits. ``runtime``/``pinned_accuracy`` are ``None`` for a
         request that was merely QUEUED in the source cell (a drained retry
         has no encoded stream or job history to carry)."""
-        rid = request.request_id
-        if rid in self._requests:
+        try:
+            self._enter(request, retries,
+                        0.0 if pinned_accuracy is None else pinned_accuracy,
+                        runtime)
+        except ValueError:
             raise ValueError(
-                f"request {rid} is already live in cell {self.cell}; "
-                "cannot hand in a duplicate")
-        self._requests[rid] = request
-        self._queue.append(rid)
-        self._retries[rid] = retries
-        if pinned_accuracy is not None:
-            self._pinned[rid] = pinned_accuracy
-        if runtime is not None:
-            self._carry[rid] = runtime
-        self._arrivals += 1
-        self._gen[rid] = self._arrivals
+                f"request {request.request_id} is already live in cell "
+                f"{self.cell}; cannot hand in a duplicate") from None
 
     # --------------------------------------------------------------- data
     def _run_vision_job(self, rt: TaskRuntime, batch: int):
@@ -462,18 +640,38 @@ class CellRuntime:
 
 
 class EdgeServingEngine:
-    """Single-cell control loop: one :class:`CellRuntime` + one SESM."""
+    """DEPRECATED shim: a thin 1-cell view over
+    :class:`repro.serving.multicell.MultiCellEngine`.
+
+    Kept so single-cell callers continue to work, but there is ONE code
+    path now: process/metrics/retry live in the shared :class:`CellRuntime`
+    and ``reslice()`` routes through the multi-cell engine's device-resident
+    fast path. New code should construct ``MultiCellEngine([pool])`` (or use
+    the event-stream ``ingest`` API) directly.
+    """
 
     def __init__(self, pool: ResourcePool, *, lat_params=None,
                  max_batch: int = 8, max_retries: int = 2,
                  solver_backend: str = "numpy"):
+        from .multicell import MultiCellEngine   # avoid an import cycle
         self.pool = pool
-        self.sdla = SDLA(lat_params or LatencyParams())
-        self.sesm = SESM(pool, self.sdla, backend=solver_backend)
-        self.runtime = CellRuntime(pool, self.sdla, max_batch=max_batch,
-                                   max_retries=max_retries)
+        self._multi = MultiCellEngine(
+            [pool], lat_params=lat_params, max_batch=max_batch,
+            max_retries=max_retries, solver_backend=solver_backend)
 
-    # thin data-plane delegation — the runtime owns all serving state
+    # thin delegation — the multi-cell engine owns all serving state
+    @property
+    def sdla(self) -> SDLA:
+        return self._multi.sdla
+
+    @property
+    def sesm(self):
+        return self._multi.sesm
+
+    @property
+    def runtime(self) -> CellRuntime:
+        return self._multi.cells[0]
+
     @property
     def tasks(self) -> dict[int, TaskRuntime]:
         return self.runtime.tasks
@@ -491,16 +689,16 @@ class EdgeServingEngine:
         self.runtime.register_model(name, cfg, params, infer_fn)
 
     def submit(self, request: SliceRequest):
-        self.runtime.submit(request)
+        self._multi.submit(request, 0)
 
     def reslice(self) -> list[SliceDecision]:
         """Run SESM over pending + running requests (full re-slice: running
         tasks may be evicted — paper Section III-C; rejected requests stay on
         the bounded retry queue instead of being discarded)."""
-        return self.runtime.apply(self.sesm.slice(self.runtime.gather()))
+        return self._multi.reslice()[0]
 
     def process(self, wall_dt: float = 1.0):
-        self.runtime.process(wall_dt)
+        self._multi.process(wall_dt)
 
     def metrics(self) -> dict:
         return self.runtime.metrics()

@@ -84,6 +84,8 @@ import time
 import numpy as np
 
 from repro.core import CouplingSpec, ResourcePool
+from repro.core.events import (Arrival, CellFault, Departure, Event, Handover,
+                               LinkScale, Tick)
 from repro.core.latency import LatencyParams
 from repro.runtime.fault_tolerance import HeartbeatMonitor, StragglerMitigator
 from .admission import SESM, SliceDecision
@@ -157,8 +159,13 @@ class MultiCellEngine:
         self.sdla = SDLA(lat_params or LatencyParams())
         self.sesm = SESM(pools[0], self.sdla, backend=solver_backend,
                          mesh=mesh)
+        # shared request-id → cell index, maintained by every CellRuntime
+        # enter/leave path (submit, hand-in/out, departure, drop, shed,
+        # drain) — the O(1) locate() the event stream routes through
+        self._cell_of: dict[int, int] = {}
         self.cells = [CellRuntime(p, self.sdla, max_batch=max_batch,
-                                  max_retries=max_retries, cell=c)
+                                  max_retries=max_retries, cell=c,
+                                  registry=self._cell_of)
                       for c, p in enumerate(pools)]
         self.handovers = 0
         # ----------------------------------------------------- fault plane
@@ -342,8 +349,8 @@ class MultiCellEngine:
             budget = dict(pol.drop_budgets)
             # lowest-priority tier first; newest arrival first within a tier
             cands = sorted(
-                ((cell._requests[rid].tier, pos, rid)
-                 for pos, rid in enumerate(cell._queue)),
+                ((cell.tier_of(rid), pos, rid)
+                 for pos, rid in enumerate(cell.queued_ids())),
                 key=lambda x: (-x[0], -x[1]))
             for tier, _, rid in cands:
                 if over <= 0:
@@ -365,36 +372,130 @@ class MultiCellEngine:
         if self.degraded:
             self.degraded_ticks += 1
 
+    # --------------------------------------------------------- event stream
+    def ingest(self, events) -> dict:
+        """Consume a stream of typed events (``repro.core.events``) between
+        re-slice ticks — the serving plane's unified ingestion API.
+
+        Every mutation the positional methods expose routes through here:
+        ``submit``/``remove`` are one-event wrappers, the closed-loop driver
+        and the fault schedules in ``core.scenarios`` are event generators.
+        Stream semantics are TOLERANT where the positional methods are
+        strict, because events are asynchronous with the engine state they
+        race (drains, auto-failovers, departures):
+
+        * an :class:`Arrival` aimed at a failed cell re-homes to its
+          ``fallback_cell`` (counted ``rehomed``) or, with no live cell,
+          is counted ``lost`` — unless the event says ``fallback=False``
+          (the strict ``submit`` contract), which raises;
+        * a :class:`Departure` with ``cell=None`` locates the request
+          first; a departure for an id that already left counts ``missing``;
+        * a :class:`Handover` that is no longer feasible (task departed,
+          drained elsewhere, not running, endpoint dead) is skipped and
+          counted (``handovers_skipped``);
+        * a :class:`CellFault` that is already satisfied (failing a dead
+          cell, recovering a live one) is a no-op.
+
+        Duplicate live request ids always raise — that is a caller bug, not
+        an event race. Returns a summary dict of what the batch did.
+        """
+        s = dict(arrivals=0, placed=0, rehomed=0, lost=0, departures=0,
+                 missing=0, handovers=0, handovers_skipped=0, failed=[],
+                 recovered=[], moves={}, link_updates=0, ticks=0)
+        for event in events:
+            if type(event) is Arrival:
+                s["arrivals"] += 1
+                cell = event.cell
+                self._check_cell(cell)
+                if cell in self.dead:
+                    if not event.fallback:
+                        raise ValueError(
+                            f"cell {cell} is failed; recover_cell({cell}) "
+                            f"first, or submit to fallback_cell({cell})")
+                    cell = self.fallback_cell(event.cell)
+                    if cell is None:
+                        s["lost"] += 1
+                        continue
+                    s["rehomed"] += 1
+                request = event.request
+                rid = request.request_id
+                live_in = self._cell_of.get(rid)
+                if live_in is not None:
+                    # one stream must load the shared transport once: a live
+                    # cross-cell duplicate would be admitted (and budgeted)
+                    # twice
+                    raise ValueError(
+                        f"request {rid} is already live in cell {live_in}; "
+                        "use handover() to move it, or clone with a fresh "
+                        "request_id")
+                self.cells[cell].submit(request)
+                s["placed"] += 1
+            elif type(event) is Departure:
+                cell = self._cell_of.get(event.request_id) \
+                    if event.cell is None else event.cell
+                if cell is None \
+                        or not self.cells[cell].is_live(event.request_id):
+                    s["missing"] += 1
+                    continue
+                self.cells[cell].remove(event.request_id)
+                s["departures"] += 1
+            elif type(event) is Handover:
+                rid = event.request_id
+                feasible = (event.src != event.dst
+                            and event.src not in self.dead
+                            and event.dst not in self.dead
+                            and self._cell_of.get(rid) == event.src
+                            and rid in self.cells[event.src].tasks)
+                if not feasible:
+                    s["handovers_skipped"] += 1
+                    continue
+                self.handover(rid, event.src, event.dst)
+                s["handovers"] += 1
+            elif type(event) is CellFault:
+                self._check_cell(event.cell)
+                if event.failed and event.cell not in self.dead:
+                    s["moves"].update(self.fail_cell(event.cell,
+                                                     reason=event.reason))
+                    s["failed"].append(event.cell)
+                elif not event.failed and event.cell in self.dead:
+                    self.recover_cell(event.cell)
+                    s["recovered"].append(event.cell)
+            elif type(event) is LinkScale:
+                self.set_link_budgets(event.budgets, scale=event.scale)
+                s["link_updates"] += 1
+            elif type(event) is Tick:
+                self.process(event.wall_dt)
+                s["ticks"] += 1
+            else:
+                raise TypeError(
+                    f"not a serving event: {event!r} (expected one of "
+                    "repro.core.events.Event)")
+        return s
+
     # ------------------------------------------------------------- control
     def submit(self, request: SliceRequest, cell: int):
-        self._check_cell(cell)
-        if cell in self.dead:
-            raise ValueError(
-                f"cell {cell} is failed; recover_cell({cell}) first, or "
-                f"submit to fallback_cell({cell})")
-        rid = request.request_id
-        for c, other in enumerate(self.cells):
-            if rid in other._requests:
-                # one stream must load the shared transport once: a live
-                # cross-cell duplicate would be admitted (and budgeted) twice
-                raise ValueError(
-                    f"request {rid} is already live in cell {c}; use "
-                    "handover() to move it, or clone with a fresh request_id")
-        self.cells[cell].submit(request)
+        """One-event wrapper: a strict (``fallback=False``) :class:`Arrival`
+        through :meth:`ingest` — raises on failed cells and duplicates."""
+        self.ingest([Arrival(request, cell, fallback=False)])
 
-    def remove(self, request_id: int, cell: int) -> TaskRuntime | None:
-        """Withdraw a departed task from a cell (no retry/drop accounting)."""
+    def remove(self, request_id: int,
+               cell: int | None = None) -> TaskRuntime | None:
+        """Withdraw a departed task (no retry/drop accounting): the
+        :class:`Departure` event, plus the legacy return of the withdrawn
+        runtime. ``cell=None`` locates the request first."""
+        if cell is None:
+            cell = self.locate(request_id)
+            if cell is None:
+                return None
         return self.cells[cell].remove(request_id)
 
     def locate(self, request_id: int) -> int | None:
         """The cell a request is currently live in (running or queued),
-        ``None`` if it left the system. Drains and auto-failovers move
-        requests without their submitter's knowledge — departure logic
-        should locate before removing."""
-        for c, cell in enumerate(self.cells):
-            if request_id in cell._requests:
-                return c
-        return None
+        ``None`` if it left the system — an O(1) lookup in the shared
+        registry every CellRuntime enter/leave path maintains. Drains and
+        auto-failovers move requests without their submitter's knowledge —
+        departure logic should locate before removing."""
+        return self._cell_of.get(request_id)
 
     def gather(self) -> list[list[SliceRequest]]:
         """Every cell's candidate set (running + retry queue, pins applied),
@@ -416,21 +517,47 @@ class MultiCellEngine:
         :meth:`reslice_rebuild` path; ``sesm.fresh_stacks``/``restacks``/
         ``delta_rows`` expose the session-cache health.
 
-        In metro mode (a ``mesh`` was configured) this delegates to
-        :meth:`reslice_rebuild`: the delta fast path's scatter targets one
+        In metro mode (a ``mesh`` was configured) the solve routes through
+        the full-rebuild path: the delta fast path's scatter targets one
         single-device ``DeviceStack``, while the mesh solves the rebuilt
         batch sharded — same decisions, different residency trade-off."""
-        if self.sesm.mesh is not None:
-            return self.reslice_rebuild()
+        return self.reslice_commit(self.reslice_dispatch())
+
+    def reslice_dispatch(self):
+        """First half of :meth:`reslice` — the DOUBLE-BUFFERED tick.
+
+        Runs the fault preamble, consumes every cell's dirty slots into the
+        device session and LAUNCHES the coupled solve without awaiting its
+        result: the returned handle owns the back buffer (this tick's host
+        mirror snapshot plus the in-flight device arrays), while the live
+        slot tables remain the front buffer. Until
+        :meth:`reslice_commit` is called the engine keeps ingesting events —
+        slot-table writes for tick N+1 overlap the device solve of tick N.
+        Events that land in the window get the same semantics the positional
+        API gave calls between ``gather()`` and ``apply()``: new arrivals
+        stay queued for the next round, and decisions for requests that
+        departed meanwhile are dropped as stale at commit.
+        """
         self._pre_reslice()
+        if self.sesm.mesh is not None:
+            # metro mode solves host-blocking through the sharded rebuild
+            # path — dispatch degrades to an already-resolved handle
+            return self.sesm.ready_solve(self.gather(),
+                                         coupling=self.coupling,
+                                         pools=self.pools)
         rows, dirty = [], []
         for cell in self.cells:
             r, d = cell.sync_slots(consume=True)
             rows.append(r)
             dirty.append(d)
-        decisions = self.sesm.solve_slots(rows, dirty,
-                                          coupling=self.coupling,
-                                          pools=self.pools)
+        return self.sesm.solve_slots(rows, dirty, coupling=self.coupling,
+                                     pools=self.pools, wait=False)
+
+    def reslice_commit(self, pending) -> list[list[SliceDecision]]:
+        """Second half of :meth:`reslice`: await the dispatched solve's
+        device arrays, unpack them against the back-buffer host mirrors
+        captured at dispatch, and apply the decisions per cell."""
+        decisions = pending.wait()
         return [cell.apply(ds) for cell, ds in zip(self.cells, decisions)]
 
     def reslice_rebuild(self) -> list[list[SliceDecision]]:

@@ -15,7 +15,7 @@ __all__ = ["SliceRequest"]
 _ids = itertools.count()
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class SliceRequest:
     # --- Task Description ---
     service: str                  # e.g. "object-recognition", "lm-serving"

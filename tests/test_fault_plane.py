@@ -16,6 +16,7 @@ import numpy as np
 import pytest
 
 from repro.core import CouplingSpec, scenarios, solve_coupled_ref
+from repro.core.events import Arrival, CellFault, LinkScale
 from repro.core.sfesp import empty_device_stack
 from repro.serving import (MultiCellEngine, SliceRequest, TierPolicy,
                            drive_closed_loop, sla_scorecard)
@@ -90,24 +91,25 @@ def test_drain_carries_pins_and_retry_budgets():
     eng, pools, spec = _outage_engine(budget=0.8, max_retries=2)
     eng.reslice()
     running = dict(eng.cells[0].tasks)
-    spent = {rid: eng.cells[0]._retries[rid]
-             for rid in eng.cells[0]._requests}
+    spent = {rid: eng.cells[0].retries_left(rid)
+             for rid in eng.cells[0].live_ids()}
     moves = eng.fail_cell(0)
     for rid, dst in moves.items():
         assert dst is not None
         cell = eng.cells[dst]
-        assert cell._retries[rid] == spent[rid], \
+        assert cell.retries_left(rid) == spent[rid], \
             "remaining retry budget must travel with the drained request"
         if rid in running:
-            pin = cell._pinned[rid]
-            assert 0.0 < pin <= 1.0
-            assert cell._carry[rid] is running[rid], \
+            pin = cell.pin_of(rid)
+            assert pin is not None and 0.0 < pin <= 1.0
+            assert cell.carried(rid) is running[rid], \
                 "runtime (job/latency history) must carry over"
     # a drained request one rejection from dropping still drops on schedule:
     # keep rejecting against the tight budget until every budget is spent
     for _ in range(4):
         eng.reslice()
-    assert all(r >= -1 for c in eng.cells for r in c._retries.values())
+    assert all(c.retries_left(rid) >= 0
+               for c in eng.cells for rid in c.live_ids())
     drops_by_cell = [c.drops for c in eng.cells]
     assert drops_by_cell[0] == 0, "the FAILED cell dropped nothing"
     assert sum(drops_by_cell) > 0, \
@@ -294,7 +296,7 @@ def test_fault_plane_error_paths():
     with pytest.raises(ValueError, match="failed"):
         eng.submit(_req("coco_bags"), 1)
     rid = next(iter(eng.cells[0].tasks), None) \
-        or next(iter(eng.cells[0]._requests))
+        or next(iter(eng.cells[0].live_ids()))
     with pytest.raises(ValueError, match="failed"):
         eng.handover(rid, 0, 1)
     with pytest.raises(ValueError, match="exactly one"):
@@ -314,15 +316,16 @@ def test_fault_schedules_deterministic_and_composable():
     assert a == scenarios.random_outage_schedule(4, 20, n_outages=2,
                                                  duration=3, seed=5,
                                                  spare_cells=(0,))
-    cells = {ev["cell"] for evs in a.values() for ev in evs}
+    assert all(isinstance(ev, CellFault) for evs in a.values() for ev in evs)
+    cells = {ev.cell for evs in a.values() for ev in evs}
     assert 0 not in cells and cells <= {1, 2, 3}
-    fails = sum(ev["kind"] == "fail" for evs in a.values() for ev in evs)
-    recovers = sum(ev["kind"] == "recover"
-                   for evs in a.values() for ev in evs)
+    fails = sum(ev.failed for evs in a.values() for ev in evs)
+    recovers = sum(not ev.failed for evs in a.values() for ev in evs)
     assert fails == recovers == 2
 
     b = scenarios.stepped_link_degradation(20, start=4, n_steps=3, floor=0.4)
-    scales = {s: evs[0]["scale"] for s, evs in b.items()}
+    assert all(isinstance(ev, LinkScale) for evs in b.values() for ev in evs)
+    scales = {s: evs[0].scale for s, evs in b.items()}
     assert scales[4] == pytest.approx(0.8)
     assert scales[5] == pytest.approx(0.6)
     assert scales[6] == pytest.approx(0.4)
@@ -332,15 +335,14 @@ def test_fault_schedules_deterministic_and_composable():
                               arrival_rate=6.0, seed=3)
     assert c == scenarios.flash_crowd(3, 20, step=2, duration=2, cells=[1],
                                       arrival_rate=6.0, seed=3)
-    assert all(ev["kind"] == "arrivals" and ev["cell"] == 1
+    assert all(isinstance(ev, Arrival) and ev.cell == 1
                for evs in c.values() for ev in evs)
 
     merged = scenarios.compose_faults(a, b, c)
     assert sum(map(len, merged.values())) \
         == sum(map(len, a.values())) + sum(map(len, b.values())) \
         + sum(map(len, c.values()))
-    assert merged[4][0]["kind"] == "fail" or merged[4][0]["kind"] == \
-        "recover" if 4 in a else merged[4][0]["kind"] == "link_scale"
+    assert isinstance(merged[4][0], CellFault if 4 in a else LinkScale)
 
     with pytest.raises(ValueError, match="empty"):
         scenarios.outage_schedule([(0, 5, 5)])

@@ -238,7 +238,7 @@ def test_fastpath_matches_rebuild_under_churn():
                 eng.handover(rid, c, (c + 1) % 3)
             if running and rng.random() < 0.5:
                 c, rid = running[int(rng.integers(len(running)))]
-                if rid in eng.cells[c]._requests:
+                if eng.cells[c].is_live(rid):
                     eng.remove(rid, c)
             if rng.random() < 0.7:
                 eng.submit(_req("coco_person", acc=0.25, fps=4.0),
