@@ -31,6 +31,13 @@ Poisson traces and multi-cell traces through
     ``CouplingSpec.set_budgets`` in place) and ASSERTS that degradation
     stays on the delta fast path: zero session rebuilds, zero dirty rows,
     zero recompiles — just one (L,) device refresh per budget change,
+  * the semantic-drift path — ``serving/drift_tick_coupled_4cell`` bumps the
+    SDLA's live ``SemanticModel`` every tick (``shift_semantics``, a
+    nominal-anchored asymptote scale) and ASSERTS drift rides the delta fast
+    path too: zero session rebuilds / restacks / recompiles, no churn-path
+    dirty rows — just the affected live rows rescattered through
+    ``DeviceStack.update_semantics``, decisions oracle-pinned under the
+    drifted model,
 
 plus the host-side stacking fast path (``stack_instances`` vs ``restack`` vs
 the ``delta_restack`` device scatter of a few dirty rows). Decisions are
@@ -353,6 +360,93 @@ def _bench_degraded_tick():
         admitted_degraded=admitted_degraded)
 
 
+def _bench_drift_tick():
+    """Semantic-drift hot path: the accuracy curves move between ticks.
+
+    Every tick bumps the SDLA's live ``SemanticModel`` in place
+    (``shift_semantics`` — a nominal-anchored asymptote scale, so the
+    alternation never compounds) before the coupled re-slice. The contract
+    asserted here is that drift rides the delta fast path end to end: the
+    session recomputes ONLY the rows of live tasks whose app changed and
+    scatters them through ``DeviceStack.update_semantics``
+    (``SESM.semantic_updates``) — zero fresh stacks after warmup, zero
+    session rebuilds (same model object, new version), zero churn-path
+    dirty rows (rejected requests re-queue with unchanged slot
+    signatures), zero recompiles. Decisions under the drifted model are
+    bit-matched against the numpy coupled oracle built by the engine's
+    OWN SDLA before timing.
+    """
+    from repro.core.types import CouplingSpec
+    from repro.serving import MultiCellEngine, SliceRequest
+
+    pools = scenarios.multi_cell_pools(4, seed=1)
+    spec = CouplingSpec(np.array([3.0]), np.ones((4, 1), bool),
+                        names=("backhaul",))
+    # effectively-infinite retries, same reasoning as the degraded bench:
+    # tasks the collapsed curves push out re-queue forever with unchanged
+    # slot signatures, so admissions flip with the curves while the
+    # churn-path dirty-row count stays pinned at zero
+    eng = MultiCellEngine(pools, coupling=spec, max_retries=10**9)
+    mix = [("coco_bags", 0.35, 8.0), ("coco_animals", 0.50, 6.0),
+           ("cityscapes_flat", 0.35, 5.0), ("coco_person", 0.20, 5.0)]
+    for c in range(4):
+        for app, acc, fps in mix:
+            eng.submit(SliceRequest("object-recognition", "yolox", app,
+                                    max_latency_s=0.7, min_accuracy=acc,
+                                    jobs_per_sec=fps), c)
+    eng.reslice()                               # warm: builds the session
+
+    # the drifted decisions bit-match the coupled oracle built under the
+    # SAME drifted model, and the drift actually moves the admitted set
+    eng.shift_semantics(scale=0.6)
+    insts = [dataclasses.replace(
+        eng.sdla.build_instance(rs, pools[i]), coupling=spec.row(i))
+        for i, rs in enumerate(eng.gather())]
+    refs = solve_coupled_ref(insts)
+    admitted_drifted = 0
+    for ds, ref in zip(eng.reslice(), refs):
+        assert [d.admitted for d in ds] == [bool(a) for a in ref.admitted]
+        admitted_drifted += sum(d.admitted for d in ds)
+    eng.shift_semantics(scale=1.0)
+    admitted_nominal = sum(
+        d.admitted for ds in eng.reslice() for d in ds)
+    assert admitted_drifted < admitted_nominal, \
+        "the collapsed curves must actually evict admissions"
+
+    ticks = 48
+    dev = eng.sesm._serve_session.dev
+    updates_before = eng.sesm.semantic_updates
+    sem_rows_before = dev.semantic_rows
+    rows_before = eng.sesm.delta_rows
+    compiles_before = _serve_batch_coupled._cache_size()
+
+    def drift_loop():
+        for k in range(ticks):
+            eng.shift_semantics(scale=0.6 if k % 2 == 0 else 1.0)
+            eng.reslice()
+
+    us = time_fn(drift_loop, iters=5)
+    assert eng.sesm.fresh_stacks == 1, "drift must not restack"
+    assert eng.sesm.session_rebuilds == 0, \
+        "a version bump on the same model must keep the device session alive"
+    assert eng.sesm.delta_rows == rows_before, \
+        "drift must ride the semantic scatter, not the churn path"
+    recompiles = _serve_batch_coupled._cache_size() - compiles_before
+    assert recompiles == 0, "the semantic scatter must not retrace"
+    sem_updates = eng.sesm.semantic_updates - updates_before
+    sem_rows = dev.semantic_rows - sem_rows_before
+    assert sem_updates > 0 and sem_rows > 0
+    row("serving/drift_tick_coupled_4cell", us,
+        per_instance_us=round(us / ticks, 1), cells=4,
+        ticks_per_sample=ticks,
+        semantic_updates_per_sample=sem_updates,
+        semantic_rows_per_sample=sem_rows,
+        session_rebuilds=eng.sesm.session_rebuilds,
+        dirty_rows_per_tick=0, recompiles=recompiles,
+        admitted_nominal=admitted_nominal,
+        admitted_drifted=admitted_drifted)
+
+
 def _bench_ingest_throughput():
     """Event-plane hot path: sustained ``MultiCellEngine.ingest`` events/s
     while re-slicing at a fixed cadence (the double-buffered serving loop).
@@ -492,6 +586,7 @@ def main():
     _bench_metro()
     _bench_engine_tick()
     _bench_degraded_tick()
+    _bench_drift_tick()
     _bench_ingest_throughput()
     _bench_pallas_inner()
     _bench_restack()

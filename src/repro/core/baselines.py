@@ -52,7 +52,7 @@ def _flexres_nsem(inst, backend="numpy"):
 def _fixed_z_solution(inst: ProblemInstance, z_fixed: np.ndarray,
                       alloc: np.ndarray, admitted: np.ndarray) -> Solution:
     t = inst.tasks
-    a_true = semantics.accuracy(t.app_idx, z_fixed)
+    a_true = semantics.resolve(inst.semantics).accuracy(t.app_idx, z_fixed)
     l_true = lat_mod.latency(lat_mod.LatencyParams(), t.bits_per_job,
                              t.jobs_per_sec, t.gpu_time_per_job, z_fixed, alloc)
     satisfied = admitted & (a_true + 1e-9 >= t.min_accuracy) \

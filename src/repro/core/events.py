@@ -26,6 +26,10 @@ Payload conventions:
   drains) the cell, ``failed=False`` recovers it.
 * :class:`LinkScale` degrades the shared links: exactly one of ``scale``
   (factor on the NOMINAL budgets) or ``budgets`` (explicit (L,) array).
+* :class:`SemanticShift` recalibrates accuracy curves: exactly one of
+  ``scale`` (factor on the NOMINAL asymptotes of ``app_idx``) or ``params``
+  (explicit (K, 3) ``[M, γ, H]`` rows). The engine turns it into an in-place
+  ``SemanticModel`` bump + dirty-row delta scatters — never a rebuild.
 * :class:`Tick` advances the data plane (``process(wall_dt)``): job
   execution, heartbeats, straggler EWMAs.
 """
@@ -35,7 +39,7 @@ from __future__ import annotations
 import dataclasses
 
 __all__ = ["Arrival", "CellFault", "Departure", "Event", "Handover",
-           "LinkScale", "Tick"]
+           "LinkScale", "SemanticShift", "Tick"]
 
 
 @dataclasses.dataclass(frozen=True, slots=True)
@@ -95,10 +99,28 @@ class LinkScale:
 
 
 @dataclasses.dataclass(frozen=True, slots=True)
+class SemanticShift:
+    """Semantic drift: the accuracy curves of ``app_idx`` move.
+
+    ``app_idx=None`` shifts every registered app. Exactly one of ``scale``
+    (sets the asymptotes to ``scale ×`` their NOMINAL calibration — absolute
+    level, so composed/stepped schedules don't compound; ``scale=1``
+    restores) or ``params`` (explicit ``(len(app_idx), 3)`` ``[M, γ, H]``
+    rows — a full recalibration that re-anchors the nominal too). Already-
+    pinned handover accuracies are values, not curve lookups: they stay at
+    their recorded level when the curves move under them."""
+
+    app_idx: tuple[int, ...] | None = None
+    scale: float | None = None
+    params: object = None      # explicit (K, 3) [M, γ, H] rows
+
+
+@dataclasses.dataclass(frozen=True, slots=True)
 class Tick:
     """Advance the data plane by ``wall_dt`` seconds (run jobs, heartbeat)."""
 
     wall_dt: float = 1.0
 
 
-Event = Arrival | Departure | Handover | CellFault | LinkScale | Tick
+Event = Arrival | Departure | Handover | CellFault | LinkScale \
+    | SemanticShift | Tick

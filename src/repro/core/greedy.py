@@ -131,8 +131,9 @@ def _pack_solution(inst, semantic, admitted, alloc_idx, z_idx) -> Solution:
     z = np.where(admitted & (z_idx >= 0),
                  inst.z_grid[np.clip(z_idx, 0, None)], 1.0)
     # true satisfaction: re-check accuracy on the task's OWN curve (agnostic
-    # algorithms may have picked a z that the real class cannot tolerate).
-    a_true = semantics.accuracy(inst.tasks.app_idx, z)
+    # algorithms may have picked a z that the real class cannot tolerate),
+    # under the model that defined the instance (drifted curves included).
+    a_true = semantics.resolve(inst.semantics).accuracy(inst.tasks.app_idx, z)
     lat_tbl = inst.lat if semantic else inst.lat_agnostic
     l_val = np.where(admitted & (alloc_idx >= 0),
                      lat_tbl[np.arange(T), np.clip(alloc_idx, 0, None)], np.inf)
@@ -660,7 +661,7 @@ def _pack_batch_solutions(stacked: StackedInstances, admitted: np.ndarray,
     safe_idx = np.clip(alloc_idx, 0, None)
     alloc = grid[safe_idx] * admitted[:, :, None]                 # (B, T, m)
     z = np.where(admitted & (z_idx >= 0), z_star, 1.0)
-    a_true = semantics.accuracy(stacked.app_idx, z)
+    a_true = semantics.resolve(stacked.semantics).accuracy(stacked.app_idx, z)
     l_val = np.take_along_axis(lat, safe_idx[:, :, None], axis=2)[:, :, 0]
     l_val = np.where(admitted & (alloc_idx >= 0), l_val, np.inf)
     satisfied = admitted & (a_true + 1e-9 >= stacked.min_accuracy) \

@@ -56,7 +56,7 @@ import numpy as np
 
 from . import latency as lat_mod
 from . import semantics
-from .events import Arrival, CellFault, LinkScale
+from .events import Arrival, CellFault, LinkScale, SemanticShift
 from .greedy import solve_greedy_batch
 from .sfesp import build_instance, next_pow2, restack, stack_instances
 from .types import CouplingSpec, ProblemInstance, ResourcePool, TaskSet
@@ -68,7 +68,8 @@ __all__ = [
     "multi_cell_pools", "multi_cell_trace", "metro_diurnal_trace",
     "mixed_workload_tasks", "closed_loop_trace", "closed_loop_arrivals",
     "arrival_events", "outage_schedule", "random_outage_schedule",
-    "stepped_link_degradation", "flash_crowd", "compose_faults",
+    "stepped_link_degradation", "semantic_drift_schedule", "flash_crowd",
+    "compose_faults",
 ]
 
 # paper Section V-B threshold definitions ("lm" extends them to the
@@ -575,6 +576,40 @@ def stepped_link_degradation(horizon: int, *, start: int = 0,
         sched.setdefault(step, []).append(LinkScale(scale=float(scale)))
     if recover and start + n_steps < horizon:
         sched.setdefault(start + n_steps, []).append(LinkScale(scale=1.0))
+    return sched
+
+
+def semantic_drift_schedule(horizon: int, *, apps=None, start: int = 0,
+                            n_steps: int = 3, floor: float = 0.8,
+                            recover: bool = True
+                            ) -> dict[int, list[SemanticShift]]:
+    """Staircase semantic drift: the accuracy asymptotes of ``apps`` (app
+    registry indices; default all) degrade in ``n_steps`` equal steps from
+    step ``start`` down to ``floor ×`` nominal — the scene drifting away from
+    the classifiers' calibration — then (optionally) recover one step after
+    the last squeeze (the SDLA ships a recalibrated model).
+
+    Emits typed :class:`~repro.core.events.SemanticShift` events whose
+    ``scale`` is applied against the engine model's NOMINAL curves, the same
+    absolute-level convention as :func:`stepped_link_degradation`, so drift
+    schedules compose via :func:`compose_faults` without compounding.
+    """
+    if not 0.0 < floor < 1.0:
+        raise ValueError(f"floor {floor} outside (0, 1)")
+    if n_steps < 1:
+        raise ValueError("n_steps must be >= 1")
+    apps = None if apps is None else tuple(int(a) for a in apps)
+    sched: dict[int, list[SemanticShift]] = {}
+    for k in range(n_steps):
+        step = start + k
+        if step >= horizon:
+            break
+        scale = 1.0 - (1.0 - floor) * (k + 1) / n_steps
+        sched.setdefault(step, []).append(
+            SemanticShift(app_idx=apps, scale=float(scale)))
+    if recover and start + n_steps < horizon:
+        sched.setdefault(start + n_steps, []).append(
+            SemanticShift(app_idx=apps, scale=1.0))
     return sched
 
 

@@ -29,6 +29,7 @@ Calibration anchors (all from the paper text):
 from __future__ import annotations
 
 import dataclasses
+import itertools
 
 import numpy as np
 
@@ -42,6 +43,8 @@ __all__ = [
     "PAPER_APPS",
     "SERVICE_BITS_PER_JOB",
     "SERVICE_GPU_TIME",
+    "DEFAULT_MODEL",
+    "SemanticModel",
     "accuracy",
     "accuracy_table",
     "min_z_for_accuracy",
@@ -188,57 +191,219 @@ SERVICE_GPU_TIME = {"detection": 0.125, "segmentation": 0.042,
 # parameter matrix for vectorized evaluation: (n_apps, 3) = [M, γ, H]
 _PARAMS = np.array([[a.asymptote, a.gamma, a.hill] for a in APPS])
 
+_AGNOSTIC_IDX = np.array([APP_INDEX[_AGNOSTIC_NAME[a.service]] for a in APPS])
+
+# model-instance counter: signatures must distinguish two models that happen
+# to share a version number, and id() can be recycled after gc.
+_MODEL_UIDS = itertools.count()
+
+
+class SemanticModel:
+    """First-class, versioned accuracy model — a(z) as mutable problem input.
+
+    The paper treats the curves as *given*; a live system's SDLA recalibrates
+    them as classifiers are retrained or scenes change (semantic drift). This
+    object makes that explicit: the per-app Hill parameters live in a
+    ``(n_apps, 3)`` float64 matrix ``[M, γ, H]``, every in-place curve change
+    bumps a monotone ``version`` and records *which* apps moved, and
+    ``signature`` keys every derived cache (stacked tables, device halves,
+    serve sessions) so a drifted model can never silently serve stale rows.
+
+    ``DEFAULT_MODEL`` is the immutable paper calibration — bit-for-bit the
+    table the module-level functions always computed. Engines that want drift
+    own a mutable copy via :meth:`paper_default`.
+    """
+
+    __slots__ = ("params", "version", "_uid", "_mutable", "_nominal",
+                 "_changed")
+
+    def __init__(self, params: np.ndarray | None = None, *,
+                 mutable: bool = True):
+        self.params = np.array(_PARAMS if params is None else params,
+                               np.float64)
+        if self.params.shape != (len(APPS), 3):
+            raise ValueError(f"params must be ({len(APPS)}, 3) [M, γ, H], "
+                             f"got {self.params.shape}")
+        self._validate(self.params)
+        self.version = 0
+        self._uid = next(_MODEL_UIDS)
+        self._mutable = mutable
+        # nominal = construction-time calibration; transient shifts (scales)
+        # are expressed relative to it so composed schedules don't compound.
+        self._nominal = self.params.copy()
+        self._changed: list[frozenset[int]] = []   # _changed[k]: bump k→k+1
+
+    @staticmethod
+    def _validate(rows: np.ndarray) -> None:
+        if not (np.isfinite(rows).all() and (rows > 0.0).all()):
+            raise ValueError("curve params [M, γ, H] must be finite and > 0 "
+                             "(keeps a(z) monotone increasing in z)")
+
+    @classmethod
+    def paper_default(cls) -> "SemanticModel":
+        """A fresh *mutable* copy of the paper calibration (driftable)."""
+        return cls(_PARAMS)
+
+    @property
+    def n_apps(self) -> int:
+        return self.params.shape[0]
+
+    @property
+    def signature(self) -> tuple[int, int]:
+        """Hashable cache-key component: (model identity, curve version)."""
+        return (self._uid, self.version)
+
+    # -- curve evaluation (the former module globals, now methods) ----------
+
+    def accuracy(self, app_idx, z):
+        """a(z) for application index/array ``app_idx`` at compression ``z``.
+
+        Vectorized over both arguments (broadcast); pure numpy so it can also
+        be traced by JAX via jnp dispatch on the caller side when needed.
+        """
+        app_idx = np.asarray(app_idx)
+        z = np.asarray(z, np.float64)
+        M, g, H = (self.params[app_idx, i] for i in range(3))
+        x = np.power(np.clip(z, 1e-9, 1.0), g)
+        return M * x / (x + H)
+
+    def accuracy_table(self, app_idx: np.ndarray,
+                       z_grid: np.ndarray) -> np.ndarray:
+        """(T, Z) table of a_τ(z) for each task's app over the z grid."""
+        return self.accuracy(np.asarray(app_idx)[:, None],
+                             np.asarray(z_grid)[None, :])
+
+    def warm_start_accuracy(self, app_idx: int, z: float) -> float:
+        """The handover warm-start pin: the accuracy a stream already encoded
+        at ``z`` achieves — Eq. (2) in the target cell then re-derives (at
+        most) that same compression instead of renegotiating the stream. The
+        pin is recorded as a *value* at handover time, so it stays put when
+        the model later drifts under it."""
+        return float(self.accuracy(np.array([app_idx]), np.array([z]))[0])
+
+    def min_z_for_accuracy(self, app_idx: np.ndarray, min_acc: np.ndarray,
+                           z_grid: np.ndarray) -> np.ndarray:
+        """Eq. (2): z*_τ = min z s.t. a_τ(z) ≥ A_c, as an index into z_grid.
+
+        Returns -1 where the bound is unreachable for any z ≤ 1 (the task is
+        pruned from the candidate set, Alg. 1 line 7). Relies on a(z) being
+        monotone increasing in z (Hill curves are).
+        """
+        table = self.accuracy_table(app_idx, z_grid)     # (T, Z)
+        ok = table >= np.asarray(min_acc)[:, None]
+        any_ok = ok.any(axis=1)
+        first = np.argmax(ok, axis=1)            # first True (z ascending)
+        return np.where(any_ok, first, -1)
+
+    def agnostic_app(self, app_idx: np.ndarray) -> np.ndarray:
+        """Map each app to the dataset-wide 'All' app (what SI-EDGE assumes).
+
+        SI-EDGE "considers all the tasks as belonging to the 'All'
+        application" (Section V-B): detection apps → coco_all, segmentation →
+        cityscapes_all, and the beyond-paper LM apps → lm_all. Registry
+        structure, not curve shape — identical across all models.
+        """
+        return _AGNOSTIC_IDX[np.asarray(app_idx)]
+
+    # -- drift ---------------------------------------------------------------
+
+    def update(self, app_idx, params) -> tuple[int, int]:
+        """Recalibrate: replace the ``[M, γ, H]`` rows of ``app_idx`` (also
+        re-anchoring their nominal), bump ``version``, return the new
+        :attr:`signature`."""
+        if not self._mutable:
+            raise ValueError(
+                "immutable SemanticModel (DEFAULT_MODEL is shared paper "
+                "truth); drift a copy from SemanticModel.paper_default()")
+        app_idx = np.atleast_1d(np.asarray(app_idx, np.int64))
+        rows = np.asarray(params, np.float64).reshape(len(app_idx), 3)
+        self._validate(rows)
+        self.params[app_idx] = rows
+        self._nominal[app_idx] = rows
+        self._changed.append(frozenset(int(i) for i in app_idx))
+        self.version += 1
+        return self.signature
+
+    def scale_asymptotes(self, app_idx=None, scale: float = 1.0
+                         ) -> tuple[int, int]:
+        """Transient recalibration: set M = scale · nominal-M for ``app_idx``
+        (all apps when None). Applied against the *nominal* curves so stepped
+        / composed schedules set absolute levels instead of compounding —
+        same convention as link ``scale`` in the fault plane. ``scale = 1``
+        restores the nominal curve. Bumps ``version``."""
+        if not self._mutable:
+            raise ValueError(
+                "immutable SemanticModel (DEFAULT_MODEL is shared paper "
+                "truth); drift a copy from SemanticModel.paper_default()")
+        if not (np.isfinite(scale) and scale > 0.0):
+            raise ValueError(f"scale must be finite and > 0, got {scale}")
+        idx = (np.arange(self.n_apps) if app_idx is None
+               else np.atleast_1d(np.asarray(app_idx, np.int64)))
+        self.params[idx, 0] = self._nominal[idx, 0] * float(scale)
+        self._changed.append(frozenset(int(i) for i in idx))
+        self.version += 1
+        return self.signature
+
+    def changed_since(self, version: int) -> frozenset[int]:
+        """Union of app indices whose curves moved after ``version`` — the
+        delta the serving session turns into dirty-row scatters."""
+        if version >= self.version:
+            return frozenset()
+        return frozenset().union(*self._changed[version:])
+
+    def snapshot(self) -> "SemanticModel":
+        """Immutable value copy sharing this model's signature — what a
+        double-buffered dispatch captures so in-flight unpacks don't see
+        curves that moved after the solve was issued."""
+        snap = SemanticModel(self.params)
+        snap._uid, snap.version = self._uid, self.version
+        snap._mutable = False
+        return snap
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (f"SemanticModel(uid={self._uid}, version={self.version}, "
+                f"n_apps={self.n_apps}, mutable={self._mutable})")
+
+
+#: The paper calibration, immutable and shared — every API that takes an
+#: optional model defaults to it, which is why a model-free call today is
+#: decision-for-decision identical to the pre-refactor module globals.
+DEFAULT_MODEL = SemanticModel(_PARAMS, mutable=False)
+
+
+def resolve(model: SemanticModel | None) -> SemanticModel:
+    """``model or DEFAULT_MODEL`` with a type check — the single normalization
+    point for every ``model=None`` default across the stack."""
+    if model is None:
+        return DEFAULT_MODEL
+    if not isinstance(model, SemanticModel):
+        raise TypeError(f"expected SemanticModel or None, got {type(model)!r}")
+    return model
+
+
+# --- module-level delegates (the original public API, unchanged) -------------
 
 def accuracy(app_idx, z):
-    """a(z) for application index/array ``app_idx`` at compression ``z``.
-
-    Vectorized over both arguments (broadcast); pure numpy so it can also be
-    traced by JAX via jnp dispatch on the caller side when needed.
-    """
-    app_idx = np.asarray(app_idx)
-    z = np.asarray(z, np.float64)
-    M, g, H = (_PARAMS[app_idx, i] for i in range(3))
-    x = np.power(np.clip(z, 1e-9, 1.0), g)
-    return M * x / (x + H)
+    """a(z) under the paper calibration — delegates to ``DEFAULT_MODEL``."""
+    return DEFAULT_MODEL.accuracy(app_idx, z)
 
 
 def accuracy_table(app_idx: np.ndarray, z_grid: np.ndarray) -> np.ndarray:
-    """(T, Z) table of a_τ(z) for each task's app over the z grid."""
-    return accuracy(np.asarray(app_idx)[:, None], np.asarray(z_grid)[None, :])
+    """(T, Z) table of a_τ(z) — delegates to ``DEFAULT_MODEL``."""
+    return DEFAULT_MODEL.accuracy_table(app_idx, z_grid)
 
 
 def warm_start_accuracy(app_idx: int, z: float) -> float:
-    """The handover warm-start pin: the accuracy a stream already encoded at
-    ``z`` achieves — Eq. (2) in the target cell then re-derives (at most)
-    that same compression instead of renegotiating the stream. Single source
-    for the closed-loop trace AND the serving engine, so trace-vs-engine
-    equivalence cannot drift."""
-    return float(accuracy(np.array([app_idx]), np.array([z]))[0])
+    """Handover warm-start pin — delegates to ``DEFAULT_MODEL``."""
+    return DEFAULT_MODEL.warm_start_accuracy(app_idx, z)
 
 
 def min_z_for_accuracy(app_idx: np.ndarray, min_acc: np.ndarray,
                        z_grid: np.ndarray) -> np.ndarray:
-    """Eq. (2): z*_τ = min z s.t. a_τ(z) ≥ A_c, as an index into z_grid.
-
-    Returns -1 where the bound is unreachable for any z ≤ 1 (the task is pruned
-    from the candidate set, Alg. 1 line 7). Relies on a(z) being monotone
-    increasing in z (Hill curves are).
-    """
-    table = accuracy_table(app_idx, z_grid)          # (T, Z)
-    ok = table >= np.asarray(min_acc)[:, None]
-    any_ok = ok.any(axis=1)
-    first = np.argmax(ok, axis=1)                    # first True (z ascending)
-    return np.where(any_ok, first, -1)
-
-
-_AGNOSTIC_IDX = np.array([APP_INDEX[_AGNOSTIC_NAME[a.service]] for a in APPS])
+    """Eq. (2) z* index — delegates to ``DEFAULT_MODEL``."""
+    return DEFAULT_MODEL.min_z_for_accuracy(app_idx, min_acc, z_grid)
 
 
 def agnostic_app(app_idx: np.ndarray) -> np.ndarray:
-    """Map each app to the dataset-wide 'All' app (what SI-EDGE assumes).
-
-    SI-EDGE "considers all the tasks as belonging to the 'All' application"
-    (Section V-B): detection apps → coco_all, segmentation → cityscapes_all,
-    and the beyond-paper LM apps → lm_all.
-    """
-    return _AGNOSTIC_IDX[np.asarray(app_idx)]
+    """Service-wide 'All' fallback — delegates to ``DEFAULT_MODEL``."""
+    return DEFAULT_MODEL.agnostic_app(app_idx)

@@ -45,6 +45,7 @@ __all__ = ["build_instance", "check_solution", "objective_value",
            "default_z_grid", "stack_instances", "restack", "next_pow2",
            "task_link_load", "merge_coupling", "lexicographic_cost",
            "group_major_order", "group_offsets_of",
+           "TaskRows", "task_feasibility_rows",
            "DeviceStack", "device_stack", "empty_device_stack",
            "ShardedStack", "shard_plan", "device_stack_sharded"]
 
@@ -75,34 +76,72 @@ def lexicographic_cost(grid, xp=np):
     return (grid * weights).sum(axis=-1)
 
 
+@dataclasses.dataclass(frozen=True)
+class TaskRows:
+    """Output of :func:`task_feasibility_rows` — everything the per-task
+    pipeline derives from the accuracy curves, for one solver mode."""
+
+    z_idx: np.ndarray    # (T,) int — Eq. (2) z* index into z_grid, -1 pruned
+    z_star: np.ndarray   # (T,) — z_grid[z_idx] (1.0 where pruned)
+    lat: np.ndarray      # (T, A) — l_τ(z*, s_a) over the allocation grid
+    lat_ok: np.ndarray   # (T, A) bool — meets L_c at that allocation
+    alive: np.ndarray    # (T,) bool — Alg. 1 line-7 candidate filter
+    load: np.ndarray     # (T,) — shared-link load b_τ·λ_τ·z*_τ
+
+
+def task_feasibility_rows(tasks: TaskSet, z_grid: np.ndarray,
+                          grid: np.ndarray,
+                          lat_params: lat_mod.LatencyParams | None = None, *,
+                          semantic: bool = True,
+                          model=None) -> TaskRows:
+    """Eq. (2) → latency table → candidate feasibility, per task.
+
+    THE single implementation of the min-z pipeline: instance construction
+    (:func:`build_instance`) and the serving delta path
+    (``serving.admission.SESM._sync_rows``) both call it, so a drifted
+    :class:`~repro.core.semantics.SemanticModel` produces identical rows
+    whether a stack is rebuilt from scratch or delta-scattered in place.
+    ``semantic=False`` evaluates Eq. (2) on the service-wide 'All' fallback
+    curve (``model.agnostic_app``) instead of each task's own.
+    """
+    model = semantics.resolve(model)
+    lat_params = lat_params or lat_mod.LatencyParams()
+    app = tasks.app_idx if semantic else model.agnostic_app(tasks.app_idx)
+    z_idx = model.min_z_for_accuracy(app, tasks.min_accuracy, z_grid)
+    # pruned tasks get z=1 rows; they are excluded by z_idx == -1 anyway
+    z = _z_star_of(z_grid, z_idx)
+    lat = lat_mod.latency_table(lat_params, tasks, z, grid)
+    lat_ok = lat <= tasks.max_latency[:, None]
+    alive = (z_idx >= 0) & lat_ok.any(axis=1)
+    load = tasks.bits_per_job * tasks.jobs_per_sec * z
+    return TaskRows(z_idx=z_idx, z_star=z, lat=lat, lat_ok=lat_ok,
+                    alive=alive, load=load)
+
+
 def build_instance(pool: ResourcePool, tasks: TaskSet,
                    lat_params: lat_mod.LatencyParams | None = None,
                    z_grid: np.ndarray | None = None,
-                   coupling: CouplingSpec | None = None) -> ProblemInstance:
+                   coupling: CouplingSpec | None = None,
+                   model=None) -> ProblemInstance:
+    model = semantics.resolve(model)
     lat_params = lat_params or lat_mod.LatencyParams()
     z_grid = default_z_grid() if z_grid is None else np.asarray(z_grid)
     grid = make_allocation_grid(pool.levels)
 
-    acc = semantics.accuracy_table(tasks.app_idx, z_grid)
-    agn_idx = semantics.agnostic_app(tasks.app_idx)
-    acc_agn = semantics.accuracy_table(agn_idx, z_grid)
+    acc = model.accuracy_table(tasks.app_idx, z_grid)
+    acc_agn = model.accuracy_table(model.agnostic_app(tasks.app_idx), z_grid)
 
-    zi = semantics.min_z_for_accuracy(tasks.app_idx, tasks.min_accuracy, z_grid)
-    zi_agn = semantics.min_z_for_accuracy(agn_idx, tasks.min_accuracy, z_grid)
-
-    # latency tables at the chosen z* (pruned tasks get z=1 rows; they are
-    # excluded by z_star_idx == -1 anyway).
-    z_sem = np.where(zi >= 0, z_grid[np.clip(zi, 0, None)], 1.0)
-    z_agn = np.where(zi_agn >= 0, z_grid[np.clip(zi_agn, 0, None)], 1.0)
-    lat = lat_mod.latency_table(lat_params, tasks, z_sem, grid)
-    lat_agn = lat_mod.latency_table(lat_params, tasks, z_agn, grid)
+    sem = task_feasibility_rows(tasks, z_grid, grid, lat_params,
+                                semantic=True, model=model)
+    agn = task_feasibility_rows(tasks, z_grid, grid, lat_params,
+                                semantic=False, model=model)
 
     return ProblemInstance(
         pool=pool, tasks=tasks, z_grid=z_grid,
         acc=acc, acc_agnostic=acc_agn, grid=grid,
-        lat=lat, lat_agnostic=lat_agn,
-        z_star_idx=zi, z_star_idx_agnostic=zi_agn,
-        coupling=coupling,
+        lat=sem.lat, lat_agnostic=agn.lat,
+        z_star_idx=sem.z_idx, z_star_idx_agnostic=agn.z_idx,
+        coupling=coupling, semantics=model,
     )
 
 
@@ -196,6 +235,21 @@ def _check_shared_grid(insts: Sequence[ProblemInstance], grid: np.ndarray,
                 f"all {what} instances must share one allocation grid "
                 "(identical pool.levels); use solve_greedy_many to dispatch "
                 "mixed-grid sets per grid group")
+
+
+def _shared_model(insts: Sequence[ProblemInstance], what: str):
+    """The one SemanticModel of a batch (identity check, None = default).
+
+    Mixing models in one stack would bake rows from different curve truths
+    into one device program — a build error, not something to merge.
+    """
+    ref = semantics.resolve(insts[0].semantics)
+    for inst in insts[1:]:
+        if semantics.resolve(inst.semantics) is not ref:
+            raise ValueError(
+                f"all {what} instances must share one SemanticModel object; "
+                "build every cell's instance from the same model")
+    return ref
 
 
 def _z_star_of(z_grid: np.ndarray, z_idx: np.ndarray) -> np.ndarray:
@@ -292,6 +346,7 @@ def stack_instances(insts: Sequence[ProblemInstance], *,
         link_load=np.zeros((B, tmax)),
         link_load_agnostic=np.zeros((B, tmax)),
         coupling=merge_coupling(insts),
+        semantics=_shared_model(insts, "stacked"),
     )
     if group_major:
         st = dataclasses.replace(
@@ -351,7 +406,8 @@ def restack(stacked: StackedInstances,
         stacked, instances=insts, num_tasks=n_tasks, coupling=coupling,
         perm=perm,
         group_offsets=(group_offsets_of(coupling, len(insts))
-                       if stacked.group_major else None))
+                       if stacked.group_major else None),
+        semantics=_shared_model(insts, "restacked"))
     _fill_stacked(st, insts, n_tasks)
     return st
 
@@ -363,9 +419,14 @@ def restack(stacked: StackedInstances,
 # build on these; tests/test_device_stack.py pins them):
 #
 # * CACHE KEYS — ``device_stack`` memoizes per stacked-batch OBJECT, keyed by
-#   ``(semantic, pad_batch_to)``; ``device_stack_sharded`` likewise, keyed by
-#   ``(mesh, axis, semantic)``. A cache entry lives exactly as long as the
-#   stacked batch object does.
+#   ``(semantic, pad_batch_to, semantic_signature)``; ``device_stack_sharded``
+#   likewise, keyed by ``(mesh, axis, semantic, semantic_signature)``. The
+#   ``semantic_signature`` component is the batch's SemanticModel
+#   ``(uid, version)``: a model drifted IN PLACE after an upload reads as a
+#   new key, so a stale device half can never be reused silently (the serving
+#   session avoids the re-upload entirely by delta-scattering the drifted
+#   rows — ``DeviceStack.update_semantics``). A cache entry lives exactly as
+#   long as the stacked batch object does.
 # * INVALIDATION / REBUILD TRIGGERS — ``restack`` returns a NEW
 #   StackedInstances (fresh, empty caches), so any in-place refill
 #   invalidates the device halves by construction; mutating a stacked
@@ -436,6 +497,8 @@ class DeviceStack:
     scatter_calls: int = 0
     rows_scattered: int = 0
     budget_updates: int = 0
+    semantic_updates: int = 0        # update_semantics calls (drift traffic)
+    semantic_rows: int = 0           # rows re-scattered because curves moved
 
     @property
     def coupled(self) -> bool:
@@ -514,6 +577,27 @@ class DeviceStack:
         self.scatter_calls += 1
         self.rows_scattered += d
 
+    def update_semantics(self, b_idx, t_idx, lat_ok_rows, alive_rows,
+                         load_rows=None):
+        """Drift half of the delta path: re-scatter the task rows whose
+        Eq. (2) min-z / feasibility moved because the
+        :class:`~repro.core.semantics.SemanticModel` was recalibrated.
+
+        Identical scatter semantics to :meth:`update_rows` (same donated
+        jitted program, pow2 bucketing, drop-padding) — the point of the
+        separate entry is ACCOUNTING: ``semantic_updates``/``semantic_rows``
+        make drift traffic observable apart from arrival/departure churn, so
+        the bench gate can assert a drifted tick scattered only its dirty
+        rows while ``session_rebuilds`` stayed 0 (the ``update_link_budgets``
+        pattern applied to the accuracy curves).
+        """
+        d = len(np.asarray(t_idx))
+        if d == 0:
+            return
+        self.update_rows(b_idx, t_idx, lat_ok_rows, alive_rows, load_rows)
+        self.semantic_updates += 1
+        self.semantic_rows += d
+
     def update_link_budgets(self, budgets):
         """Refresh the (L,) per-link budgets on device, in place.
 
@@ -574,7 +658,7 @@ def device_stack(stacked: StackedInstances, *, semantic: bool = True,
     if cache is None:
         cache = {}
         object.__setattr__(stacked, "_device_half", cache)
-    key = (bool(semantic), pad_batch_to)
+    key = (bool(semantic), pad_batch_to, stacked.semantic_signature)
     if key in cache:
         return cache[key]
 
@@ -760,7 +844,7 @@ def device_stack_sharded(stacked: StackedInstances, mesh, *,
     if cache is None:
         cache = {}
         object.__setattr__(stacked, "_sharded_half", cache)
-    key = (mesh, axis, bool(semantic))
+    key = (mesh, axis, bool(semantic), stacked.semantic_signature)
     if key in cache:
         return cache[key]
 
@@ -856,7 +940,9 @@ def check_solution(inst: ProblemInstance, sol: Solution,
     used = (sol.alloc * x[:, None]).sum(axis=0)
     cap_ok = bool((used <= inst.pool.capacity + atol).all())
 
-    a = semantics.accuracy(t.app_idx, sol.z)
+    # validate on the curves that DEFINED the instance — under a drifted
+    # model "first principles" means the drifted truth, not the paper default
+    a = semantics.resolve(inst.semantics).accuracy(t.app_idx, sol.z)
     acc_ok = a + atol >= t.min_accuracy
 
     l = lat_mod.latency(lat_params, t.bits_per_job, t.jobs_per_sec,

@@ -21,6 +21,11 @@ from typing import Sequence
 
 import numpy as np
 
+from . import semantics as _sem
+
+# signature of the immutable paper calibration — what `semantics=None` means
+_DEFAULT_SIG = _sem.DEFAULT_MODEL.signature
+
 __all__ = [
     "ResourcePool",
     "TaskSet",
@@ -215,6 +220,10 @@ class ProblemInstance:
       z_star_idx_agnostic: (T,) int — same for the agnostic curve.
       coupling: optional single-cell :class:`CouplingSpec` view (incidence
         shape (1, L)) — the shared links this cell's admitted traffic loads.
+      semantics: the :class:`repro.core.semantics.SemanticModel` whose curves
+        baked ``acc`` / ``z_star_idx``; ``None`` means the immutable paper
+        calibration (``DEFAULT_MODEL``). Its ``signature`` keys every cache
+        derived from this instance, so drifted curves can't serve stale rows.
     """
 
     pool: ResourcePool
@@ -228,6 +237,14 @@ class ProblemInstance:
     z_star_idx: np.ndarray
     z_star_idx_agnostic: np.ndarray
     coupling: CouplingSpec | None = None
+    semantics: object | None = None   # SemanticModel (None = DEFAULT_MODEL)
+
+    @property
+    def semantic_signature(self) -> tuple[int, int]:
+        """Cache-key component of the model that baked this instance's
+        tables — ``(model uid, curve version)`` captured at build time."""
+        return self.semantics.signature if self.semantics is not None \
+            else _DEFAULT_SIG
 
     @property
     def num_tasks(self) -> int:
@@ -305,6 +322,16 @@ class StackedInstances:
     # group along the batch axis, ascending, group_offsets[-1] == B
     perm: np.ndarray | None = None                # (B,) int
     group_offsets: np.ndarray | None = None       # (G+1,) int
+    # the SemanticModel shared by every instance of the batch (None = paper
+    # DEFAULT_MODEL); mixing models in one stack is a build error upstream
+    semantics: object | None = None
+
+    @property
+    def semantic_signature(self) -> tuple[int, int]:
+        """(model uid, curve version) — part of the device-half memo key, so
+        a drifted model can never silently reuse a stale device upload."""
+        return self.semantics.signature if self.semantics is not None \
+            else _DEFAULT_SIG
 
     @property
     def batch_size(self) -> int:

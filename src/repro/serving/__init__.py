@@ -7,7 +7,7 @@ scorecard. ``EdgeServingEngine`` remains as a deprecated 1-cell view over
 """
 
 from repro.core.events import (Arrival, CellFault, Departure, Event,
-                               Handover, LinkScale, Tick)
+                               Handover, LinkScale, SemanticShift, Tick)
 
 from .request import SliceRequest
 from .sdla import SDLA
@@ -19,7 +19,7 @@ from .driver import drive_closed_loop, sla_scorecard
 
 __all__ = [
     "Arrival", "CellFault", "Departure", "Event", "Handover", "LinkScale",
-    "Tick",
+    "SemanticShift", "Tick",
     "SliceRequest", "SDLA", "SESM", "PendingSolve", "SliceDecision",
     "CellRuntime", "EdgeServingEngine", "TaskRuntime", "pinned_accuracy_at",
     "MultiCellEngine", "TierPolicy",

@@ -20,7 +20,8 @@ from repro.core import (CouplingSpec, ResourcePool, check_solution,
                         solve_greedy_sharded, stack_instances)
 from repro.core import latency as lat_mod
 from repro.core.greedy import dispatch_device_batch, unpack_device_batch
-from repro.core.sfesp import DeviceStack, empty_device_stack
+from repro.core.sfesp import (DeviceStack, empty_device_stack,
+                              task_feasibility_rows)
 from .request import SliceRequest
 from .sdla import SDLA
 
@@ -99,6 +100,12 @@ class _ServeSession:
     # link degradation) does NOT invalidate the session: the link set is
     # unchanged, so the delta is one (L,) device refresh
     # (DeviceStack.update_link_budgets), counted in ``sesm.link_updates``
+    sem_ref: object                  # the SDLA's SemanticModel — identity
+    # guard: swapping in a DIFFERENT model object rebuilds the session
+    sem_version: int                 # model-version snapshot — an IN-PLACE
+    # drift of the same model (version bump) does NOT invalidate: the changed
+    # apps' live rows re-run the min-z pipeline and delta-scatter
+    # (DeviceStack.update_semantics), counted in ``sesm.semantic_updates``
     scale: float
     semantic: bool
     flexible: bool
@@ -162,6 +169,10 @@ class SESM:
         # session alive (the degradation fast path)
         self.session_rebuilds = 0
         self.link_updates = 0
+        # semantic-drift telemetry: ticks whose model-version bump was
+        # absorbed as dirty-row delta scatters with the session kept alive
+        # (the drift fast path; rows counted on dev.semantic_rows)
+        self.semantic_updates = 0
 
     def slice(self, requests: list[SliceRequest]) -> list[SliceDecision]:
         if not requests:
@@ -272,11 +283,16 @@ class SESM:
         the batch size / algorithm / coupling / pools change, or the SDLA
         latency scale moves (every cached row depends on it); ``pools`` and
         ``coupling`` are identity-compared — pass the same objects per tick,
-        as :class:`~repro.serving.multicell.MultiCellEngine` does. The one
-        sanctioned in-place mutation is ``CouplingSpec.set_budgets`` (link
-        degradation): same coupling object, new budget VALUES — detected by
-        value snapshot and applied as a single (L,) device refresh
-        (``sesm.link_updates``) with the session kept alive.
+        as :class:`~repro.serving.multicell.MultiCellEngine` does. TWO
+        in-place mutations are sanctioned and keep the session alive:
+        ``CouplingSpec.set_budgets`` (link degradation — same coupling
+        object, new budget VALUES, detected by value snapshot, applied as a
+        single (L,) device refresh, ``sesm.link_updates``) and a
+        ``SemanticModel`` drift (same model object, bumped version —
+        detected by version snapshot, applied as dirty-row scatters of just
+        the live slots whose curves moved, ``sesm.semantic_updates`` /
+        ``DeviceStack.update_semantics``). Swapping in a DIFFERENT coupling
+        or model object is a rebuild.
 
         ``wait=False`` returns a :class:`PendingSolve` instead of decisions:
         the dirty rows are consumed, the device program launches, and the
@@ -299,6 +315,7 @@ class SESM:
         scale = self.sdla.latency_scale
         semantic = bool(self.algorithm["semantic"])
         flexible = bool(self.algorithm["flexible"])
+        model = self.sdla.semantics
         sess = self._serve_session
         if sess is not None and (
                 sess.batch_size != B or tneed > sess.max_tasks
@@ -306,6 +323,7 @@ class SESM:
                 or sess.flexible != flexible
                 or sess.coupling_ref is not coupling
                 or sess.pools_ref is not pools
+                or sess.sem_ref is not model
                 or not np.array_equal(sess.pool_state,
                                       self._pool_state(B, pools))):
             sess = self._serve_session = None
@@ -329,6 +347,13 @@ class SESM:
                     sess.dev.update_link_budgets(coupling.link_capacity)
                 sess.link_cap_state = coupling.link_capacity.copy()
                 self.link_updates += 1
+            if model.version != sess.sem_version:
+                # semantic drift: the SAME model object moved in place
+                # (version bump). The delta is the live rows whose EFFECTIVE
+                # curve changed — re-run the shared min-z pipeline on just
+                # those and scatter (DeviceStack.update_semantics); the
+                # session stays alive.
+                self._refresh_semantics(sess, slot_rows, model)
             if not live:
                 return out if wait else PendingSolve.ready(out)
             self.restacks += 1
@@ -379,7 +404,9 @@ class SESM:
             pools_ref=pools, coupling_ref=coupling,
             pool_state=self._pool_state(B, pools),
             link_cap_state=None if coupling is None
-            else coupling.link_capacity.copy(), scale=scale,
+            else coupling.link_capacity.copy(),
+            sem_ref=self.sdla.semantics,
+            sem_version=self.sdla.semantics.version, scale=scale,
             semantic=bool(self.algorithm["semantic"]),
             flexible=bool(self.algorithm["flexible"]),
             z_star=np.ones((B, tmax)), has_z=np.zeros((B, tmax), bool),
@@ -415,23 +442,19 @@ class SESM:
         rate = np.zeros(d)
         gpu_t = np.zeros(d)
         if reqs:
-            # the same per-task pipeline as sdla.build_instance, restricted
-            # to the changed rows (unchanged requests cost zero recompute)
+            # the ONE per-task min-z pipeline (sfesp.task_feasibility_rows),
+            # shared with sdla.build_instance and restricted to the changed
+            # rows (unchanged requests cost zero recompute)
             ts = self.sdla.task_set(reqs)
-            z_app = ts.app_idx if sess.semantic \
-                else semantics.agnostic_app(ts.app_idx)
-            zi = semantics.min_z_for_accuracy(z_app, ts.min_accuracy,
-                                              sess.z_grid)
-            z_row = np.where(zi >= 0, sess.z_grid[np.clip(zi, 0, None)], 1.0)
-            lat = lat_mod.latency_table(self.sdla.lat_params, ts, z_row,
-                                        sess.grid)
-            lok = lat <= ts.max_latency[:, None]
+            rows = task_feasibility_rows(
+                ts, sess.z_grid, sess.grid, self.sdla.lat_params,
+                semantic=sess.semantic, model=self.sdla.semantics)
             li = np.asarray(live_pos, np.int64)
-            lat_ok[li] = lok
-            alive[li] = (zi >= 0) & lok.any(axis=1)
-            load[li] = ts.bits_per_job * ts.jobs_per_sec * z_row
-            z[li] = z_row
-            has_z[li] = zi >= 0
+            lat_ok[li] = rows.lat_ok
+            alive[li] = rows.alive
+            load[li] = rows.load
+            z[li] = rows.z_star
+            has_z[li] = rows.z_idx >= 0
             app[li] = ts.app_idx
             bits[li] = ts.bits_per_job
             rate[li] = ts.jobs_per_sec
@@ -447,6 +470,50 @@ class SESM:
         sess.dev.update_rows(bb, tt, lat_ok, alive, load)
         self.delta_rows += d
         sess.pending.clear()
+
+    def _refresh_semantics(self, sess: _ServeSession, slot_rows, model):
+        """Absorb an in-place model drift as dirty-row delta scatters.
+
+        The drifted apps come from the model's change log
+        (``changed_since``); only LIVE slots whose effective curve — the
+        task's own app, or its service-wide 'All' fallback in agnostic mode —
+        actually moved are recomputed (through the same shared pipeline as
+        :meth:`_sync_rows`) and scattered via
+        :meth:`~repro.core.sfesp.DeviceStack.update_semantics`. Everything
+        else (app/bits/rate mirrors, pins, the session itself) is untouched:
+        ``session_rebuilds`` stays 0 across drifts.
+        """
+        changed = model.changed_since(sess.sem_version)
+        sess.sem_version = model.version
+        if not changed:
+            return
+        items: list[tuple[int, int]] = []
+        reqs: list[SliceRequest] = []
+        for b, rows in enumerate(slot_rows):
+            for t, r in enumerate(rows):
+                if r is None:
+                    continue
+                a = semantics.APP_INDEX[r.app_class]
+                eff = a if sess.semantic else int(model.agnostic_app(a))
+                if eff in changed:
+                    items.append((b, t))
+                    reqs.append(r)
+        if not items:
+            return
+        ts = self.sdla.task_set(reqs)
+        rows_ = task_feasibility_rows(
+            ts, sess.z_grid, sess.grid, self.sdla.lat_params,
+            semantic=sess.semantic, model=model)
+        d = len(items)
+        bb = np.fromiter((b for b, _ in items), np.int64, d)
+        tt = np.fromiter((t for _, t in items), np.int64, d)
+        # only the curve-derived mirrors move; the request-derived ones
+        # (app_idx, bits, rate, gpu_t) are drift-invariant
+        sess.z_star[bb, tt] = rows_.z_star
+        sess.has_z[bb, tt] = rows_.z_idx >= 0
+        sess.dev.update_semantics(bb, tt, rows_.lat_ok, rows_.alive,
+                                  rows_.load)
+        self.semantic_updates += 1
 
     def _slot_unpacker(self, sess: _ServeSession, slot_rows, out):
         """Build the decision unpacker for one dispatched slot solve.
@@ -477,6 +544,10 @@ class SESM:
         names = list(sess.names)
         grid = sess.grid
         lat_params = self.sdla.lat_params
+        # curve snapshot at dispatch: a model drift landing while the solve
+        # is in flight must not change what the unpack reports (the accuracy
+        # half of the double buffer)
+        model = self.sdla.semantics.snapshot()
 
         def unpack(res):
             adm = res["admitted"][bb, tt]
@@ -486,7 +557,7 @@ class SESM:
             # the identical first-principles report as
             # _decisions/check_solution
             lat = lat_mod.latency(lat_params, bits, rate, gpu_t, z, alloc)
-            acc = semantics.accuracy(app_idx, z)
+            acc = model.accuracy(app_idx, z)
             for i, (b, t) in enumerate(pos):
                 out[b].append(SliceDecision(
                     request=reqs[i],

@@ -198,14 +198,17 @@ def sla_scorecard(engine: MultiCellEngine,
 
     Returns ``{"tiers": {tier: {...}}, "run": {...}}``. Per tier:
     ``offered``/``admitted`` (per-re-slice decision counts) and the derived
-    ``admission_rate``, ``evictions``/``drops``/``sheds``/``drain_drops``
-    event counts, and — over the live tasks' measured end-to-end latency
-    samples — ``deadline_hit_rate``, ``p95_latency_s`` and
-    ``latency_samples`` (``None``/0 when nothing ran, never a vacuous 100 %).
-    The ``run`` section aggregates the fault plane: degraded ticks, dead
-    cells, drain/recovery counts, retry depth, and the session-cache health
-    counters (``link_updates``, ``session_rebuilds``). With the driver's
-    ``records``, ``steps`` and ``degraded_steps`` are included too.
+    ``admission_rate``, ``evictions``/``drops``/``sheds``/``preemptions``
+    (tier-policy force-evictions suffered, victim side) /
+    ``preempt_rescued`` (rejections overturned by the preemption re-solve,
+    beneficiary side) / ``drain_drops`` event counts, and — over the live
+    tasks' measured end-to-end latency samples — ``deadline_hit_rate``,
+    ``p95_latency_s`` and ``latency_samples`` (``None``/0 when nothing ran,
+    never a vacuous 100 %). The ``run`` section aggregates the fault plane:
+    degraded ticks, dead cells, drain/recovery counts, retry depth, and the
+    session-cache health counters (``link_updates``, ``semantic_updates``,
+    ``session_rebuilds``). With the driver's ``records``, ``steps`` and
+    ``degraded_steps`` are included too.
     """
     totals = engine.metrics()["totals"]
     lat_by_tier: dict[int, list[tuple[float, float]]] = {}
@@ -217,7 +220,8 @@ def sla_scorecard(engine: MultiCellEngine,
                 (float(s), dl) for s in rt.latencies)
     tier_ids = set(lat_by_tier)
     for key in ("offered_by_tier", "admitted_by_tier", "evictions_by_tier",
-                "drops_by_tier", "sheds_by_tier", "drain_drops_by_tier"):
+                "drops_by_tier", "sheds_by_tier", "preemptions_by_tier",
+                "preempt_rescued_by_tier", "drain_drops_by_tier"):
         tier_ids |= set(totals[key])
     tiers = {}
     for t in sorted(tier_ids):
@@ -230,6 +234,8 @@ def sla_scorecard(engine: MultiCellEngine,
             evictions=totals["evictions_by_tier"].get(t, 0),
             drops=totals["drops_by_tier"].get(t, 0),
             sheds=totals["sheds_by_tier"].get(t, 0),
+            preemptions=totals["preemptions_by_tier"].get(t, 0),
+            preempt_rescued=totals["preempt_rescued_by_tier"].get(t, 0),
             drain_drops=totals["drain_drops_by_tier"].get(t, 0),
             deadline_hit_rate=float(np.mean([s <= dl for s, dl in samples]))
             if samples else None,
@@ -244,9 +250,12 @@ def sla_scorecard(engine: MultiCellEngine,
         drained=totals["drained"], drain_drops=totals["drain_drops"],
         recoveries=totals["recoveries"], handovers=totals["handovers"],
         evictions=totals["evictions"], drops=totals["drops"],
-        sheds=totals["sheds"], retry_depth=totals["retry_depth"],
+        sheds=totals["sheds"], preemptions=totals["preemptions"],
+        preempt_rescued=totals["preempt_rescued"],
+        retry_depth=totals["retry_depth"],
         running=totals["running"],
         link_updates=totals["link_updates"],
+        semantic_updates=totals["semantic_updates"],
         session_rebuilds=totals["session_rebuilds"],
     )
     if records:

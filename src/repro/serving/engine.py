@@ -123,11 +123,16 @@ class CellRuntime:
         # POLICY drops (TierPolicy pressure shedding) — a subset of `drops`.
         self.evictions = 0
         self.sheds = 0
+        # `preemptions` are tier-policy force-evictions of RUNNING tasks
+        # (MultiCellEngine's post-solve preemption pass) — a subset of
+        # `evictions`, attributed to the EVICTED task's tier
+        self.preemptions = 0
         self.offered_by_tier: collections.Counter = collections.Counter()
         self.admitted_by_tier: collections.Counter = collections.Counter()
         self.evictions_by_tier: collections.Counter = collections.Counter()
         self.drops_by_tier: collections.Counter = collections.Counter()
         self.sheds_by_tier: collections.Counter = collections.Counter()
+        self.preemptions_by_tier: collections.Counter = collections.Counter()
         # ------------------------------------------------ SoA slot tables
         # numpy halves (slot index == solver row; see the module docstring)
         cap = 8
@@ -467,6 +472,49 @@ class CellRuntime:
                 self._leave(rid)
         return decisions
 
+    def preempt(self, request_id: int) -> bool:
+        """Force-evict a RUNNING task (the post-solve preemption pass).
+
+        Tier policy lives OUTSIDE the solver (mirror of :meth:`shed`): when a
+        higher-tier arrival is rejected for lack of capacity, the engine
+        preempts a lower-tier running task and re-solves the freed rows —
+        the solver itself stays SLA-blind. Bookkeeping is identical to a
+        solver eviction surfaced by :meth:`apply` — one retry consumed, the
+        warm-start pin cleared (an evicted task has no served stream), the
+        task re-queued or dropped on an exhausted budget — plus separate
+        ``preemptions``/``preemptions_by_tier`` attribution (the EVICTED
+        task's tier). Returns ``True`` if the victim re-queued, ``False`` if
+        it dropped. A re-queued victim keeps its slot (it is still a
+        candidate); the caller excludes that row from its delta re-solve and
+        re-dirties it so the next consuming sync rescatters the real row.
+        """
+        if request_id not in self.tasks:
+            raise KeyError(
+                f"request {request_id} is not running in cell {self.cell}")
+        self.tasks.pop(request_id)
+        slot = self._slot_of[request_id]
+        tier = int(self._tier[slot])
+        self.evictions += 1
+        self.evictions_by_tier[tier] += 1
+        self.preemptions += 1
+        self.preemptions_by_tier[tier] += 1
+        if self._pin[slot] != 0.0:
+            self._pin[slot] = 0.0
+            self._row[slot] = self._req[slot]
+        left = int(self._retries_left[slot]) - 1
+        self._retries_left[slot] = left
+        if left >= 0:
+            self._state[slot] = _QUEUED
+            self._queue.append((request_id, int(self._gen[slot])))
+            return True
+        self.drops += 1
+        self.drops_by_tier[tier] += 1
+        self.dropped.append(self._req[slot])
+        self._slot_of.pop(request_id)
+        self._free_slot(slot)
+        self._leave(request_id)
+        return False
+
     def shed(self, request_id: int) -> SliceRequest:
         """Policy-drop a QUEUED request immediately (tier-based shedding).
 
@@ -516,8 +564,9 @@ class CellRuntime:
                           float | None]] = []
         for rid in list(self.tasks):
             req, rt, retries = self.hand_out(rid)
-            items.append((req, rt, retries, pinned_accuracy_at(req,
-                                                              rt.decision.z)))
+            items.append((req, rt, retries,
+                          pinned_accuracy_at(req, rt.decision.z,
+                                             model=self.sdla.semantics)))
         for rid in self.queued_ids():
             p = self._pending_in.pop(rid, None)
             if p is not None:
@@ -704,9 +753,15 @@ class EdgeServingEngine:
         return self.runtime.metrics()
 
 
-def pinned_accuracy_at(request: SliceRequest, z: float) -> float:
+def pinned_accuracy_at(request: SliceRequest, z: float,
+                       model: semantics.SemanticModel | None = None) -> float:
     """The warm-start accuracy bound of a stream already encoded at ``z`` —
     Eq. (2) then re-derives (at most) that compression in the target cell.
-    (Request-level wrapper over the single-source pin in core.semantics.)"""
-    return semantics.warm_start_accuracy(
+    (Request-level wrapper over the single-source pin in core.semantics.)
+
+    ``model`` selects whose curves price the pin — the engine passes its
+    SDLA's live (possibly drifted) model, so a pin records the accuracy the
+    stream achieves UNDER THE CURVES IT WAS ENCODED UNDER; once recorded it
+    is a value, unaffected by later drift."""
+    return semantics.resolve(model).warm_start_accuracy(
         semantics.APP_INDEX[request.app_class], z)

@@ -65,6 +65,11 @@ topologies:
   budget values in place (same array object = same link set), and
   :meth:`MultiCellEngine.set_link_budgets` is the engine-level entry; the
   session survives via one (L,) device refresh (``sesm.link_updates``).
+* time-varying SEMANTICS — :meth:`MultiCellEngine.shift_semantics` (the
+  ``SemanticShift`` event) moves the SDLA's accuracy curves in place: the
+  model keeps its identity, bumps its version, and the next re-slice
+  rescatters only the rows of tasks whose effective app changed
+  (``sesm.semantic_updates``); handover pins stay at their recorded values.
 * heartbeats — every :meth:`MultiCellEngine.process` tick stamps
   ``repro.runtime.fault_tolerance.HeartbeatMonitor`` per live cell (and
   feeds ``repro.runtime.fault_tolerance.StragglerMitigator`` the measured
@@ -73,6 +78,10 @@ topologies:
 * priority tiers — :class:`TierPolicy` sheds LOW-priority queued requests
   first when a cell's retry queue exceeds its pressure threshold, within
   per-tier drop budgets, BEFORE the solve (the solver stays SLA-blind).
+* tier-aware PREEMPTION (``preempt=True``) — AFTER the solve, a rejected
+  candidate whose coupling group still runs a strictly lower-priority task
+  preempts it and the freed rows re-solve as a delta; only the second
+  round applies (:meth:`MultiCellEngine._preempt_pass`).
 """
 
 from __future__ import annotations
@@ -85,7 +94,7 @@ import numpy as np
 
 from repro.core import CouplingSpec, ResourcePool
 from repro.core.events import (Arrival, CellFault, Departure, Event, Handover,
-                               LinkScale, Tick)
+                               LinkScale, SemanticShift, Tick)
 from repro.core.latency import LatencyParams
 from repro.runtime.fault_tolerance import HeartbeatMonitor, StragglerMitigator
 from .admission import SESM, SliceDecision
@@ -132,6 +141,12 @@ class MultiCellEngine:
         ``core.greedy.solve_greedy_sharded`` — one block of coupling groups
         per device — instead of the single-device engine (metro mode; see
         the module docstring). Decisions are identical either way.
+      preempt: enable the tier-aware POST-SOLVE preemption pass: when a
+        re-slice rejects a candidate while a strictly lower-priority task
+        keeps running in its coupling group, the engine preempts the
+        lowest-priority (newest-first) running victim and re-solves the
+        freed rows as a delta — the solver itself stays SLA-blind, and only
+        the second round's decisions are applied. See :meth:`_preempt_pass`.
     """
 
     def __init__(self, pools: list[ResourcePool], *,
@@ -139,7 +154,7 @@ class MultiCellEngine:
                  max_batch: int = 8, max_retries: int = 2,
                  solver_backend: str = "numpy", mesh=None,
                  tier_policy: TierPolicy | None = None,
-                 heartbeat_timeout: int = 3):
+                 preempt: bool = False, heartbeat_timeout: int = 3):
         pools = list(pools)
         if not pools:
             raise ValueError("MultiCellEngine needs at least one cell pool")
@@ -170,6 +185,12 @@ class MultiCellEngine:
         self.handovers = 0
         # ----------------------------------------------------- fault plane
         self.tier_policy = tier_policy
+        self.preempt = preempt
+        # candidates rejected by round 1 and admitted by the post-preemption
+        # re-solve — the lift the preemption pass buys, by RESCUED tier
+        self.preempt_rescued = 0
+        self.preempt_rescued_by_tier: collections.Counter = \
+            collections.Counter()
         self.dead: set[int] = set()            # failed cells (zero-task rows)
         self._silent: set[int] = set()         # injected hangs (skip process)
         self.tick = 0                          # process() counter = heartbeat
@@ -334,6 +355,21 @@ class MultiCellEngine:
             budgets = self._nominal_budgets * float(scale)
         self.coupling.set_budgets(budgets)
 
+    def shift_semantics(self, app_idx=None, *, params=None, scale=None):
+        """Semantic drift entry (the :class:`SemanticShift` event): move the
+        SDLA's accuracy curves IN PLACE — the model-only change the device
+        session survives.
+
+        Exactly one of ``scale`` (asymptotes to ``scale ×`` nominal) or
+        ``params`` (explicit ``(K, 3)`` rows). The SDLA's model object keeps
+        its identity and bumps its version, so the next re-slice refreshes
+        only the rows of tasks whose EFFECTIVE app changed — host recompute
+        plus a dirty-row device scatter (``sesm.semantic_updates``), never a
+        session rebuild. Accuracy pins recorded by earlier handovers are
+        values, not curve lookups: they do not move. Returns the model's new
+        signature."""
+        return self.sdla.recalibrate(app_idx, params=params, scale=scale)
+
     def _shed_pressure(self) -> int:
         """Apply the TierPolicy: shed low-tier queued requests from cells
         whose queues exceed the pressure threshold (before the solve)."""
@@ -401,7 +437,8 @@ class MultiCellEngine:
         """
         s = dict(arrivals=0, placed=0, rehomed=0, lost=0, departures=0,
                  missing=0, handovers=0, handovers_skipped=0, failed=[],
-                 recovered=[], moves={}, link_updates=0, ticks=0)
+                 recovered=[], moves={}, link_updates=0, semantic_shifts=0,
+                 ticks=0)
         for event in events:
             if type(event) is Arrival:
                 s["arrivals"] += 1
@@ -463,6 +500,10 @@ class MultiCellEngine:
             elif type(event) is LinkScale:
                 self.set_link_budgets(event.budgets, scale=event.scale)
                 s["link_updates"] += 1
+            elif type(event) is SemanticShift:
+                self.shift_semantics(event.app_idx, params=event.params,
+                                     scale=event.scale)
+                s["semantic_shifts"] += 1
             elif type(event) is Tick:
                 self.process(event.wall_dt)
                 s["ticks"] += 1
@@ -556,9 +597,114 @@ class MultiCellEngine:
     def reslice_commit(self, pending) -> list[list[SliceDecision]]:
         """Second half of :meth:`reslice`: await the dispatched solve's
         device arrays, unpack them against the back-buffer host mirrors
-        captured at dispatch, and apply the decisions per cell."""
+        captured at dispatch, and apply the decisions per cell. With
+        ``preempt=True`` the awaited decisions first run the tier-aware
+        preemption pass — which may replace them with a re-solve's — so the
+        per-tier offered/admitted counters always see exactly ONE round."""
         decisions = pending.wait()
+        if self.preempt:
+            decisions = self._preempt_pass(decisions)
         return [cell.apply(ds) for cell, ds in zip(self.cells, decisions)]
+
+    def _preempt_pass(self, decisions: list[list[SliceDecision]]
+                      ) -> list[list[SliceDecision]]:
+        """Tier-aware post-solve preemption: arbitration the solver never
+        sees.
+
+        For every candidate round 1 rejected while a STRICTLY lower-priority
+        task (greater tier number) kept running in its coupling group, one
+        victim is preempted — lowest priority first, newest arrival first
+        within a tier, then by cell index — and the freed rows re-solve as
+        an ordinary dirty-row delta on the live device session (metro mode
+        re-solves the filtered gather sets sharded). Victims pay the
+        standard eviction price (one retry consumed, pin cleared, re-queued
+        or dropped; ``CellRuntime.preempt``); a surviving victim's row is
+        hidden from the re-solve only — its slot re-dirties afterwards, so
+        it re-offers next tick. Round-1 decisions are DISCARDED unapplied;
+        the caller applies only the returned round."""
+        groups = self.coupling.groups() if self.coupling is not None \
+            else list(range(self.num_cells))
+        admitted: list[set[int]] = [set() for _ in self.cells]
+        rejected: list[tuple[int, int, int, int]] = []
+        for c, ds in enumerate(decisions):
+            for i, d in enumerate(ds):
+                rid = d.request.request_id
+                if d.admitted:
+                    admitted[c].add(rid)
+                else:
+                    rejected.append((d.request.tier, c, i, rid))
+        if not rejected:
+            return decisions
+        # the preemptible pool: tasks RUNNING before this tick that round 1
+        # would keep running (a task round 1 already rejected frees its
+        # capacity anyway — preempting it would punish it twice)
+        pool: list[tuple[int, int, int, int]] = []
+        for c, cell in enumerate(self.cells):
+            for rid in cell.tasks:
+                if rid in admitted[c]:
+                    slot = cell._slot_of[rid]
+                    pool.append((int(cell._tier[slot]),
+                                 int(cell._gen[slot]), c, rid))
+        if not pool:
+            return decisions
+        pool.sort(key=lambda v: (-v[0], -v[1], v[2]))
+        rejected.sort()                      # highest-priority claims first
+        victims: list[tuple[int, int]] = []
+        used: set[int] = set()
+        for tier, c, _, _rid in rejected:
+            grp = groups[c]
+            pick = next((i for i, v in enumerate(pool)
+                         if i not in used and v[0] > tier
+                         and groups[v[2]] == grp), None)
+            if pick is not None:
+                used.add(pick)
+                victims.append((pool[pick][2], pool[pick][3]))
+        if not victims:
+            return decisions
+        # evict: standard eviction bookkeeping + preemption attribution; a
+        # surviving (re-queued) victim keeps its slot — hide it this round
+        hidden: list[list[int]] = [[] for _ in self.cells]
+        for c, rid in victims:
+            cell = self.cells[c]
+            slot = cell._slot_of[rid]
+            if cell.preempt(rid):
+                hidden[c].append(slot)
+        if self.sesm.mesh is not None:
+            sets = []
+            for c, cell in enumerate(self.cells):
+                rows, _ = cell.sync_slots()
+                hide = set(hidden[c])
+                sets.append([r for s, r in enumerate(rows)
+                             if r is not None and s not in hide])
+            redo = self.sesm.ready_solve(sets, coupling=self.coupling,
+                                         pools=self.pools)
+        else:
+            rows2, dirty2 = [], []
+            for c, cell in enumerate(self.cells):
+                r, d = cell.sync_slots(consume=True)
+                r = list(r)
+                for s in hidden[c]:
+                    r[s] = None
+                    d.append(s)
+                rows2.append(r)
+                dirty2.append(sorted(set(d)))
+            redo = self.sesm.solve_slots(rows2, dirty2,
+                                         coupling=self.coupling,
+                                         pools=self.pools, wait=False)
+        decisions2 = redo.wait()
+        # surviving victims re-offer NEXT tick: re-dirty the hidden slots so
+        # the next consuming sync rescatters the real rows
+        for c, slots in enumerate(hidden):
+            for s in slots:
+                self.cells[c]._dirty[s] = True
+        rejected_ids = [{rid for _t, cc, _i, rid in rejected if cc == c}
+                        for c in range(self.num_cells)]
+        for c, ds in enumerate(decisions2):
+            for d in ds:
+                if d.admitted and d.request.request_id in rejected_ids[c]:
+                    self.preempt_rescued += 1
+                    self.preempt_rescued_by_tier[d.request.tier] += 1
+        return decisions2
 
     def reslice_rebuild(self) -> list[list[SliceDecision]]:
         """The pre-fast-path re-slice: rebuild every cell's instance and
@@ -590,7 +736,8 @@ class MultiCellEngine:
                 f"handover {src}->{dst}: cell "
                 f"{dst if dst in self.dead else src} is failed")
         req, rt, retries = self.cells[src].hand_out(request_id)
-        pin = pinned_accuracy_at(req, rt.decision.z)
+        pin = pinned_accuracy_at(req, rt.decision.z,
+                                 model=self.sdla.semantics)
         self.cells[dst].hand_in(req, rt, retries, pin)
         self.handovers += 1
         return pin
@@ -630,6 +777,8 @@ class MultiCellEngine:
             drops=sum(cell.drops for cell in self.cells),
             evictions=sum(cell.evictions for cell in self.cells),
             sheds=sum(cell.sheds for cell in self.cells),
+            preemptions=sum(cell.preemptions for cell in self.cells),
+            preempt_rescued=self.preempt_rescued,
             handovers=self.handovers,
             drained=self.drained,
             drain_drops=self.drain_drops,
@@ -638,6 +787,7 @@ class MultiCellEngine:
             degraded=self.degraded,
             degraded_ticks=self.degraded_ticks,
             link_updates=self.sesm.link_updates,
+            semantic_updates=self.sesm.semantic_updates,
             session_rebuilds=self.sesm.session_rebuilds,
             stragglers=sorted(self.stragglers.chronic()),
             offered_by_tier=merged("offered_by_tier"),
@@ -645,6 +795,8 @@ class MultiCellEngine:
             evictions_by_tier=merged("evictions_by_tier"),
             drops_by_tier=merged("drops_by_tier"),
             sheds_by_tier=merged("sheds_by_tier"),
+            preemptions_by_tier=merged("preemptions_by_tier"),
+            preempt_rescued_by_tier=dict(self.preempt_rescued_by_tier),
             drain_drops_by_tier=dict(self.drain_drops_by_tier),
         )
         return out

@@ -5,6 +5,12 @@ Task Description (paper Section III-B, Steps 1-2): accuracy from the semantic
 application registry (representative-dataset curves), latency from the
 calibrated Colosseum regression. Functions are cached per TD and refreshed
 with radio/edge status updates (Step 7) via the ``latency_scale`` knob.
+
+The accuracy side is a first-class, *mutable*
+:class:`~repro.core.semantics.SemanticModel` owned by the SDLA (a fresh
+paper-calibration copy by default): :meth:`recalibrate` is the rApp's
+semantic-drift entry — curves move in place, the model version bumps, and
+every consumer keyed on the model signature refreshes only its dirty rows.
 """
 
 from __future__ import annotations
@@ -23,13 +29,35 @@ _DEFAULT_GPU_TIME = semantics.SERVICE_GPU_TIME
 
 
 class SDLA:
-    def __init__(self, lat_params: LatencyParams | None = None):
+    def __init__(self, lat_params: LatencyParams | None = None,
+                 model: semantics.SemanticModel | None = None):
         self.lat_params = lat_params or LatencyParams()
         self.latency_scale = 1.0            # refined from radio status (Step 7)
+        # a PRIVATE mutable copy of the paper calibration (bit-identical
+        # values), so recalibrating this SDLA never moves global state
+        self.semantics = model if model is not None \
+            else semantics.SemanticModel.paper_default()
 
     def update_radio_status(self, scale: float):
         """Step 7: refine the latency function from observed channel state."""
         self.latency_scale = scale
+
+    def recalibrate(self, app_idx=None, *, params=None, scale=None):
+        """Semantic drift entry: move the accuracy curves of ``app_idx``.
+
+        Exactly one of ``params`` (explicit (K, 3) ``[M, γ, H]`` rows — a
+        full recalibration, re-anchoring the nominal) or ``scale`` (set the
+        asymptotes to ``scale ×`` nominal — the transient-drift convention of
+        :class:`~repro.core.events.SemanticShift`). Bumps the model version;
+        returns the new signature.
+        """
+        if (params is None) == (scale is None):
+            raise ValueError("recalibrate needs exactly one of params=/scale=")
+        if params is not None:
+            if app_idx is None:
+                app_idx = np.arange(self.semantics.n_apps)
+            return self.semantics.update(app_idx, params)
+        return self.semantics.scale_asymptotes(app_idx, scale)
 
     def bits_per_job(self, request: SliceRequest) -> float:
         """Resolve the per-job stream size (Mbit) of a request.
@@ -78,4 +106,5 @@ class SDLA:
 
     def build_instance(self, requests: list[SliceRequest], pool: ResourcePool):
         return build_instance(pool, self.task_set(requests),
-                              lat_params=self.lat_params)
+                              lat_params=self.lat_params,
+                              model=self.semantics)

@@ -84,3 +84,169 @@ def test_primal_gradient_positive_and_branching(seed):
     # uniform branch: scale-invariance under simultaneous p scaling
     pg_scaled = primal_gradient(grid, price * 7.0, cap, np.zeros(m))
     assert np.allclose(pg_scaled, pg0 * 7.0)
+
+
+# ------------------------------------------------- time-varying semantics
+
+
+@st.composite
+def models(draw):
+    """Any valid (finite, positive-parameter) SemanticModel."""
+    cols = []
+    for lo, hi in ((0.15, 0.98), (0.3, 3.5), (0.02, 1.5)):   # M, gamma, H
+        cols.append([draw(st.floats(lo, hi, allow_nan=False))
+                     for _ in range(N_APPS)])
+    return semantics.SemanticModel(np.stack(cols, axis=1))
+
+
+@given(models(), st.integers(0, N_APPS - 1),
+       st.floats(0.01, 0.99), st.floats(0.01, 0.99))
+@settings(max_examples=60, deadline=None)
+def test_min_z_monotone_in_min_acc_for_any_model(model, app, a1, a2):
+    """Eq. (2) under ANY valid curve calibration: a stricter accuracy bound
+    never picks a SMALLER compression, and once unreachable it stays
+    unreachable; a reachable pick always satisfies the bound."""
+    from repro.core import default_z_grid
+    zg = default_z_grid()
+    lo, hi = sorted((a1, a2))
+    app_v = np.array([app])
+    i_lo = int(model.min_z_for_accuracy(app_v, np.array([lo]), zg)[0])
+    i_hi = int(model.min_z_for_accuracy(app_v, np.array([hi]), zg)[0])
+    if i_hi >= 0:
+        assert 0 <= i_lo <= i_hi
+    if i_lo == -1:
+        assert i_hi == -1
+    for bound, idx in ((lo, i_lo), (hi, i_hi)):
+        if idx >= 0:
+            assert float(model.accuracy(app_v, zg[idx:idx + 1])[0]) >= bound
+
+
+@given(models(), st.integers(0, 2**32 - 1),
+       st.lists(st.floats(0.5, 1.0), min_size=1, max_size=4))
+@settings(max_examples=15, deadline=None)
+def test_drift_equals_fresh_model_of_same_params(model, seed, scales):
+    """Scale drift is nominal-anchored: after any drift sequence the model's
+    tables bit-match a FRESH model constructed at the final params — drift
+    is a pure reparameterization, with changed_since tracking every bump."""
+    rng = np.random.default_rng(seed)
+    v0 = model.version
+    for s in scales:
+        apps = rng.choice(N_APPS, size=rng.integers(1, N_APPS),
+                          replace=False)
+        model.scale_asymptotes(apps, s)
+    fresh = semantics.SemanticModel(model.params)
+    zs = np.linspace(0.02, 1.0, 17)
+    app = np.arange(N_APPS)
+    for z in zs:
+        zv = np.full(N_APPS, z)
+        assert model.accuracy(app, zv) == pytest.approx(
+            fresh.accuracy(app, zv), abs=0)
+    assert model.version == v0 + len(scales)
+    assert model.changed_since(model.version) == frozenset()
+    assert model.changed_since(v0) <= frozenset(range(N_APPS))
+
+
+@pytest.mark.slow
+@given(st.integers(0, 2**32 - 1),
+       st.lists(st.sampled_from([0.6, 0.75, 0.9, 1.0]),
+                min_size=2, max_size=4))
+@settings(max_examples=6, deadline=None)
+def test_drift_delta_scatter_matches_rebuild_under_churn(seed, scales):
+    """Random churn + curve drift: the device session's dirty-row semantic
+    scatters make the SAME decisions as a full rebuild under the drifted
+    model, tick for tick — and the drift-scattered device buffers solve
+    bit-identically through the jnp AND Pallas inner rounds."""
+    from repro.core import scenarios as sc, CouplingSpec, solve_device_batch
+    from repro.serving import MultiCellEngine, SliceRequest
+
+    def build():
+        pools = sc.multi_cell_pools(3, seed=2)
+        spec = CouplingSpec(np.array([2.0]), np.ones((3, 1), bool))
+        return MultiCellEngine(pools, coupling=spec, max_retries=3)
+
+    rng = np.random.default_rng(seed)
+    apps = ["coco_bags", "coco_animals", "cityscapes_flat", "coco_person"]
+
+    def req(rid):
+        return SliceRequest(
+            "object-recognition", "yolox",
+            apps[int(rng.integers(len(apps)))],
+            max_latency_s=float(rng.uniform(0.5, 0.9)),
+            min_accuracy=float(rng.uniform(0.2, 0.5)),
+            jobs_per_sec=float(rng.uniform(3.0, 8.0)), request_id=rid)
+
+    import dataclasses as _dc
+
+    fast, slow = build(), build()
+    nid = 0
+    live: list[tuple[int, int]] = []
+    for i in range(6):                       # seed population: 2 per cell
+        r = req(nid := nid + 1)
+        c = i % 3
+        live.append((r.request_id, c))
+        fast.submit(r, c)
+        slow.submit(_dc.replace(r), c)       # same id, distinct object
+    for tick, scale in enumerate(scales):
+        for eng in (fast, slow):
+            eng.shift_semantics(scale=scale)
+        df = fast.reslice()
+        ds = slow.reslice_rebuild()
+        for cf, cs in zip(df, ds):
+            assert [(d.admitted, d.z, d.alloc) for d in cf] \
+                == [(d.admitted, d.z, d.alloc) for d in cs], tick
+        # churn between ticks: replace one task IN PLACE (same cell), so
+        # per-cell counts never overflow the session's pow2 bucket and the
+        # zero-rebuild assertion below is exact
+        if rng.random() < 0.7:
+            k = int(rng.integers(len(live)))
+            rid, c = live.pop(k)
+            fast.remove(rid)
+            slow.remove(rid)
+            r = req(nid := nid + 1)
+            live.append((r.request_id, c))
+            fast.submit(r, c)
+            slow.submit(_dc.replace(r), c)
+    assert fast.sesm.session_rebuilds == 0
+    assert fast.sesm.semantic_updates >= 1
+    # the drift-scattered buffers solve identically through both inners
+    dev = fast.sesm._serve_session.dev
+    jn = solve_device_batch(dev)
+    pal = solve_device_batch(dev, inner="pallas")
+    assert (jn["admitted"] == pal["admitted"]).all()
+    adm = jn["admitted"]
+    assert (jn["alloc_idx"][adm] == pal["alloc_idx"][adm]).all()
+
+
+@pytest.mark.slow
+@given(st.integers(0, 2**32 - 1),
+       st.lists(st.integers(0, 2), min_size=4, max_size=8))
+@settings(max_examples=8, deadline=None)
+def test_preemption_never_evicts_equal_or_higher_tier(seed, tiers):
+    """Under random tier mixes and saturating load, every preempted victim
+    has a tier STRICTLY greater (lower priority) than some offered request:
+    min victim tier > min submitted tier, and tier-minimal tasks are never
+    preempted."""
+    from repro.core import scenarios as sc, CouplingSpec
+    from repro.serving import MultiCellEngine, SliceRequest
+
+    rng = np.random.default_rng(seed)
+    pools = sc.multi_cell_pools(3, seed=2)
+    spec = CouplingSpec(np.array([0.6]), np.ones((3, 1), bool))
+    eng = MultiCellEngine(pools, coupling=spec, max_retries=2, preempt=True)
+
+    def req(tier):
+        return SliceRequest(
+            "object-recognition", "yolox", "cityscapes_flat",
+            max_latency_s=0.7,
+            min_accuracy=float(rng.choice([0.30, 0.35, 0.40])),
+            jobs_per_sec=float(rng.choice([5.0, 6.0])), tier=int(tier))
+
+    for i, t in enumerate(tiers):
+        eng.submit(req(t), i % 3)
+        if i % 2 == 1:
+            eng.reslice()
+    eng.reslice()
+    by_tier = eng.metrics()["totals"]["preemptions_by_tier"]
+    if by_tier:
+        assert min(by_tier) > min(tiers), \
+            "a victim must be strictly lower priority than some candidate"

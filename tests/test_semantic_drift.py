@@ -1,0 +1,284 @@
+"""Time-varying semantics and tier-aware preemption, end-to-end.
+
+Semantic drift (the accuracy curves moving under a live serving loop) must
+ride the delta fast path: the SDLA's ``SemanticModel`` bumps its version in
+place, the next re-slice rescatters only the rows of tasks whose effective
+app changed (``sesm.semantic_updates`` / ``DeviceStack.semantic_rows``), the
+device session never rebuilds, and the decisions bit-match the numpy coupled
+oracle built under the SAME drifted model. Handover pins are recorded
+VALUES: they do not move when the curves drift under them.
+
+Preemption is the complementary tier policy: the solver stays SLA-blind, and
+when a re-slice rejects a candidate while a strictly lower-priority task
+keeps running in its coupling group, the engine evicts the victim post-solve
+and re-solves the freed rows as a delta — lifting high-tier admission
+without teaching the solver about tiers.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (CouplingSpec, SemanticModel, scenarios, semantics,
+                        solve_coupled_ref)
+from repro.core.events import SemanticShift
+from repro.serving import MultiCellEngine, SliceRequest, sla_scorecard
+
+
+def _req(app, acc=0.30, lat=0.7, fps=5.0, tier=0):
+    return SliceRequest("object-recognition", "yolox", app,
+                        max_latency_s=lat, min_accuracy=acc,
+                        jobs_per_sec=fps, tier=tier)
+
+
+def _engine(budget=1.0, n_cells=3, **kw):
+    pools = scenarios.multi_cell_pools(n_cells, seed=2)
+    spec = CouplingSpec(np.array([budget]), np.ones((n_cells, 1), bool),
+                        names=("backhaul",))
+    eng = MultiCellEngine(pools, coupling=spec, **kw)
+    return eng, pools, spec
+
+
+def _submit_mix(eng, cell):
+    eng.submit(_req("coco_bags", acc=0.35, fps=8.0), cell)
+    eng.submit(_req("coco_animals", acc=0.50, fps=6.0), cell)
+    eng.submit(_req("cityscapes_flat", acc=0.35, fps=5.0), cell)
+
+
+def _assert_oracle(eng, pools, spec):
+    """One engine re-slice == solve_coupled_ref on instances built by the
+    engine's OWN SDLA — i.e. under the currently drifted model."""
+    sets = eng.gather()
+    insts = [dataclasses.replace(
+        eng.sdla.build_instance(rs, pools[i]), coupling=spec.row(i))
+        for i, rs in enumerate(sets)]
+    refs = solve_coupled_ref(insts)
+    decisions = eng.reslice()
+    for ds, ref in zip(decisions, refs):
+        assert [d.admitted for d in ds] == [bool(a) for a in ref.admitted]
+    return decisions
+
+
+# ---------------------------------------------------------- drift fast path
+
+def test_drift_stays_on_fast_path_and_matches_oracle():
+    """Curve drift between ticks: zero session rebuilds, dirty-row-only
+    semantic scatters, decisions oracle-pinned under the shifted model."""
+    eng, pools, spec = _engine()
+    for c in range(3):
+        _submit_mix(eng, c)
+    eng.reslice()
+    eng.reslice()
+    assert eng.sesm.fresh_stacks == 1
+    for scale in (0.9, 0.75, 1.0):
+        eng.shift_semantics(scale=scale)
+        _assert_oracle(eng, pools, spec)
+    assert eng.sesm.session_rebuilds == 0, "drift must never rebuild"
+    assert eng.sesm.fresh_stacks == 1, "drift must never restack"
+    assert eng.sesm.semantic_updates >= 3
+    assert eng.metrics()["totals"]["semantic_updates"] >= 3
+
+
+def test_drift_changes_admissions():
+    """Squeezing the asymptotes far enough must change the admitted set —
+    the drift actually reaches the solver, not just a counter."""
+    eng, pools, spec = _engine(budget=2.0)
+    for c in range(3):
+        _submit_mix(eng, c)
+    before = sum(d.admitted for ds in eng.reslice() for d in ds)
+    assert before > 0
+    eng.shift_semantics(scale=0.45)              # curves collapse
+    after = sum(d.admitted for ds in _assert_oracle(eng, pools, spec)
+                for d in ds)
+    assert after < before
+    eng.shift_semantics(scale=1.0)               # recalibrated model ships
+    restored = sum(d.admitted for ds in _assert_oracle(eng, pools, spec)
+                   for d in ds)
+    assert restored == before
+    assert eng.sesm.session_rebuilds == 0
+
+
+def test_drift_scatters_only_affected_apps():
+    """A shift scoped to one app must not rescatter rows of other apps."""
+    eng, pools, spec = _engine()
+    eng.submit(_req("cityscapes_flat", acc=0.35), 0)
+    eng.submit(_req("coco_person", acc=0.25), 1)
+    eng.reslice()
+    dev = eng.sesm._serve_session.dev
+    rows0 = dev.semantic_rows
+    target = semantics.APP_INDEX["coco_person"]
+    eng.shift_semantics([target], scale=0.8)
+    eng.reslice()
+    assert dev.semantic_rows - rows0 == 1, \
+        "only the coco_person row may rescatter"
+    untouched = semantics.APP_INDEX["coco_bags"]   # nobody runs this app
+    eng.shift_semantics([untouched], scale=0.7)
+    rows1 = dev.semantic_rows
+    eng.reslice()
+    assert dev.semantic_rows == rows1, "no live task changed: no scatter"
+    assert eng.sesm.session_rebuilds == 0
+
+
+def test_handover_pin_survives_drift():
+    """A pin is the accuracy recorded under the curves the stream was
+    encoded under — later drift must not move it."""
+    eng, pools, spec = _engine(budget=4.0)
+    req = _req("cityscapes_flat", acc=0.35)
+    eng.submit(req, 0)
+    eng.reslice()
+    assert req.request_id in eng.cells[0].tasks
+    pin = eng.handover(req.request_id, 0, 1)
+    eng.reslice()
+    assert eng.cells[1].pin_of(req.request_id) == pytest.approx(pin)
+    eng.shift_semantics(scale=0.6)
+    eng.reslice()
+    assert eng.cells[1].pin_of(req.request_id) == pytest.approx(pin), \
+        "recorded pins are values, not curve lookups"
+
+
+def test_swapping_model_object_rebuilds_session():
+    """Drift = same model object, bumped version. A DIFFERENT model object
+    is a calibration swap and must rebuild the session."""
+    eng, pools, spec = _engine()
+    _submit_mix(eng, 0)
+    eng.reslice()
+    assert eng.sesm.session_rebuilds == 0
+    eng.sdla.semantics = SemanticModel.paper_default()
+    eng.reslice()
+    assert eng.sesm.session_rebuilds == 1
+
+
+# ------------------------------------------------------- event / scheduling
+
+def test_semantic_shift_event_ingest():
+    eng, pools, spec = _engine()
+    _submit_mix(eng, 0)
+    v0 = eng.sdla.semantics.version
+    s = eng.ingest([SemanticShift(scale=0.8)])
+    assert s["semantic_shifts"] == 1
+    assert eng.sdla.semantics.version == v0 + 1
+    assert eng.sdla.semantics.params[:, 0] == pytest.approx(
+        0.8 * semantics.DEFAULT_MODEL.params[:, 0])
+    eng.ingest([SemanticShift(scale=1.0)])       # nominal-anchored: restores
+    assert eng.sdla.semantics.params == pytest.approx(
+        semantics.DEFAULT_MODEL.params)
+
+
+def test_semantic_drift_schedule_staircase_and_composition():
+    sched = scenarios.semantic_drift_schedule(10, apps=[1, 2], start=3,
+                                              n_steps=3, floor=0.7)
+    assert sorted(sched) == [3, 4, 5, 6]
+    scales = [sched[s][0].scale for s in (3, 4, 5, 6)]
+    assert scales == pytest.approx([0.9, 0.8, 0.7, 1.0])
+    assert all(sched[s][0].app_idx == (1, 2) for s in sched)
+    # composes with other fault schedules without losing events
+    outage = scenarios.outage_schedule([(0, 4, 6)])
+    both = scenarios.compose_faults(sched, outage)
+    assert len(both[4]) == 2
+    # truncation: steps past the horizon (and their recovery) are dropped
+    short = scenarios.semantic_drift_schedule(2, n_steps=3, floor=0.7)
+    assert sorted(short) == [0, 1]
+
+
+def test_drift_schedule_drives_closed_loop():
+    from repro.serving import drive_closed_loop
+    eng, pools, spec = _engine(budget=2.0)
+    sched = scenarios.semantic_drift_schedule(6, start=2, n_steps=2,
+                                              floor=0.6)
+    records = drive_closed_loop(eng, 6, arrival_rate=2.0, seed=5,
+                                faults=sched)
+    assert len(records) == 6 * 3
+    assert eng.sdla.semantics.version == 3       # 2 squeezes + recovery
+    assert eng.sdla.semantics.params == pytest.approx(
+        semantics.DEFAULT_MODEL.params)
+    card = sla_scorecard(eng, records)
+    # (churn may legitimately rebuild on a pow2-bucket overflow — the
+    # zero-rebuild drift guarantee is pinned by the fixed-population tests
+    # above; here we assert the scorecard carries the drift attribution)
+    assert "semantic_updates" in card["run"]
+    assert "session_rebuilds" in card["run"]
+
+
+# ------------------------------------------------------ tier-aware preempt
+
+def _saturated(preempt):
+    """Three cheap tier-1 tasks saturate the shared backhaul; then a tier-0
+    candidate arrives that round 1 must reject (tier-blind solve)."""
+    eng, pools, spec = _engine(budget=0.6, max_retries=2, preempt=preempt)
+    lows = [_req("cityscapes_flat", acc=0.35, fps=5.0, tier=1)
+            for _ in range(3)]
+    for i, r in enumerate(lows):
+        eng.submit(r, i)
+    eng.reslice()
+    hi = _req("cityscapes_flat", acc=0.35, fps=6.0, tier=0)
+    eng.submit(hi, 0)
+    eng.reslice()
+    return eng, lows, hi
+
+
+def test_preemption_lifts_high_tier_admission():
+    base, _, hi_b = _saturated(preempt=False)
+    assert all(hi_b.request_id not in c.tasks for c in base.cells), \
+        "scenario must saturate: tier-0 rejected without preemption"
+    assert base.metrics()["totals"]["preemptions"] == 0
+
+    eng, lows, hi = _saturated(preempt=True)
+    t = eng.metrics()["totals"]
+    assert any(hi.request_id in c.tasks for c in eng.cells), \
+        "preemption must admit the tier-0 candidate"
+    assert t["preemptions"] == 1
+    assert t["preempt_rescued"] == 1
+    assert t["preemptions_by_tier"] == {1: 1}    # victim side: tier 1 only
+    assert t["preempt_rescued_by_tier"] == {0: 1}
+    # the tier-0 admission rate strictly improves over the baseline
+    cb = sla_scorecard(base)["tiers"][0]["admission_rate"]
+    cp = sla_scorecard(eng)["tiers"][0]["admission_rate"]
+    assert cp > cb
+    # the preemption re-solve itself is a delta: it adds no rebuilds over
+    # the identical scenario without preemption (whose only rebuild is the
+    # tier-0 arrival growing the slot count past the pow2 bucket)
+    assert eng.sesm.session_rebuilds == base.sesm.session_rebuilds
+
+
+def test_preemption_victim_requeues_and_reoffers():
+    eng, lows, hi = _saturated(preempt=True)
+    victims = [r for r in lows
+               if r.request_id not in eng.cells[lows.index(r) % 3].tasks]
+    assert len(victims) == 1
+    vid = victims[0].request_id
+    cell = eng.cells[eng.locate(vid)]
+    assert vid in cell.queued_ids(), "a preempted task re-queues"
+    assert cell.retries_left(vid) == 1, "preemption consumes one retry"
+    rebuilds = eng.sesm.session_rebuilds
+    eng.reslice()                                # victim re-offers next tick
+    assert eng.locate(vid) is not None
+    assert eng.sesm.session_rebuilds == rebuilds, \
+        "re-offering a hidden victim row is a dirty-row delta"
+
+
+def test_preemption_never_fires_without_lower_tier_victim():
+    """All running tasks at the candidate's own tier: nothing is evicted —
+    preemption is strictly >, never equal-or-higher priority."""
+    eng, pools, spec = _engine(budget=0.6, max_retries=2, preempt=True)
+    for i in range(3):
+        eng.submit(_req("cityscapes_flat", acc=0.35, fps=5.0, tier=0), i)
+    eng.reslice()
+    eng.submit(_req("cityscapes_flat", acc=0.35, fps=6.0, tier=0), 0)
+    eng.reslice()
+    t = eng.metrics()["totals"]
+    assert t["preemptions"] == 0
+    # and a LOWER-priority candidate never preempts higher-priority tasks
+    eng.submit(_req("cityscapes_flat", acc=0.35, fps=6.0, tier=2), 1)
+    eng.reslice()
+    assert eng.metrics()["totals"]["preemptions"] == 0
+
+
+def test_preemption_disabled_by_default():
+    eng, pools, spec = _engine()
+    assert eng.preempt is False
+    _submit_mix(eng, 0)
+    eng.reslice()
+    assert eng.metrics()["totals"]["preemptions"] == 0
+    card = sla_scorecard(eng)
+    assert card["run"]["preemptions"] == 0
+    assert card["run"]["preempt_rescued"] == 0
