@@ -13,7 +13,12 @@ rows (e.g. ``sweep/acceptance``) are reported but never gated. Rows flagged
 ``interpret: true`` (Pallas kernels timed under the interpreter on non-TPU
 backends — they measure the interpreter, not the kernel) are reported with
 status ``interp`` but excluded from the gate: interpreter timing noise says
-nothing about the code under test. Run noise on shared CI runners is absorbed
+nothing about the code under test. Likewise sharded rows labelled with a
+``devices`` count are excluded (status ``devices``) when either side ran
+under fake host devices (``fake_devices: true`` — XLA's forced platform
+count times the partitioner on one CPU) or the two sides ran on DIFFERENT
+device counts: a 1-device timing and an 8-device timing are not the same
+experiment. Run noise on shared CI runners is absorbed
 by the generous tolerance plus the per-instance normalization
 (per_instance_us), which is a median over iterations.
 
@@ -66,6 +71,15 @@ def compare(fresh: dict[str, dict], base: dict[str, dict],
             # kernel: report the delta, never gate on it
             deltas.append(dict(name=name, base=b_us, fresh=f_us,
                                delta=f_us / b_us - 1.0, status="interp"))
+            continue
+        if ((f_rec or {}).get("fake_devices")
+                or (b_rec or {}).get("fake_devices")
+                or (f_rec or {}).get("devices") != (b_rec or {}).get("devices")):
+            # sharded rows are only comparable at the SAME device count, and
+            # fake-device runs (XLA's forced host platform count) time the
+            # partitioner on one CPU: report the delta, never gate on it
+            deltas.append(dict(name=name, base=b_us, fresh=f_us,
+                               delta=f_us / b_us - 1.0, status="devices"))
             continue
         ratio = f_us / b_us - 1.0
         gated = ratio > tolerance

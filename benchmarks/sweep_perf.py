@@ -20,6 +20,13 @@ Poisson traces and multi-cell traces through
   * the fused-kernel path — ``solve_greedy_batch(inner="pallas")``, the whole
     admission round in one Pallas kernel (interpret mode off-TPU, so on CPU
     this row measures the interpreter, not the hardware win),
+  * the metro serving hot path — one 256-cell mesh-resident re-slice tick
+    (``serving/metro_reslice_256cell``): the engine's session is a
+    ``ShardedStack``, each steady tick is one ``shard_map`` program with
+    zero restacks / rebuilds / replans / dirty rows / recompiles (asserted)
+    and must beat the full-rebuild tick >= 3x; the row carries a
+    ``devices`` label (and a ``fake_devices`` flag) so the regression gate
+    never compares timings across different device counts,
   * the serving hot path — one coupled 4-cell ``MultiCellEngine.reslice``
     tick (slot sync → ONE fused device program over the device-resident
     session → apply); the ``reslice_fastpath`` row additionally ASSERTS the
@@ -223,6 +230,105 @@ def _bench_metro():
         devices=devices,
         groups_per_shard=round(st.num_groups / devices, 1),
         tasks=int(sum(i.num_tasks for i in insts)))
+
+
+def _bench_metro_reslice():
+    """Metro serving hot path: one 256-cell mesh-resident re-slice tick.
+
+    The metro engine (``MultiCellEngine(mesh=...)``) holds the serving
+    session as a ``ShardedStack``: the shard plan is computed once at build,
+    every subsequent tick is dirty-slot delta scatters (none in steady
+    state) plus ONE ``shard_map`` program over the "cells" mesh. The
+    steady-state contract is asserted before timing — one fresh stack for
+    the whole run, zero session rebuilds, one shard plan, zero dirty rows
+    and zero recompiles of the fused sharded program after tick 0 — and the
+    warm tick's admissions are bit-matched against the coupled numpy oracle
+    on sampled backhaul domains. The legacy full-rebuild tick
+    (``reslice_rebuild``) is timed for comparison and the fast path must
+    beat it >= 3x.
+
+    On the 1-device CI runner the mesh holds one device, so the row times
+    the sharded session's single-shard program — the same code path, which
+    is the point: the contract (and the ``devices`` label the regression
+    gate keys on) stays honest whatever the device count.
+    """
+    import os
+
+    from repro.core.greedy import _sharded_serve_fn
+    from repro.core.types import CouplingSpec
+    from repro.launch.mesh import make_cells_mesh
+    from repro.serving import MultiCellEngine, SliceRequest
+
+    n_cells, n_domains = 256, 32
+    pools = scenarios.multi_cell_pools(n_cells, seed=1)
+    domain = (np.arange(n_cells) * n_domains) // n_cells
+    inc = np.zeros((n_cells, n_domains), bool)
+    inc[np.arange(n_cells), domain] = True
+    dom_size = np.bincount(domain, minlength=n_domains)
+    spec = CouplingSpec(dom_size * 1.2, inc)
+    mesh = make_cells_mesh()
+    eng = MultiCellEngine(pools, coupling=spec, mesh=mesh, max_retries=3)
+    mix = [("coco_bags", 0.35, 8.0), ("coco_animals", 0.50, 6.0),
+           ("cityscapes_flat", 0.35, 5.0), ("coco_person", 0.20, 5.0)]
+    for c in range(n_cells):
+        for app, acc, fps in mix:
+            eng.submit(SliceRequest("object-recognition", "yolox", app,
+                                    max_latency_s=0.7, min_accuracy=acc,
+                                    jobs_per_sec=fps), c)
+
+    # warm tick builds the sharded session; admissions oracle-checked on
+    # sampled domains (domains never share links, so each is closed)
+    decs = eng.reslice()
+    sets = eng.gather()
+    insts = [dataclasses.replace(eng.sdla.build_instance(rs, pools[i]),
+                                 coupling=spec.row(i))
+             for i, rs in enumerate(sets)]
+    for d in (0, 13, 31):
+        idxs = np.flatnonzero(domain == d)
+        refs = solve_coupled_ref([insts[i] for i in idxs])
+        for i, ref in zip(idxs, refs):
+            assert [x.admitted for x in decs[i]] == \
+                [bool(a) for a in ref.admitted]
+    for _ in range(eng.cells[0].max_retries + 1):   # drain the retry queues
+        eng.reslice()
+
+    # the mesh-resident contract, asserted: after tick 0 a steady metro loop
+    # re-plans nothing, restacks nothing, scatters zero rows and never
+    # retraces the fused sharded program
+    ticks = 8
+    rows_before = eng.sesm.delta_rows
+    compiles_before = _sharded_serve_fn(mesh, "cells", True,
+                                        eng.sesm.inner)._cache_size()
+    us = time_fn(lambda: [eng.reslice() for _ in range(ticks)], iters=3)
+    assert eng.sesm.fresh_stacks == 1, "steady metro loop must not rebuild"
+    assert eng.sesm.session_rebuilds == 0
+    assert eng.sesm.shard_replans == 1, "the shard plan must survive ticks"
+    assert eng.sesm.delta_rows == rows_before, \
+        "steady metro loop must scatter zero dirty rows"
+    recompiles = _sharded_serve_fn(mesh, "cells", True,
+                                   eng.sesm.inner)._cache_size() \
+        - compiles_before
+    assert recompiles == 0, "steady metro loop must not retrace"
+    fresh = eng.sesm.fresh_stacks            # before the rebuild timing below
+
+    us_tick = us / ticks
+    us_rebuild = time_fn(lambda: eng.reslice_rebuild(), iters=3)
+    assert us_rebuild >= 3.0 * us_tick, \
+        f"metro fast path must beat the rebuild tick >= 3x " \
+        f"(got {us_rebuild / us_tick:.1f}x)"
+    devices = int(mesh.shape["cells"])
+    row("serving/metro_reslice_256cell", us,
+        per_instance_us=round(us_tick, 1), cells=n_cells,
+        links=spec.num_links, ticks_per_sample=ticks,
+        fresh_stacks=fresh,
+        session_rebuilds=eng.sesm.session_rebuilds,
+        shard_replans=eng.sesm.shard_replans,
+        dirty_rows_per_tick=0, recompiles=recompiles,
+        devices=devices,
+        fake_devices="host_platform_device_count"
+        in os.environ.get("XLA_FLAGS", ""),
+        rebuild_per_tick_us=round(us_rebuild, 1),
+        speedup_vs_rebuild=round(us_rebuild / us_tick, 1))
 
 
 def _bench_engine_tick():
@@ -584,6 +690,7 @@ def main():
     mixed_speedup = _bench_mixed_grid()
     _bench_coupled()
     _bench_metro()
+    _bench_metro_reslice()
     _bench_engine_tick()
     _bench_degraded_tick()
     _bench_drift_tick()

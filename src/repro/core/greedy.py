@@ -25,15 +25,17 @@ import jax
 import jax.numpy as jnp
 
 from . import semantics
-from .sfesp import (DeviceStack, device_stack, device_stack_sharded,
-                    lexicographic_cost, next_pow2, objective_value,
-                    stack_instances)
+from .sfesp import (DeviceStack, ShardedStack, device_stack,
+                    device_stack_sharded, lexicographic_cost, next_pow2,
+                    objective_value, stack_instances)
 from .types import ProblemInstance, Solution, StackedInstances
 
 __all__ = ["primal_gradient", "solve_greedy", "solve_greedy_jax",
            "solve_greedy_batch", "solve_greedy_sharded", "solve_greedy_many",
            "solve", "solve_device_batch", "dispatch_device_batch",
-           "unpack_device_batch", "lexicographic_cost"]
+           "unpack_device_batch", "solve_sharded_batch",
+           "dispatch_sharded_batch", "unpack_sharded_batch",
+           "clear_sharded_caches", "lexicographic_cost"]
 
 _EPS_DEN = 1e-9
 
@@ -689,7 +691,10 @@ def _to_input_order(stacked: StackedInstances, sols: list) -> list:
     return out
 
 
-@functools.lru_cache(maxsize=None)
+# Bounded: the cache key holds a live Mesh (and its device buffers' metadata);
+# test suites that build many meshes must not accumulate them forever. The
+# fake-device fixtures call clear_sharded_caches() on teardown.
+@functools.lru_cache(maxsize=16)
 def _sharded_solve_fn(mesh, axis: str, flexible: bool, inner: str):
     """Jitted shard_map entry of the metro solve, cached per (mesh, mode).
 
@@ -718,6 +723,116 @@ def _sharded_solve_fn(mesh, axis: str, flexible: bool, inner: str):
                   cells),
         out_specs=(cells, cells))
     return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=16)
+def _sharded_serve_fn(mesh, axis: str, flexible: bool, inner: str):
+    """Jitted shard_map entry of the metro SERVING tick: coupled solve plus
+    packed decision extraction fused into each shard's program.
+
+    The sharded sibling of :func:`_serve_batch_coupled`: every shard solves
+    its block of coupling groups and packs its own rows' decisions
+    (``_extract_packed``), so the host reads back one small
+    ``(B', WT+Tmax)`` buffer instead of the full solution tables. The
+    per-shard link loads come back block-stacked — each link belongs to
+    exactly one group, hence one shard, so summing the blocks reconstructs
+    the global (L,) usage without a collective in the loop.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.compat import shard_map_nocheck
+
+    def body(lat_ok, grid, price, cap, alive0, cost, load, link_cap,
+             incidence, group):
+        admitted, alloc_idx, occupied, used = _batch_solve_coupled(
+            lat_ok, grid, price, cap, alive0, cost, load, link_cap,
+            incidence, group, flexible, inner)
+        packed, residual = _extract_packed(admitted, alloc_idx, occupied, cap)
+        return packed, residual, used
+
+    cells, rep = P(axis), P()
+    fn = shard_map_nocheck(
+        body, mesh=mesh,
+        in_specs=(cells, rep, cells, cells, cells, rep, cells, rep, cells,
+                  cells),
+        out_specs=(cells, cells, cells))
+    return jax.jit(fn)
+
+
+def clear_sharded_caches() -> None:
+    """Drop the memoized sharded shard_map programs.
+
+    Test hygiene: :func:`_sharded_solve_fn` / :func:`_sharded_serve_fn` hold
+    ``Mesh`` objects as lru_cache keys; suites that build many meshes call
+    this (via the ``run_with_fake_devices`` fixture teardown) so retired
+    meshes and their compiled programs are actually collectable.
+    """
+    _sharded_solve_fn.cache_clear()
+    _sharded_serve_fn.cache_clear()
+
+
+def dispatch_sharded_batch(shd: ShardedStack, *, flexible: bool = True,
+                           inner: str = "jnp") -> tuple:
+    """LAUNCH the fused SHARDED serve without awaiting its result.
+
+    The mesh-resident sibling of :func:`dispatch_device_batch`: reads the
+    :meth:`~repro.core.sfesp.ShardedStack.inputs` double-buffer snapshot,
+    launches one ``shard_map`` program (solve + packed extraction per shard),
+    and returns a handle for :func:`unpack_sharded_batch`. The row map is
+    captured at dispatch so a session replan cannot skew an in-flight tick.
+    """
+    (lat_ok, grid, price, cap, alive0, cost,
+     link_load, link_cap, incidence, group) = shd.inputs()
+    packed, residual, used = _sharded_serve_fn(
+        shd.mesh, shd.axis, flexible, inner)(
+        lat_ok, grid, price, cap, alive0, cost,
+        link_load, link_cap, incidence, group)
+    return (packed, residual, used, shd.batch_size, shd.max_tasks,
+            shd.row_of, shd.num_shards, shd.coupled)
+
+
+def unpack_sharded_batch(dispatched: tuple) -> dict:
+    """BLOCK on a :func:`dispatch_sharded_batch` handle and unpack it into
+    the ``solve_device_batch`` result dict, in INPUT (cell) order.
+
+    The packed buffer arrives in the padded shard layout; ``row_of`` gathers
+    the live rows back so callers (the serving session's slot unpacker, the
+    twin-engine tests) never see the plan. Inert padding rows never admit —
+    their decision rows are dropped.
+    """
+    (packed, residual, used, B, tmax, row_of, n_shards, coupled) = dispatched
+    packed = np.asarray(packed)
+    residual_p = np.asarray(residual)
+    wt = -(-tmax // 32)
+    bits = packed[:, :wt].astype(np.uint32)
+    idx = np.arange(tmax)
+    admitted_p = (bits[:, idx // 32] >> (idx % 32).astype(np.uint32)) & 1 > 0
+    alloc_p = packed[:, wt:].astype(np.int64)
+    live = row_of >= 0
+    admitted = np.zeros((B, tmax), bool)
+    alloc_idx = np.full((B, tmax), -1, np.int64)
+    out_residual = np.zeros((B, residual_p.shape[1]))
+    admitted[row_of[live]] = admitted_p[live]
+    alloc_idx[row_of[live]] = alloc_p[live]
+    out_residual[row_of[live]] = residual_p[live]
+    # per-shard (L,) blocks; disjoint link ownership makes the sum exact
+    used = np.asarray(used).reshape(n_shards, -1).sum(axis=0)
+    return {
+        "admitted": admitted,
+        "alloc_idx": alloc_idx,
+        "residual": out_residual,
+        "link_used": used if coupled else np.zeros(0),
+    }
+
+
+def solve_sharded_batch(shd: ShardedStack, *, flexible: bool = True,
+                        inner: str = "jnp") -> dict:
+    """Solve a mesh-resident stack via the fused sharded entry points —
+    :func:`solve_device_batch` for a :class:`~repro.core.sfesp.ShardedStack`.
+    Decisions are identical to the single-device fused serve on the same
+    rows (asserted in tests)."""
+    return unpack_sharded_batch(dispatch_sharded_batch(
+        shd, flexible=flexible, inner=inner))
 
 
 def solve_greedy_sharded(insts, *, mesh=None, semantic: bool = True,

@@ -360,8 +360,8 @@ def multi_cell_trace(n_cells: int, horizon: int, *, m: int = 2,
 
 
 def metro_diurnal_trace(n_cells: int = 256, *, n_domains: int = 32,
-                        hours=None, m: int = 2, acc: str = "med",
-                        lat: str = "high", seed: int = 0,
+                        hours=None, days: int = 1, m: int = 2,
+                        acc: str = "med", lat: str = "high", seed: int = 0,
                         base_rate: float = 2.0, peak_rate: float = 8.0,
                         backhaul_per_cell: float = 1.2,
                         ) -> tuple[list[ProblemInstance], list[dict]]:
@@ -384,13 +384,16 @@ def metro_diurnal_trace(n_cells: int = 256, *, n_domains: int = 32,
     (business districts peak around noon, residential cells toward the
     evening), so domains hit their backhaul ceilings at different hours.
 
-    ``hours`` defaults to the full 24; pass e.g. ``(13,)`` for one
-    near-peak snapshot (the ``sweep/metro_256cell`` benchmark). Returns
-    hour-major instances (cells adjacent within an hour — group-major up to
-    domain order) and matching
-    ``{"step", "hour", "cell", "domain", "link"}`` metadata.
+    ``hours`` defaults to the full horizon — ``range(24 * days)`` — so
+    ``days=2`` yields a 48 h trace whose diurnal curve repeats (the sinusoid
+    wraps hours mod 24 internally); pass e.g. ``(13,)`` for one near-peak
+    snapshot (the ``sweep/metro_256cell`` benchmark). Hours past 23 are kept
+    verbatim in the metadata so multi-day steps stay distinguishable, and
+    every step still owns its own link block. Returns hour-major instances
+    (cells adjacent within an hour — group-major up to domain order) and
+    matching ``{"step", "hour", "cell", "domain", "link"}`` metadata.
     """
-    hours = list(range(24)) if hours is None else [int(h) % 24 for h in hours]
+    hours = list(range(24 * days)) if hours is None else [int(h) for h in hours]
     if n_cells < n_domains:
         raise ValueError(f"n_cells={n_cells} < n_domains={n_domains}")
     pools = multi_cell_pools(n_cells, m=m, seed=seed)

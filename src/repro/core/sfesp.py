@@ -47,7 +47,8 @@ __all__ = ["build_instance", "check_solution", "objective_value",
            "group_major_order", "group_offsets_of",
            "TaskRows", "task_feasibility_rows",
            "DeviceStack", "device_stack", "empty_device_stack",
-           "ShardedStack", "shard_plan", "device_stack_sharded"]
+           "ShardedStack", "shard_plan", "device_stack_sharded",
+           "empty_sharded_stack"]
 
 
 def next_pow2(n: int) -> int:
@@ -775,6 +776,13 @@ class ShardedStack:
     batch_size: int                  # real B
     shard_rows: int                  # rows per shard (B' / num_shards)
     groups_per_shard: np.ndarray     # (num_shards,) assigned group counts
+    padded_of: np.ndarray            # (B,) padded row per stacked row
+    coupled: bool = True             # real links (vs the dummy inf link)
+    scatter_calls: int = 0
+    rows_scattered: int = 0
+    budget_updates: int = 0
+    semantic_updates: int = 0        # update_semantics calls (drift traffic)
+    semantic_rows: int = 0           # rows re-scattered because curves moved
 
     @property
     def num_shards(self) -> int:
@@ -783,6 +791,102 @@ class ShardedStack:
     @property
     def max_tasks(self) -> int:
         return self.lat_ok.shape[1]
+
+    def inputs(self) -> tuple:
+        """Capture the solver's input bindings — the DOUBLE-BUFFER hand-off.
+
+        Same contract as :meth:`DeviceStack.inputs`: the donated scatters of
+        :meth:`update_rows` / :meth:`update_link_budgets` REBIND the mutable
+        tables on ``self``, so a sharded solve dispatched from an earlier
+        snapshot keeps reading the old (back) buffers while the serving loop
+        scatters tick N+1's deltas into the new front buffers.
+        """
+        return (self.lat_ok, self.grid, self.price, self.capacity,
+                self.alive0, self.cost, self.link_load, self.link_cap,
+                self.incidence, self.group)
+
+    def update_rows(self, b_idx, t_idx, lat_ok_rows, alive_rows,
+                    load_rows=None):
+        """Delta-scatter changed task rows into the SHARDED device buffers.
+
+        Identical surface to :meth:`DeviceStack.update_rows` — ``b_idx``
+        addresses STACKED (input-order) rows; the scatter routes each one to
+        its (shard, local_row) slot through ``padded_of``, the inverse of the
+        group-major ``shard_plan`` placement, so callers never see the padded
+        layout. Same pow2 bucketing with ``mode="drop"`` padding, same
+        bucket-overflow / off-range ValueErrors, same donated jitted program
+        (compiled once more for the sharded layout and reused).
+        """
+        b_idx = np.asarray(b_idx, np.int64)
+        t_idx = np.asarray(t_idx, np.int32)
+        d = len(t_idx)
+        if d == 0:
+            return
+        if t_idx.max(initial=0) >= self.max_tasks:
+            raise ValueError(
+                f"slot {int(t_idx.max())} does not fit the device bucket "
+                f"Tmax={self.max_tasks}; rebuild the stack at a larger "
+                "bucket")
+        if b_idx.max(initial=0) >= self.batch_size or \
+                b_idx.min(initial=0) < 0:
+            raise ValueError(
+                f"cell index {int(b_idx.max())} outside the stacked batch "
+                f"of {self.batch_size} rows")
+        # stacked row -> padded (shard-blocked) row, then the plain scatter
+        p_idx = self.padded_of[b_idx].astype(np.int32)
+        if load_rows is None:
+            load_rows = np.zeros(d)
+        bucket = next_pow2(d)
+        pad = bucket - d
+        if pad:
+            p_idx = np.concatenate([p_idx, np.zeros(pad, np.int32)])
+            t_idx = np.concatenate(
+                [t_idx, np.full(pad, self.max_tasks, np.int32)])
+            lat_ok_rows = np.concatenate(
+                [lat_ok_rows, np.zeros((pad,) + lat_ok_rows.shape[1:], bool)])
+            alive_rows = np.concatenate([alive_rows, np.zeros(pad, bool)])
+            load_rows = np.concatenate([load_rows, np.zeros(pad)])
+        self.lat_ok, self.alive0, self.link_load = _scatter_rows(
+            self.lat_ok, self.alive0, self.link_load,
+            jnp.asarray(p_idx), jnp.asarray(t_idx),
+            jnp.asarray(np.asarray(lat_ok_rows, bool)),
+            jnp.asarray(np.asarray(alive_rows, bool)),
+            jnp.asarray(np.asarray(load_rows, np.float64)))
+        self.scatter_calls += 1
+        self.rows_scattered += d
+
+    def update_semantics(self, b_idx, t_idx, lat_ok_rows, alive_rows,
+                         load_rows=None):
+        """Drift half of the sharded delta path — same scatter as
+        :meth:`update_rows`, accounted separately (``semantic_updates`` /
+        ``semantic_rows``) exactly like :meth:`DeviceStack.update_semantics`.
+        """
+        d = len(np.asarray(t_idx))
+        if d == 0:
+            return
+        self.update_rows(b_idx, t_idx, lat_ok_rows, alive_rows, load_rows)
+        self.semantic_updates += 1
+        self.semantic_rows += d
+
+    def update_link_budgets(self, budgets):
+        """Refresh the replicated (L,) link budgets in place (donated).
+
+        Budget-only degradation on a mesh-resident session: the link set and
+        the shard plan are invariant (links live wholly inside one shard's
+        groups), only capacities move — one tiny scatter, no replan.
+        """
+        if not self.coupled:
+            raise ValueError(
+                "this stack is uncoupled (no link budgets to update); "
+                "introducing links is a topology change — rebuild")
+        new = np.asarray(budgets, np.float64)
+        if new.shape != self.link_cap.shape:
+            raise ValueError(
+                f"budget shape {new.shape} != device link set "
+                f"{self.link_cap.shape}; changing the link set is a "
+                "topology change — rebuild the stack")
+        self.link_cap = _scatter_budgets(self.link_cap, jnp.asarray(new))
+        self.budget_updates += 1
 
 
 def shard_plan(group_offsets: np.ndarray,
@@ -801,6 +905,40 @@ def shard_plan(group_offsets: np.ndarray,
         shards[s].append(int(g))
         loads[s] += int(sizes[g])
     return shards, loads
+
+
+def _plan_layout(order: np.ndarray, offsets: np.ndarray, n_shards: int
+                 ) -> tuple[np.ndarray, np.ndarray, np.ndarray, int,
+                            np.ndarray]:
+    """Materialize a :func:`shard_plan` as row maps.
+
+    Returns ``(row_of, local_gid, padded_of, rows, groups_per_shard)``:
+    ``row_of`` (B',) maps padded row → stacked row (-1 = inert balance
+    padding), ``local_gid`` (B',) holds shard-LOCAL group ids, ``padded_of``
+    (B,) is the inverse map stacked row → padded row — the address
+    translation the sharded delta scatters route through.
+    """
+    shards, loads = shard_plan(offsets, n_shards)
+    rows = max(1, int(loads.max()))
+    bp = n_shards * rows
+    row_of = np.full(bp, -1, np.int64)
+    local_gid = np.zeros(bp, np.int64)
+    for s, group_list in enumerate(shards):
+        pos = s * rows
+        for g in group_list:
+            span = order[offsets[g]:offsets[g + 1]]
+            n = len(span)
+            row_of[pos:pos + n] = span
+            local_gid[pos:pos + n] = pos - s * rows
+            pos += n
+        # inert padding rows: singleton groups that never admit
+        local_gid[pos:(s + 1) * rows] = \
+            np.arange(pos, (s + 1) * rows) - s * rows
+    live = row_of >= 0
+    padded_of = np.empty(len(order), np.int64)
+    padded_of[row_of[live]] = np.flatnonzero(live)
+    return row_of, local_gid, padded_of, rows, \
+        np.array([len(g) for g in shards], np.int64)
 
 
 def _group_major_view(stacked: StackedInstances
@@ -850,22 +988,8 @@ def device_stack_sharded(stacked: StackedInstances, mesh, *,
 
     order, offsets = _group_major_view(stacked)
     n_shards = int(mesh.shape[axis])
-    shards, loads = shard_plan(offsets, n_shards)
-    rows = max(1, int(loads.max()))
-    bp = n_shards * rows
-
-    row_of = np.full(bp, -1, np.int64)
-    local_gid = np.zeros(bp, np.int64)
-    for s, group_list in enumerate(shards):
-        pos = s * rows
-        for g in group_list:
-            span = order[offsets[g]:offsets[g + 1]]
-            n = len(span)
-            row_of[pos:pos + n] = span
-            local_gid[pos:pos + n] = pos - s * rows
-            pos += n
-        # inert padding rows: singleton groups that never admit
-        local_gid[pos:(s + 1) * rows] = np.arange(pos, (s + 1) * rows) - s * rows
+    row_of, local_gid, padded_of, rows, gps = \
+        _plan_layout(order, offsets, n_shards)
 
     lat_ok, alive0, load = _solver_tables(stacked, semantic)
     coupling = stacked.coupling
@@ -910,10 +1034,91 @@ def device_stack_sharded(stacked: StackedInstances, mesh, *,
         incidence=put(pad(inc, False), ("cells", None)),
         group=put(local_gid, ("cells",)),
         row_of=row_of, batch_size=stacked.batch_size, shard_rows=rows,
-        groups_per_shard=np.array([len(g) for g in shards], np.int64),
+        groups_per_shard=gps, padded_of=padded_of, coupled=coupled,
     )
     cache[key] = shd
     return shd
+
+
+def empty_sharded_stack(grid: np.ndarray, price: np.ndarray,
+                        capacity: np.ndarray, tmax: int, mesh, *,
+                        coupling: CouplingSpec | None = None,
+                        semantic: bool = True,
+                        axis: str | None = None) -> ShardedStack:
+    """A MESH-RESIDENT stack of cleared rows — :func:`empty_device_stack`
+    laid out across the device mesh.
+
+    The metro serving session allocates one per (batch, Tmax-bucket): the
+    coupling groups are LPT-packed over ``mesh.shape[axis]`` blocks once
+    (``shard_plan``), the invariants (grid, cost, prices, capacities,
+    incidence, budgets) are uploaded once into that layout, and live task
+    rows then arrive as perm-addressed delta scatters
+    (:meth:`ShardedStack.update_rows`). A coupling-group membership change
+    invalidates the plan itself — the session layer rebuilds; budget and
+    semantic drift ride the in-place scatters.
+    """
+    if axis is None:
+        axis = mesh.axis_names[0]
+    price = np.asarray(price)
+    capacity = np.asarray(capacity)
+    B = price.shape[0]
+    coupled = coupling is not None and bool(coupling.incidence.any())
+    if coupled:
+        if coupling.num_cells != B:
+            raise ValueError(
+                f"coupling.incidence has {coupling.num_cells} rows for "
+                f"{B} cells")
+        gid = coupling.groups()
+        order = np.argsort(gid, kind="stable").astype(np.int64)
+        gs = gid[order]
+        starts = np.flatnonzero(np.r_[True, gs[1:] != gs[:-1]])
+        offsets = np.r_[starts, B].astype(np.int64)
+        link_cap = np.asarray(coupling.link_capacity, np.float64)
+        inc = np.asarray(coupling.incidence, bool)
+    else:
+        order = np.arange(B, dtype=np.int64)
+        offsets = np.arange(B + 1, dtype=np.int64)
+        # dummy inf link: keeps the coupled core's per-link reductions
+        # well-shaped without constraining anything
+        link_cap = np.array([np.inf])
+        inc = np.zeros((B, 1), bool)
+
+    n_shards = int(mesh.shape[axis])
+    row_of, local_gid, padded_of, rows, gps = \
+        _plan_layout(order, offsets, n_shards)
+    bp = n_shards * rows
+    live = row_of >= 0
+    src = np.clip(row_of, 0, None)
+
+    def pad(table, fill):
+        out = table[src].copy()
+        out[~live] = fill
+        return out
+
+    from repro.distributed.sharding import named_sharding_for
+    rules = {"cells": axis}
+
+    def put(host, logical):
+        arr = jnp.asarray(host)
+        return jax.device_put(
+            arr, named_sharding_for(arr.shape, logical, mesh, rules))
+
+    A = grid.shape[0]
+    return ShardedStack(
+        mesh=mesh, axis=axis,
+        grid=put(grid, (None, None)),
+        cost=put(lexicographic_cost(grid), (None,)),
+        price=put(pad(price, 0.0), ("cells", None)),
+        capacity=put(pad(capacity, 1.0), ("cells", None)),
+        lat_ok=put(np.zeros((bp, tmax, A), bool), ("cells", None, None)),
+        alive0=put(np.zeros((bp, tmax), bool), ("cells", None)),
+        link_load=put(np.zeros((bp, tmax)), ("cells", None)),
+        link_cap=put(link_cap, (None,)),
+        incidence=put(pad(inc, False), ("cells", None)),
+        group=put(local_gid, ("cells",)),
+        row_of=row_of, batch_size=B, shard_rows=rows,
+        groups_per_shard=gps, padded_of=padded_of, coupled=coupled,
+    )
 
 
 def objective_value(inst: ProblemInstance, admitted: np.ndarray,

@@ -19,9 +19,10 @@ from repro.core import (CouplingSpec, ResourcePool, check_solution,
                         restack, semantics, solve, solve_greedy_batch,
                         solve_greedy_sharded, stack_instances)
 from repro.core import latency as lat_mod
-from repro.core.greedy import dispatch_device_batch, unpack_device_batch
-from repro.core.sfesp import (DeviceStack, empty_device_stack,
-                              task_feasibility_rows)
+from repro.core.greedy import (dispatch_device_batch, dispatch_sharded_batch,
+                               unpack_device_batch, unpack_sharded_batch)
+from repro.core.sfesp import (DeviceStack, ShardedStack, empty_device_stack,
+                              empty_sharded_stack, task_feasibility_rows)
 from .request import SliceRequest
 from .sdla import SDLA
 
@@ -51,7 +52,7 @@ class PendingSolve:
 
     @classmethod
     def ready(cls, decisions) -> "PendingSolve":
-        """An already-resolved handle (empty ticks, metro-mode rebuilds)."""
+        """An already-resolved handle (empty ticks, host-blocking solves)."""
         p = cls(None)
         p._result = decisions
         return p
@@ -84,9 +85,19 @@ class _ServeSession:
     (compression, app class, stream rate), and ``pending`` accumulates dirty
     slots until a live solve consumes them — deltas reported on a tick whose
     solve is skipped (transiently all-empty batch) must survive to the next.
+
+    With a metro ``mesh`` configured the device half is a MESH-RESIDENT
+    :class:`~repro.core.sfesp.ShardedStack` instead: the coupling groups are
+    shard-planned once at build, dirty slots scatter through the group-major
+    perm (``ShardedStack.update_rows``), and the tick solves as one
+    ``shard_map`` program. The session-level triggers are identical, plus
+    shard-plan invalidation: a coupling-group membership change (a DIFFERENT
+    coupling object) replans + rebuilds (``sesm.shard_replans``), while
+    budget/semantic drift rides the same in-place scatters as the
+    single-device session.
     """
 
-    dev: DeviceStack
+    dev: DeviceStack | ShardedStack
     grid: np.ndarray                 # host copy, for alloc unpack
     z_grid: np.ndarray
     names: list[tuple[str, ...]]     # per-cell resource names
@@ -134,8 +145,12 @@ class SESM:
     (many request sets — what-if studies or the cells of one coupled
     deployment — in ONE device program, restack-cached across calls) and
     :meth:`solve_slots` (the device-resident delta fast path over sticky
-    solver-row slots). A configured ``mesh`` routes ``solve_batch``
-    through the sharded metro solve (``core.greedy.solve_greedy_sharded``).
+    solver-row slots). A configured ``mesh`` routes ``solve_batch`` through
+    the sharded metro solve (``core.greedy.solve_greedy_sharded``) and makes
+    :meth:`solve_slots`'s serve session MESH-RESIDENT: a
+    :class:`~repro.core.sfesp.ShardedStack` persisted across ticks, delta
+    scatters addressed through the shard plan, one ``shard_map`` serve per
+    tick (``core.greedy.dispatch_sharded_batch``).
     """
 
     def __init__(self, pool: ResourcePool, sdla: SDLA | None = None,
@@ -173,6 +188,10 @@ class SESM:
         # absorbed as dirty-row delta scatters with the session kept alive
         # (the drift fast path; rows counted on dev.semantic_rows)
         self.semantic_updates = 0
+        # metro telemetry: shard-plan computations (one per sharded-session
+        # build — a coupling-group membership change is the only way to force
+        # a replan once the session is warm; budget/semantic drift must not)
+        self.shard_replans = 0
 
     def slice(self, requests: list[SliceRequest]) -> list[SliceDecision]:
         if not requests:
@@ -300,6 +319,14 @@ class SESM:
         handle (the double-buffered back buffer) — the caller blocks only at
         ``PendingSolve.wait()``, typically after ingesting the next tick's
         events. Decisions are identical either way.
+
+        With a metro ``mesh`` configured the session is MESH-RESIDENT: the
+        same triggers and in-place survivals apply, but the device half is a
+        :class:`~repro.core.sfesp.ShardedStack` (coupling groups shard-planned
+        at build, ``sesm.shard_replans``), the dirty rows scatter through the
+        group-major perm, and the tick dispatches one ``shard_map`` serve
+        (``core.greedy.dispatch_sharded_batch``) — decisions identical to the
+        single-device session and to :meth:`solve_batch`.
         """
         B = len(slot_rows)
         if coupling is not None and coupling.num_cells != B:
@@ -324,6 +351,8 @@ class SESM:
                 or sess.coupling_ref is not coupling
                 or sess.pools_ref is not pools
                 or sess.sem_ref is not model
+                or isinstance(sess.dev, ShardedStack)
+                != (self.mesh is not None)
                 or not np.array_equal(sess.pool_state,
                                       self._pool_state(B, pools))):
             sess = self._serve_session = None
@@ -358,18 +387,24 @@ class SESM:
                 return out if wait else PendingSolve.ready(out)
             self.restacks += 1
         self._sync_rows(sess, slot_rows)
-        dispatched = dispatch_device_batch(sess.dev, flexible=flexible,
-                                           inner=self.inner)
+        if isinstance(sess.dev, ShardedStack):
+            dispatched = dispatch_sharded_batch(sess.dev, flexible=flexible,
+                                                inner=self.inner)
+            block = unpack_sharded_batch
+        else:
+            dispatched = dispatch_device_batch(sess.dev, flexible=flexible,
+                                               inner=self.inner)
+            block = unpack_device_batch
         unpack = self._slot_unpacker(sess, slot_rows, out)
         if wait:
-            return unpack(unpack_device_batch(dispatched))
-        return PendingSolve(lambda: unpack(unpack_device_batch(dispatched)))
+            return unpack(block(dispatched))
+        return PendingSolve(lambda: unpack(block(dispatched)))
 
     def ready_solve(self, request_sets, coupling=None,
                     pools=None) -> PendingSolve:
         """:meth:`solve_batch` wrapped as an already-resolved
-        :class:`PendingSolve` — the dispatch-shaped front door for paths that
-        solve host-blocking (metro-mode sharded rebuilds)."""
+        :class:`PendingSolve` — the dispatch-shaped front door for paths
+        that solve host-blocking (what-if studies, rebuild comparisons)."""
         return PendingSolve.ready(self.solve_batch(
             request_sets, coupling=coupling, pools=pools))
 
@@ -396,8 +431,18 @@ class SESM:
         tmax = next_pow2(max([len(rows) for rows in slot_rows] + [1]))
         price = np.stack([p.price for p in cell_pools])
         cap = np.stack([p.capacity for p in cell_pools])
-        dev = empty_device_stack(grid, price, cap, tmax, coupling=coupling,
-                                 semantic=bool(self.algorithm["semantic"]))
+        if self.mesh is not None:
+            # metro mode: the session lives ON the mesh — coupling groups are
+            # shard-planned here, once; every later tick is delta scatters
+            # through that plan plus one shard_map serve
+            dev = empty_sharded_stack(
+                grid, price, cap, tmax, self.mesh, coupling=coupling,
+                semantic=bool(self.algorithm["semantic"]))
+            self.shard_replans += 1
+        else:
+            dev = empty_device_stack(
+                grid, price, cap, tmax, coupling=coupling,
+                semantic=bool(self.algorithm["semantic"]))
         return _ServeSession(
             dev=dev, grid=grid, z_grid=default_z_grid(),
             names=[p.names for p in cell_pools],

@@ -44,12 +44,17 @@ Cache lifecycle (what persists across ticks, and what invalidates it):
   session rebuilds when the batch size / Tmax bucket / algorithm / coupling
   / pools identity / SDLA latency scale changes.
 
-With a device ``mesh`` configured the engine is in METRO mode: every
-re-slice routes through the full-rebuild path and
-``core.greedy.solve_greedy_sharded`` splits the coupled solve's batch axis
-over the mesh (one block of coupling groups per device). The delta fast
-path stays single-device — its scatter targets one ``DeviceStack`` — so
-metro mode trades the per-tick delta upload for solve parallelism.
+With a device ``mesh`` configured the engine is in METRO mode: the serve
+session itself is MESH-RESIDENT (`repro.core.sfesp.ShardedStack`) — the
+coupling groups are shard-planned once when the session builds, each tick's
+dirty slots scatter through the group-major perm
+(``ShardedStack.update_rows``), and the re-slice solves as ONE ``shard_map``
+program with per-shard packed decision extraction
+(``core.greedy.dispatch_sharded_batch``). No host restack after tick 0:
+the same delta fast path as the single-device engine, with the solve split
+one-block-of-coupling-groups-per-device. The full-rebuild reference path
+(:meth:`MultiCellEngine.reslice_rebuild`) still routes through
+``core.greedy.solve_greedy_sharded`` on a mesh and stays bit-identical.
 
 FAULT PLANE. The engine degrades gracefully instead of assuming healthy
 topologies:
@@ -558,10 +563,11 @@ class MultiCellEngine:
         :meth:`reslice_rebuild` path; ``sesm.fresh_stacks``/``restacks``/
         ``delta_rows`` expose the session-cache health.
 
-        In metro mode (a ``mesh`` was configured) the solve routes through
-        the full-rebuild path: the delta fast path's scatter targets one
-        single-device ``DeviceStack``, while the mesh solves the rebuilt
-        batch sharded — same decisions, different residency trade-off."""
+        In metro mode (a ``mesh`` was configured) the session is
+        mesh-resident: the same dirty-slot deltas scatter into a
+        ``ShardedStack`` through the shard plan and the solve runs as one
+        ``shard_map`` program — same decisions, and the 256-cell tick keeps
+        ``session_rebuilds == 0`` with zero restacks in steady state."""
         return self.reslice_commit(self.reslice_dispatch())
 
     def reslice_dispatch(self):
@@ -580,12 +586,6 @@ class MultiCellEngine:
         departed meanwhile are dropped as stale at commit.
         """
         self._pre_reslice()
-        if self.sesm.mesh is not None:
-            # metro mode solves host-blocking through the sharded rebuild
-            # path — dispatch degrades to an already-resolved handle
-            return self.sesm.ready_solve(self.gather(),
-                                         coupling=self.coupling,
-                                         pools=self.pools)
         rows, dirty = [], []
         for cell in self.cells:
             r, d = cell.sync_slots(consume=True)
@@ -615,8 +615,9 @@ class MultiCellEngine:
         task (greater tier number) kept running in its coupling group, one
         victim is preempted — lowest priority first, newest arrival first
         within a tier, then by cell index — and the freed rows re-solve as
-        an ordinary dirty-row delta on the live device session (metro mode
-        re-solves the filtered gather sets sharded). Victims pay the
+        an ordinary dirty-row delta on the live device session (in metro
+        mode that session is mesh-resident and the re-solve is sharded).
+        Victims pay the
         standard eviction price (one retry consumed, pin cleared, re-queued
         or dropped; ``CellRuntime.preempt``); a surviving victim's row is
         hidden from the re-solve only — its slot re-dirties afterwards, so
@@ -669,28 +670,18 @@ class MultiCellEngine:
             slot = cell._slot_of[rid]
             if cell.preempt(rid):
                 hidden[c].append(slot)
-        if self.sesm.mesh is not None:
-            sets = []
-            for c, cell in enumerate(self.cells):
-                rows, _ = cell.sync_slots()
-                hide = set(hidden[c])
-                sets.append([r for s, r in enumerate(rows)
-                             if r is not None and s not in hide])
-            redo = self.sesm.ready_solve(sets, coupling=self.coupling,
-                                         pools=self.pools)
-        else:
-            rows2, dirty2 = [], []
-            for c, cell in enumerate(self.cells):
-                r, d = cell.sync_slots(consume=True)
-                r = list(r)
-                for s in hidden[c]:
-                    r[s] = None
-                    d.append(s)
-                rows2.append(r)
-                dirty2.append(sorted(set(d)))
-            redo = self.sesm.solve_slots(rows2, dirty2,
-                                         coupling=self.coupling,
-                                         pools=self.pools, wait=False)
+        rows2, dirty2 = [], []
+        for c, cell in enumerate(self.cells):
+            r, d = cell.sync_slots(consume=True)
+            r = list(r)
+            for s in hidden[c]:
+                r[s] = None
+                d.append(s)
+            rows2.append(r)
+            dirty2.append(sorted(set(d)))
+        redo = self.sesm.solve_slots(rows2, dirty2,
+                                     coupling=self.coupling,
+                                     pools=self.pools, wait=False)
         decisions2 = redo.wait()
         # surviving victims re-offer NEXT tick: re-dirty the hidden slots so
         # the next consuming sync rescatters the real rows

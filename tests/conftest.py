@@ -1,7 +1,69 @@
+import os
+import subprocess
+import sys
+import textwrap
+
 import numpy as np
 import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)
+
+
+def _run_with_fake_devices(n: int, body: str) -> str:
+    """Run ``body`` in a subprocess with ``n`` fake host devices.
+
+    XLA's platform device count is burned in at first import, so multi-device
+    CPU tests need a fresh interpreter with ``XLA_FLAGS`` set up front. The
+    prologue imports the common solver surface and binds ``mesh`` (a 1-D
+    "cells" mesh over all ``n`` devices); ``body`` is dedented source
+    appended after it. Asserts a zero exit and returns the stdout.
+    """
+    prog = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = \\
+            "--xla_force_host_platform_device_count={n}"
+        import jax, numpy as np
+        from repro.core import (scenarios, solve_coupled_ref,
+                                solve_greedy_batch, solve_greedy_sharded,
+                                stack_instances)
+        from repro.core.sfesp import device_stack_sharded
+        from repro.launch.mesh import make_cells_mesh
+        assert len(jax.devices()) == {n}
+        mesh = make_cells_mesh()
+    """) + textwrap.dedent(body)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    r = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                       text=True, env=env, timeout=600)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    return r.stdout
+
+
+@pytest.fixture
+def run_with_fake_devices():
+    """``run_with_fake_devices(n, body)``: the consolidated 8-fake-device
+    subprocess harness (see :func:`_run_with_fake_devices`).
+
+    Teardown drops the mesh-keyed shard_map program caches in THIS process
+    too (``core.greedy.clear_sharded_caches``): tests that mix subprocess
+    runs with in-process meshes must not let ``Mesh`` cache keys accumulate
+    across the suite.
+    """
+    yield _run_with_fake_devices
+    from repro.core.greedy import clear_sharded_caches
+    clear_sharded_caches()
+
+
+@pytest.fixture
+def cells_mesh():
+    """An in-process 1-D "cells" mesh over the visible devices, with the
+    same sharded-cache teardown as ``run_with_fake_devices``."""
+    from repro.launch.mesh import make_cells_mesh
+    yield make_cells_mesh()
+    from repro.core.greedy import clear_sharded_caches
+    clear_sharded_caches()

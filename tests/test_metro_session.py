@@ -1,0 +1,337 @@
+"""Mesh-resident serving session: the metro-scale delta fast path.
+
+Fast half (the visible 1-device mesh): a ``ShardedStack`` built empty and
+filled by perm-addressed delta scatters serves bit-identically to the
+single-device ``DeviceStack``; a metro ``MultiCellEngine`` twin tracks the
+meshless engine, the sharded rebuild path and the coupled oracle
+decision-for-decision through churn, an outage and budget + semantic drift;
+and the shard-plan invalidation contract holds (membership change → exactly
+one replan + rebuild, budget/semantic drift → in-place scatters). Slow half:
+the same twin-engine run on 8 fake devices (the REAL shard_map path), plus
+the 1024-cell metro trace scale-up.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (CouplingSpec, empty_device_stack,
+                        empty_sharded_stack, scenarios, solve_coupled_ref,
+                        solve_device_batch, solve_sharded_batch)
+from repro.core.sfesp import _solver_tables, next_pow2, stack_instances
+from repro.serving import MultiCellEngine, SliceRequest
+from repro.serving.admission import SESM
+from repro.serving.sdla import SDLA
+
+
+def _req(app, acc=0.30, lat=0.7, fps=5.0):
+    return SliceRequest("object-recognition", "yolox", app,
+                        max_latency_s=lat, min_accuracy=acc,
+                        jobs_per_sec=fps)
+
+
+def _submit_mix(eng, cell):
+    eng.submit(_req("coco_bags", acc=0.35, fps=8.0), cell)
+    eng.submit(_req("coco_animals", acc=0.50, fps=6.0), cell)
+    eng.submit(_req("cityscapes_flat", acc=0.35, fps=5.0), cell)
+
+
+def _metro_spec(n_cells=4):
+    # two shared links, two coupling groups of n_cells/2 cells each
+    half = n_cells // 2
+    inc = np.zeros((n_cells, 2), bool)
+    inc[:half, 0] = True
+    inc[half:, 1] = True
+    return CouplingSpec(np.array([1.0, 1.2]), inc)
+
+
+# ---------------------------------------------------------- sharded stack
+def test_empty_sharded_stack_scatter_matches_device_stack(cells_mesh):
+    """An empty ShardedStack filled by perm-addressed delta scatters solves
+    (fused sharded serve) bit-identically to the single-device DeviceStack
+    fed the same rows — including budget updates and row clears."""
+    insts, _ = scenarios.multi_cell_trace(6, 2, seed=3, shared_backhaul=6.0)
+    stacked = stack_instances(
+        insts, tmax=next_pow2(max(i.num_tasks for i in insts)))
+    spec = stacked.coupling
+    shd = empty_sharded_stack(stacked.grid, stacked.price, stacked.capacity,
+                              stacked.max_tasks, cells_mesh, coupling=spec)
+    dev = empty_device_stack(stacked.grid, stacked.price, stacked.capacity,
+                             stacked.max_tasks, coupling=spec)
+    lat_ok, alive0, load = _solver_tables(stacked, True)
+    bb, tt = np.nonzero(stacked.task_mask)
+
+    def both(fn):
+        fn(shd)
+        fn(dev)
+        a, b = solve_sharded_batch(shd), solve_device_batch(dev)
+        assert np.array_equal(a["admitted"], b["admitted"])
+        adm = a["admitted"]
+        assert np.array_equal(a["alloc_idx"][adm], b["alloc_idx"][adm])
+        assert np.allclose(a["residual"], b["residual"])
+        assert np.allclose(a["link_used"], b["link_used"])
+        return a
+
+    a = both(lambda s: s.update_rows(bb, tt, lat_ok[bb, tt], alive0[bb, tt],
+                                     load[bb, tt]))
+    assert a["admitted"].any()
+    assert shd.scatter_calls == 1 and shd.rows_scattered == len(bb)
+    # departure churn: clear a few rows (scatter of never-alive defaults)
+    A = stacked.grid.shape[0]
+    both(lambda s: s.update_rows(
+        np.array([0, 3, 5]), np.zeros(3, np.int32),
+        np.zeros((3, A), bool), np.zeros(3, bool), np.zeros(3)))
+    # budget-only degradation: one (L,) refresh, no replan
+    both(lambda s: s.update_link_budgets(
+        np.asarray(spec.link_capacity) * 0.5))
+    assert shd.budget_updates == 1
+    # drift accounting rides the same scatter
+    shd.update_semantics(bb[:2], tt[:2], lat_ok[bb[:2], tt[:2]],
+                         alive0[bb[:2], tt[:2]], load[bb[:2], tt[:2]])
+    assert shd.semantic_updates == 1 and shd.semantic_rows == 2
+
+
+def test_sharded_stack_update_guards(cells_mesh):
+    """Bucket overflow and off-range cell indices raise exactly as the
+    single-device surface does (no silent mode='drop' swallowing)."""
+    spec = _metro_spec(4)
+    pools = scenarios.multi_cell_pools(4, seed=2)
+    grid = SDLA().build_instance([_req("coco_bags")], pools[0]).grid
+    price = np.stack([p.price for p in pools])
+    cap = np.stack([p.capacity for p in pools])
+    shd = empty_sharded_stack(grid, price, cap, 4, cells_mesh, coupling=spec)
+    A = grid.shape[0]
+    row = (np.zeros((1, A), bool), np.zeros(1, bool), np.zeros(1))
+    with pytest.raises(ValueError, match="larger"):
+        shd.update_rows(np.array([0]), np.array([4]), *row)
+    with pytest.raises(ValueError, match="outside"):
+        shd.update_rows(np.array([4]), np.array([0]), *row)
+    with pytest.raises(ValueError, match="topology"):
+        shd.update_link_budgets(np.ones(3))
+    # round-trip address translation: every stacked row is reachable
+    assert sorted(shd.row_of[shd.padded_of]) == list(range(4))
+
+
+# ------------------------------------------------------------ twin engines
+def _build_engine(mesh, preempt=False):
+    pools = scenarios.multi_cell_pools(4, seed=2)
+    spec = _metro_spec(4)
+    eng = MultiCellEngine(pools, coupling=spec, max_retries=3, mesh=mesh,
+                          preempt=preempt)
+    for c in range(4):
+        _submit_mix(eng, c)
+    return eng, pools, spec
+
+
+def _oracle_admissions(eng, pools, spec):
+    sets = eng.gather()
+    insts = [dataclasses.replace(
+        eng.sdla.build_instance(rs, pools[i]), coupling=spec.row(i))
+        for i, rs in enumerate(sets)]
+    return [[bool(a) for a in ref.admitted]
+            for ref in solve_coupled_ref(insts)]
+
+
+def test_metro_fastpath_matches_rebuild_and_oracle_1dev(cells_mesh):
+    """Twin engines through churn + outage + budget/semantic drift: the
+    metro fast path (mesh-resident session, 1-device fallback mesh) ==
+    the meshless engine == the sharded rebuild path == the coupled oracle,
+    decision-for-decision on every tick."""
+    metro, pools, spec = _build_engine(cells_mesh)
+    plain, _, _ = _build_engine(None)
+    rebuild, _, _ = _build_engine(cells_mesh)
+
+    def tick(check_oracle=True):
+        oracle = _oracle_admissions(metro, pools, spec) \
+            if check_oracle else None
+        md = metro.reslice()
+        pd = plain.reslice()
+        rd = rebuild.reslice_rebuild()
+        for c, (m_ds, p_ds, r_ds) in enumerate(zip(md, pd, rd)):
+            adm = [d.admitted for d in m_ds]
+            assert adm == [d.admitted for d in p_ds]
+            assert adm == [d.admitted for d in r_ds]
+            assert [d.z for d in m_ds] == [d.z for d in p_ds]
+            if oracle is not None:
+                assert adm == oracle[c]
+
+    tick()
+    # arrival/departure churn (within the Tmax bucket)
+    for eng in (metro, plain, rebuild):
+        eng.submit(_req("coco_person", acc=0.30, fps=4.0), 1)
+    tick()
+    # outage: cell 3's candidates drain into its coupled peer
+    for eng in (metro, plain, rebuild):
+        eng.fail_cell(3)
+    tick()
+    for eng in (metro, plain, rebuild):
+        eng.recover_cell(3)
+    # budget drift rides the in-place (L,) scatter
+    for eng in (metro, plain, rebuild):
+        eng.set_link_budgets(scale=0.6)
+    tick()
+    # semantic drift rides the dirty-row scatter
+    for eng in (metro, plain, rebuild):
+        eng.shift_semantics(scale=0.8)
+    tick()
+    # the metro session absorbed drift in place and is truly mesh-resident
+    assert metro.sesm.link_updates >= 1
+    assert metro.sesm.semantic_updates >= 1
+    assert metro.sesm.shard_replans == metro.sesm.fresh_stacks
+    # churn/outage/drift stayed on the delta path for BOTH fast-path twins
+    assert metro.sesm.session_rebuilds == plain.sesm.session_rebuilds
+
+
+# -------------------------------------------------- shard-plan invalidation
+def test_shard_plan_invalidation(cells_mesh):
+    """Coupling-group MEMBERSHIP change → exactly one replan + rebuild;
+    budget-only and semantics-only drift ride the in-place sharded scatters
+    (``link_updates``/``semantic_updates`` increment, ``session_rebuilds``
+    stays 0, no replan)."""
+    pools = scenarios.multi_cell_pools(4, seed=2)
+    sesm = SESM(pools[0], mesh=cells_mesh)
+    rows = [[_req("coco_bags", acc=0.35, fps=8.0),
+             _req("coco_animals", acc=0.50, fps=6.0)] for _ in range(4)]
+    dirty = [[0, 1] for _ in range(4)]
+    spec_a = _metro_spec(4)                      # groups {0,1} | {2,3}
+
+    d0 = sesm.solve_slots(rows, dirty, coupling=spec_a, pools=pools)
+    assert sesm.shard_replans == 1 and sesm.fresh_stacks == 1
+    assert sesm.session_rebuilds == 0
+
+    # budget-only drift: same coupling object, new VALUES -> one scatter
+    spec_a.set_budgets(spec_a.link_capacity * 0.5)
+    d1 = sesm.solve_slots(rows, [[] for _ in range(4)],
+                          coupling=spec_a, pools=pools)
+    assert sesm.link_updates == 1 and sesm.session_rebuilds == 0
+    assert sesm.shard_replans == 1               # the plan survived
+    assert sum(d.admitted for ds in d1 for d in ds) <= \
+        sum(d.admitted for ds in d0 for d in ds)
+
+    # semantics-only drift: same model object, bumped version -> dirty-row
+    # scatter through the live sharded session
+    sesm.sdla.recalibrate(scale=0.85)
+    sesm.solve_slots(rows, [[] for _ in range(4)],
+                     coupling=spec_a, pools=pools)
+    assert sesm.semantic_updates == 1 and sesm.session_rebuilds == 0
+    assert sesm.shard_replans == 1
+
+    # MEMBERSHIP churn: a different grouping (one shared link) is a new
+    # coupling object -> exactly one replan + rebuild
+    spec_b = CouplingSpec(np.array([2.0]), np.ones((4, 1), bool))
+    d3 = sesm.solve_slots(rows, [[] for _ in range(4)],
+                          coupling=spec_b, pools=pools)
+    assert sesm.session_rebuilds == 1
+    assert sesm.shard_replans == 2 and sesm.fresh_stacks == 2
+    # and the rebuilt plan still solves right: matches the coupled oracle
+    sdla = sesm.sdla
+    insts = [dataclasses.replace(
+        sdla.build_instance(rs, pools[i]), coupling=spec_b.row(i))
+        for i, rs in enumerate(rows)]
+    for ds, ref in zip(d3, solve_coupled_ref(insts)):
+        assert [d.admitted for d in ds] == [bool(a) for a in ref.admitted]
+
+
+# ------------------------------------------------- real mesh (subprocess)
+@pytest.mark.slow
+def test_metro_session_8dev_churn_outage_drift(run_with_fake_devices):
+    """The mesh-resident session on a REAL 8-device shard_map: twin engines
+    through churn + outage + budget/semantic drift, decisions ==
+    the meshless engine == the rebuild path, with session_rebuilds == 0 and
+    one shard plan for the whole run."""
+    run_with_fake_devices(8, """
+        from repro.core import CouplingSpec
+        from repro.serving import MultiCellEngine, SliceRequest
+
+        def req(app, acc=0.30, fps=5.0):
+            return SliceRequest("object-recognition", "yolox", app,
+                                max_latency_s=0.7, min_accuracy=acc,
+                                jobs_per_sec=fps)
+
+        def build(mesh):
+            pools = scenarios.multi_cell_pools(16, seed=2)
+            inc = np.zeros((16, 4), bool)
+            for c in range(16):
+                inc[c, c // 4] = True
+            spec = CouplingSpec(np.array([1.0, 1.2, 0.9, 1.5]), inc)
+            eng = MultiCellEngine(pools, coupling=spec, max_retries=3,
+                                  mesh=mesh)
+            for c in range(16):
+                eng.submit(req("coco_bags", 0.35, 8.0), c)
+                eng.submit(req("coco_animals", 0.50, 6.0), c)
+            return eng
+
+        metro, plain = build(mesh), build(None)
+
+        def tick():
+            for m_ds, p_ds in zip(metro.reslice(), plain.reslice()):
+                assert [d.admitted for d in m_ds] == \\
+                    [d.admitted for d in p_ds]
+                assert [d.z for d in m_ds] == [d.z for d in p_ds]
+
+        tick()
+        for eng in (metro, plain):
+            eng.submit(req("coco_person"), 5)
+        tick()
+        for eng in (metro, plain):
+            eng.fail_cell(9)
+        tick()
+        for eng in (metro, plain):
+            eng.recover_cell(9)
+            eng.set_link_budgets(scale=0.6)
+        tick()
+        for eng in (metro, plain):
+            eng.shift_semantics(scale=0.8)
+        tick()
+        from repro.serving.admission import _ServeSession  # noqa: F401
+        from repro.core.sfesp import ShardedStack
+        sess = metro.sesm._serve_session
+        assert isinstance(sess.dev, ShardedStack)
+        assert sess.dev.num_shards == 8
+        assert metro.sesm.session_rebuilds == plain.sesm.session_rebuilds
+        assert metro.sesm.shard_replans == metro.sesm.fresh_stacks
+        assert metro.sesm.link_updates >= 1
+        assert metro.sesm.semantic_updates >= 1
+        print("8dev metro session == meshless engine through faults")
+    """)
+
+
+# ---------------------------------------------------------- 1024-cell trace
+@pytest.mark.slow
+def test_metro_trace_scales_to_1024_cells():
+    """Satellite of the ROADMAP 1024-cell target: the diurnal trace
+    parameterizes up to 1024 cells / 64 domains, group structure and link
+    indexing hold at scale, and a sampled domain still bit-matches the
+    coupled oracle through the sharded front door."""
+    from repro.core import solve_greedy_sharded
+    insts, meta = scenarios.metro_diurnal_trace(
+        n_cells=1024, n_domains=64, hours=(13,), seed=0)
+    assert len(insts) == 1024 and len(meta) == 1024
+    assert all(m["domain"] == m["cell"] * 64 // 1024 for m in meta)
+    assert all(m["link"] == m["domain"] for m in meta)
+    st = stack_instances(insts, group_major=True)
+    assert st.num_groups == 64
+    sols = solve_greedy_sharded(insts)
+    for d in (0, 31, 63):                        # sampled domains
+        idxs = [i for i, m in enumerate(meta) if m["domain"] == d]
+        assert len(idxs) == 16
+        refs = solve_coupled_ref([insts[i] for i in idxs])
+        for i, ref in zip(idxs, refs):
+            assert np.array_equal(sols[i].admitted, ref.admitted)
+
+
+def test_metro_trace_longer_horizons():
+    """``days=`` extends the horizon past 24 h: per-step links stay unique
+    and the diurnal curve repeats across days."""
+    insts, meta = scenarios.metro_diurnal_trace(
+        n_cells=8, n_domains=2, days=2, hours=None, seed=3)
+    steps = sorted({m["step"] for m in meta})
+    assert steps == list(range(48))
+    assert all(m["hour"] == m["step"] for m in meta)
+    assert all(m["link"] == m["step"] * 2 + m["domain"] for m in meta)
+    # hour 13 of day 1 and day 2 carry comparable (peak) traffic
+    def tasks_at(step):
+        return sum(insts[i].num_tasks for i, m in enumerate(meta)
+                   if m["step"] == step)
+    assert tasks_at(13) > tasks_at(3)
+    assert tasks_at(37) > tasks_at(27)

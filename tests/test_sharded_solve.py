@@ -6,13 +6,9 @@ Fast half (single device): the group-major permutation is a pure relabeling
 one device IS ``solve_greedy_batch`` (the acceptance fallback), and the
 shard planner never splits a coupling group. Slow half: subprocesses with 8
 fake host devices run the REAL shard_map path and the metro serving engine,
-asserting decisions against the single-device solve and the coupled oracle.
+asserting decisions against the single-device solve and the coupled oracle
+(subprocess harness consolidated in conftest's ``run_with_fake_devices``).
 """
-import os
-import subprocess
-import sys
-import textwrap
-
 import numpy as np
 import pytest
 
@@ -20,8 +16,6 @@ from repro.core import (scenarios, solve_coupled_ref, solve_greedy_batch,
                         solve_greedy_sharded, stack_instances)
 from repro.core.sfesp import (group_major_order, group_offsets_of, restack,
                               shard_plan)
-
-ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def _trace(n_cells=4, horizon=3, seed=11, backhaul=2.0):
@@ -135,32 +129,11 @@ def test_metro_trace_matches_coupled_oracle_per_domain():
 
 
 # ------------------------------------------------- real mesh (subprocess)
-def _run(body: str):
-    prog = textwrap.dedent("""
-        import os
-        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-        import jax, numpy as np
-        from repro.core import (scenarios, solve_coupled_ref,
-                                solve_greedy_batch, solve_greedy_sharded,
-                                stack_instances)
-        from repro.core.sfesp import device_stack_sharded
-        from repro.launch.mesh import make_cells_mesh
-        assert len(jax.devices()) == 8
-        mesh = make_cells_mesh()
-    """) + textwrap.dedent(body)
-    env = dict(os.environ)
-    env["PYTHONPATH"] = os.path.join(ROOT, "src")
-    r = subprocess.run([sys.executable, "-c", prog], capture_output=True,
-                       text=True, env=env, timeout=600)
-    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
-    return r.stdout
-
-
 @pytest.mark.slow
-def test_sharded_solve_matches_batch_on_8_devices():
+def test_sharded_solve_matches_batch_on_8_devices(run_with_fake_devices):
     """The shard_map path (8 fake devices, uneven group counts, both
     inners) bit-matches the single-device batched solve."""
-    _run("""
+    run_with_fake_devices(8, """
         cases = [
             (8, dict(seed=11, shared_backhaul=2.0)),  # 8 groups of 4
             (3, dict(seed=2, shared_backhaul=1.5)),   # 3 groups on 8 devs
@@ -186,11 +159,11 @@ def test_sharded_solve_matches_batch_on_8_devices():
 
 
 @pytest.mark.slow
-def test_metro_serving_engine_mesh_routing():
+def test_metro_serving_engine_mesh_routing(run_with_fake_devices):
     """MultiCellEngine(mesh=...) re-slices through the sharded solve with
     decisions identical to the meshless engine, and still bit-matches the
     coupled oracle on the gathered instances."""
-    _run("""
+    run_with_fake_devices(8, """
         import dataclasses
         from repro.core import CouplingSpec
         from repro.serving import MultiCellEngine, SliceRequest
@@ -218,7 +191,7 @@ def test_metro_serving_engine_mesh_routing():
             metro.sdla.build_instance(rs, pools[i]), coupling=spec.row(i))
             for i, rs in enumerate(sets)]
         oracle = solve_coupled_ref(insts)
-        md = metro.reslice()            # metro mode -> reslice_rebuild
+        md = metro.reslice()            # metro mode -> mesh-resident session
         rd = ref_eng.reslice()
         for cell, (m_ds, r_ds, ref) in enumerate(zip(md, rd, oracle)):
             assert [d.admitted for d in m_ds] == [d.admitted for d in r_ds]
